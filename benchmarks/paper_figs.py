@@ -1,0 +1,261 @@
+"""One benchmark per paper table/figure (§6 evaluation).
+
+Each function returns a list of CSV rows ``name,value,derived`` and is
+invoked by ``benchmarks.run``.  Values reproduce the paper's tables in
+simulation exactly as the paper does for its own §6.3–6.5 results.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import wan
+from repro.core.bubbletea import (
+    BubbleTeaController,
+    InferenceModelSpec,
+    PrefillLatencyModel,
+    PrefillRequest,
+    utilization_with_prefills,
+)
+from repro.core.dc_selection import JobModel, algorithm1, best_plan
+from repro.core.simulator import GeoTopology, PipelineSpec, dp_iteration_ms, simulate
+from repro.core.simulator import testbed_spec
+
+Row = Tuple[str, float, str]
+
+GPT_A = dict(hidden=4096, seq_len=4096, micro_batch=1, layers_per_stage=1, layer_params=412e6)
+GPT_B = dict(hidden=8192, seq_len=6144, micro_batch=1, layers_per_stage=1, layer_params=1.2e9)
+
+
+def table1_tcp() -> List[Row]:
+    """Paper Table 1: single-TCP bandwidth vs WAN latency."""
+    rows = []
+    for lat, paper_mbps in wan.PAPER_TABLE1.items():
+        got = wan.tcp_single_bw_gbps(lat) * 1e3
+        rows.append((f"table1/single_tcp_mbps@{lat}ms", round(got, 1),
+                     f"paper={paper_mbps}"))
+    return rows
+
+
+def fig2_dp_slowdown() -> List[Row]:
+    """Fig 2: DP slowdown vs same-DC baseline (single TCP), GPT-A/B on 6 GPUs."""
+    rows = []
+    for name, model, layers in (("gpt_a", GPT_A, 6), ("gpt_b", GPT_B, 6)):
+        params = layers * model["layer_params"]
+        tokens = model["seq_len"]
+        comp_ms = 6 * params * tokens / 312e12 * 1e3
+        base = dp_iteration_ms(comp_ms, params * 2, 6, 0, intra_dc=True)
+        for lat in (10, 20, 30, 40):
+            t = dp_iteration_ms(comp_ms, params * 2, 6, lat, multi_tcp=False)
+            rows.append((f"fig2/dp_slowdown_{name}@{lat}ms", round(t / base, 1), "x"))
+    return rows
+
+
+def fig3_pp_slowdown() -> List[Row]:
+    """Fig 3: PP slowdown vs same-DC baseline (single TCP), 6 stages, 3 DCs."""
+    rows = []
+    for name, model in (("gpt_a", GPT_A), ("gpt_b", GPT_B)):
+        spec = testbed_spec(**model, num_stages=6, microbatches=4,
+                            stage_dc=[0, 0, 1, 1, 2, 2])
+        spec0 = PipelineSpec(**{**spec.__dict__, "stage_dc": (0,) * 6})
+        base = simulate(spec0, GeoTopology(wan_latency_ms=0, multi_tcp=True),
+                        policy="varuna").iteration_ms
+        for lat in (10, 20, 30, 40):
+            t = simulate(spec, GeoTopology(wan_latency_ms=lat, multi_tcp=False),
+                         policy="varuna").iteration_ms
+            rows.append((f"fig3/pp_slowdown_{name}@{lat}ms", round(t / base, 1), "x"))
+    return rows
+
+
+def fig5_multitcp() -> List[Row]:
+    """Fig 5: single vs multi TCP bandwidth across DC distances."""
+    rows = []
+    for city, lat in (("us-east", 2), ("us-sc", 16), ("us-west", 34), ("asia", 95)):
+        single = wan.tcp_single_bw_gbps(lat)
+        multi = wan.tcp_multi_bw_gbps(lat, wan.connections_for_cap(lat))
+        rows.append((f"fig5/single_gbps@{city}", round(single, 2), f"{lat}ms"))
+        rows.append((f"fig5/multi_gbps@{city}", round(multi, 2),
+                     f"n={wan.connections_for_cap(lat)}"))
+    return rows
+
+
+def _testbed(model, M):
+    # paper §6.1: 12 GPUs = 3 DP x 4 PP over 3 DCs
+    return testbed_spec(**model, num_stages=4, microbatches=M, stage_dc=[0, 0, 1, 2])
+
+
+def fig9_atlas_speedup() -> List[Row]:
+    """Fig 9: Atlas vs single-TCP GPipe/Megatron/Varuna."""
+    rows = []
+    for name, model in (("gpt_a", GPT_A), ("gpt_b", GPT_B)):
+        for M in (4, 16):
+            for lat in (10, 20, 30, 40):
+                spec = _testbed(model, M)
+                tb = GeoTopology(wan_latency_ms=lat, multi_tcp=False)
+                ta = GeoTopology(wan_latency_ms=lat, multi_tcp=True)
+                at = simulate(spec, ta, policy="atlas", n_pipelines=3).iteration_ms
+                for pol in ("gpipe", "megatron", "varuna"):
+                    b = simulate(spec, tb, policy=pol).iteration_ms
+                    rows.append(
+                        (f"fig9/{pol}_over_atlas_{name}_M{M}@{lat}ms",
+                         round(b / at, 1), "x")
+                    )
+    return rows
+
+
+def fig10_temporal() -> List[Row]:
+    """Fig 10: everyone gets multi-TCP; isolates temporal sharing."""
+    rows = []
+    for name, model in (("gpt_a", GPT_A), ("gpt_b", GPT_B)):
+        for M in (4, 16):
+            spec = _testbed(model, M)
+            t = GeoTopology(wan_latency_ms=40, multi_tcp=True)
+            at = simulate(spec, t, policy="atlas", n_pipelines=3).iteration_ms
+            for pol in ("gpipe", "megatron", "varuna"):
+                b = simulate(spec, t, policy=pol).iteration_ms
+                rows.append((f"fig10/{pol}_over_atlas_{name}_M{M}", round(b / at, 2), "x"))
+    return rows
+
+
+def _spec_C(C, P=60, M=60, n_dcs=5):
+    t_f = 10.0
+    act = C * t_f * 1e-3 * wan.NODE_PAIR_CAP_GBPS * 1e9 / 8.0
+    per = P // n_dcs
+    stage_dc = sum([[d] * per for d in range(n_dcs)], [])
+    return PipelineSpec(num_stages=P, microbatches=M, t_fwd_ms=t_f,
+                        act_bytes=act, stage_dc=tuple(stage_dc))
+
+
+def fig11_scaling() -> List[Row]:
+    """Fig 11: throughput scaling with DC count (DC-set-1, C=4/2)."""
+    rows = []
+    topo = GeoTopology(wan_latency_ms=40, multi_tcp=True)
+    for C in (4, 2):
+        thr1 = None
+        for n_dcs in (1, 2, 3, 4, 5):
+            # 600 GPUs per DC; pipelines = 600·n/60; Atlas groups C per cell
+            sp = _spec_C(C, n_dcs=n_dcs)
+            at = simulate(sp, topo, policy="atlas", n_pipelines=C)
+            va = simulate(sp, topo, policy="varuna", n_pipelines=1)
+            cells = 600 * n_dcs // (60 * C)
+            # per-GPU-normalized throughput (atlas cells quantize GPU use
+            # to D·C·P; compare equal-GPU efficiency, as the paper does)
+            thr_at = cells * C / at.iteration_ms / (cells * C * 60)
+            thr_va = (600 * n_dcs // 60) / va.iteration_ms / (600 * n_dcs)
+            if thr1 is None:
+                thr1 = thr_at
+            rows.append((f"fig11/atlas_thr_C{C}_{n_dcs}dc",
+                         round(thr_at * n_dcs / thr1, 2), "x vs 1 DC (equal GPUs)"))
+            rows.append((f"fig11/atlas_over_varuna_C{C}_{n_dcs}dc",
+                         round((thr_at / thr_va - 1) * 100, 1), "% per-GPU"))
+    return rows
+
+
+def fig12_balancing() -> List[Row]:
+    """Fig 12: Algorithm 1 GPU balancing across 2 DCs (C=2)."""
+    job = JobModel(
+        t_fwd_ms=10.0,
+        act_bytes=2 * 10e-3 * wan.NODE_PAIR_CAP_GBPS * 1e9 / 8,
+        partition_param_bytes=800e6 * 2,
+        microbatches=60,
+    )
+    base = best_plan(algorithm1(job, {"dc1": 600}, P=60, C=2)).throughput
+    rows = []
+    for F in range(0, 11):
+        b = best_plan(algorithm1(job, {"dc1": 600, "dc2": 60 * F}, P=60, C=2))
+        rows.append((f"fig12/thr_gain_F{F*10}pct", round(b.throughput / base, 2),
+                     f"D={b.D} gpus={b.gpus_used}"))
+    return rows
+
+
+def fig13_bubbletea() -> List[Row]:
+    """Fig 13: GPU utilization, Atlas alone vs Atlas+BubbleTea."""
+    spec = _testbed(GPT_B, 16)
+    res = simulate(spec, GeoTopology(wan_latency_ms=40, multi_tcp=True),
+                   policy="atlas", n_pipelines=3)
+    lm = PrefillLatencyModel(InferenceModelSpec("llama3-8b", 8e9))
+    ctrl = BubbleTeaController([list(res.bubbles[g]) for g in sorted(res.bubbles)], lm)
+    rng = np.random.default_rng(0)
+    t = 0.0
+    while t < res.iteration_ms:
+        t += rng.exponential(1.0)
+        ctrl.submit(PrefillRequest(int(t * 1e3), t,
+                                   int(rng.choice([128, 256, 512, 1024, 2048],
+                                                  p=[0.3, 0.25, 0.2, 0.15, 0.1]))))
+    busy = sum(iv.end - iv.start for ivs in res.busy.values() for iv in ivs)
+    total = res.iteration_ms * len(res.busy)
+    after = utilization_with_prefills(busy, total, ctrl)
+    return [
+        ("fig13/util_atlas_only_pct", round(res.utilization * 100, 1), "paper≈45"),
+        ("fig13/util_with_bubbletea_pct", round(after * 100, 1), "paper≈94"),
+        ("fig13/prefills_placed", float(len(ctrl.placements)), ""),
+        ("fig13/placement_search_us_p50",
+         round(float(np.percentile(ctrl.search_time_us, 50)), 1), "paper<200us"),
+    ]
+
+
+def fig14_ttft() -> List[Row]:
+    """Fig 14: TTFT vs PP degree for Llama3-8B prefills."""
+    lm = PrefillLatencyModel(InferenceModelSpec("llama3-8b", 8e9))
+    rows = []
+    for L in (512, 1024, 2048, 4096, 8192):
+        for p in (1, 2, 4, 8):
+            rows.append((f"fig14/ttft_ms_len{L}_pp{p}", round(lm.ttft_ms(L, p), 1), ""))
+    rows.append(("fig14/pp8_inflation_512_pct",
+                 round((lm.ttft_ms(512, 8) / lm.ttft_ms(512, 1) - 1) * 100, 1),
+                 "paper=29"))
+    rows.append(("fig14/pp1_excess_8k_pct",
+                 round((lm.ttft_ms(8192, 1) / lm.ttft_ms(8192, 8) - 1) * 100, 1),
+                 "paper=67"))
+    return rows
+
+
+def fig7_bandwidth_stability() -> List[Row]:
+    """Fig 7: 24-h WAN bandwidth fluctuation (CoV) — longer paths steadier."""
+    rows = []
+    for name, lat, paper_cov in (("us-east<->us-west", 34, 2.3),
+                                 ("us-east<->se-asia", 95, 0.8)):
+        tr = wan.bandwidth_trace_gbps(lat)
+        rows.append((f"fig7/cov_pct_{name}", round(wan.trace_cov(tr) * 100, 2),
+                     f"paper={paper_cov}"))
+    return rows
+
+
+def sec67_compression() -> List[Row]:
+    """§6.7: semantics-altering activation compression — the paper's
+    negative result.  Compression cuts WAN bytes 4× but needs ~2× compute
+    to reach the same loss; net slower than Atlas's semantics-preserving
+    transport once multi-TCP removes the bandwidth cliff."""
+    rows = []
+    spec = _testbed(GPT_B, 16)
+    t = GeoTopology(wan_latency_ms=40, multi_tcp=True)
+    atlas = simulate(spec, t, policy="atlas", n_pipelines=3).iteration_ms
+    comp_spec = PipelineSpec(**{
+        **spec.__dict__,
+        "act_bytes": spec.act_bytes * wan.COMPRESSION_RATIO,
+        "t_fwd_ms": spec.t_fwd_ms * wan.COMPRESSION_COMPUTE_MULT,
+    })
+    comp = simulate(comp_spec, t, policy="varuna").iteration_ms
+    rows.append(("sec67/atlas_iter_ms", round(atlas, 0), "semantics-preserving"))
+    rows.append(("sec67/compressed_iter_ms", round(comp, 0),
+                 "4x less WAN, 2x compute (same-loss)"))
+    rows.append(("sec67/compression_slowdown", round(comp / atlas, 2),
+                 "paper: ~2x slower — rejected"))
+    return rows
+
+
+ALL = [
+    table1_tcp,
+    fig2_dp_slowdown,
+    fig3_pp_slowdown,
+    fig5_multitcp,
+    fig7_bandwidth_stability,
+    fig9_atlas_speedup,
+    fig10_temporal,
+    fig11_scaling,
+    fig12_balancing,
+    fig13_bubbletea,
+    fig14_ttft,
+    sec67_compression,
+]

@@ -1,0 +1,82 @@
+"""Roofline table (deliverable g): reads the dry-run artifacts and emits
+per-(arch × shape × mesh) compute/memory/collective terms, the dominant
+bottleneck, and the MODEL_FLOPS/HLO_FLOPS usefulness ratio.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+ICI per link (see repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_results(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def dominant_term(r: Dict) -> Tuple[str, float]:
+    rf = r["roofline"]
+    terms = {
+        "compute": rf.get("compute_s") or 0.0,
+        "memory": rf.get("memory_s") or 0.0,
+        "collective": rf.get("collective_s") or 0.0,
+    }
+    k = max(terms, key=terms.get)
+    return k, terms[k]
+
+
+def roofline_rows(mesh: Optional[str] = "single", boundary: str = "striped"):
+    rows = []
+    for r in load_results():
+        if r.get("status") != "ok":
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        if r.get("boundary", "striped") != boundary:
+            continue
+        rf = r["roofline"]
+        dom, val = dominant_term(r)
+        name = f"roofline/{r['arch']}_{r['shape']}_{r['mesh']}"
+        rows.append((f"{name}/compute_s", _r(rf["compute_s"]), ""))
+        rows.append((f"{name}/memory_s", _r(rf["memory_s"]), ""))
+        rows.append((f"{name}/collective_s", _r(rf["collective_s"]),
+                     f"dcn={rf['dcn_bytes']/1e6:.1f}MB"))
+        rows.append((f"{name}/dominant", 0.0, f"{dom}={val:.4g}s"))
+        rows.append((f"{name}/useful_flops_ratio", _r(rf["useful_flops_ratio"]), ""))
+    return rows
+
+
+def _r(x, nd=5):
+    return round(x, nd) if isinstance(x, (int, float)) and x == x else float("nan")
+
+
+def markdown_table(mesh: str = "single", boundary: str = "striped") -> str:
+    """EXPERIMENTS.md §Roofline body."""
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | DCN MB | dominant | useful ratio |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_results():
+        if r.get("status") != "ok" or r["mesh"] != mesh:
+            continue
+        if r.get("boundary", "striped") != boundary:
+            continue
+        rf = r["roofline"]
+        dom, _ = dominant_term(r)
+        ur = rf.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4g} | "
+            f"{rf['memory_s']:.4g} | {rf['collective_s']:.4g} | "
+            f"{rf['dcn_bytes']/1e6:.1f} | **{dom}** | "
+            f"{ur:.3g} |" if ur is not None else ""
+        )
+    return "\n".join(l for l in lines if l)

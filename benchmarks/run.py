@@ -1,0 +1,43 @@
+"""Benchmark harness — one function per paper table/figure + the roofline
+table from the dry-run artifacts.  Prints ``name,value,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig9  # one figure
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on benchmark name")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import paper_figs
+
+    print("name,value,derived")
+    for fn in paper_figs.ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.perf_counter()
+        rows = fn()
+        dt_us = (time.perf_counter() - t0) * 1e6
+        for name, value, derived in rows:
+            print(f"{name},{value},{derived}")
+        print(f"_timing/{fn.__name__}_us,{dt_us:.0f},", flush=True)
+
+    if not args.skip_roofline and (args.only is None or "roofline" in args.only):
+        from benchmarks import roofline
+
+        rows = roofline.roofline_rows(mesh=None)
+        if not rows:
+            print("_roofline/missing,0,run repro.launch.dryrun first", flush=True)
+        for name, value, derived in rows:
+            print(f"{name},{value},{derived}")
+
+
+if __name__ == "__main__":
+    main()

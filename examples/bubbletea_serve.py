@@ -1,0 +1,80 @@
+"""BubbleTea prefill-as-a-service demo:
+
+1. Simulate an Atlas training iteration (12 GPUs / 3 DCs) and collect its
+   consolidated bubbles.
+2. Replay a synthetic inference trace through the BubbleTea controller:
+   admission, placement, TTFT, utilization 45% -> ~94% (paper Fig 13).
+3. Run a REAL Splitwise-style prefill/decode split on a reduced model to
+   show the KV-cache handoff.
+
+  PYTHONPATH=src python examples/bubbletea_serve.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.bubbletea import (
+    BubbleTeaController,
+    InferenceModelSpec,
+    PrefillLatencyModel,
+    PrefillRequest,
+    utilization_with_prefills,
+)
+from repro.core.simulator import GeoTopology, simulate, testbed_spec
+from repro.models.transformer import build_model
+from repro.serving.engine import Request, SplitwiseCluster
+
+
+def main():
+    # ---- 1) training bubbles ----
+    spec = testbed_spec(
+        hidden=8192, seq_len=6144, micro_batch=1, layers_per_stage=1,
+        layer_params=1.2e9, num_stages=4, microbatches=16, stage_dc=[0, 0, 1, 2],
+    )
+    res = simulate(spec, GeoTopology(wan_latency_ms=40, multi_tcp=True),
+                   policy="atlas", n_pipelines=3)
+    print(f"[atlas] iter={res.iteration_ms:.0f}ms util={res.utilization:.0%} "
+          f"(bubbles to fill)")
+
+    # ---- 2) prefill-as-a-service ----
+    lm = PrefillLatencyModel(InferenceModelSpec("llama3-8b", 8e9))
+    ctrl = BubbleTeaController(
+        [list(res.bubbles[g]) for g in sorted(res.bubbles)], lm, pp_degree=1
+    )
+    rng = np.random.default_rng(0)
+    t, rid = 0.0, 0
+    while t < res.iteration_ms:
+        t += rng.exponential(1.2)
+        L = int(rng.choice([128, 256, 512, 1024, 2048], p=[0.3, 0.25, 0.2, 0.15, 0.1]))
+        ctrl.submit(PrefillRequest(rid, t, L))
+        rid += 1
+    busy = sum(iv.end - iv.start for ivs in res.busy.values() for iv in ivs)
+    total = res.iteration_ms * len(res.busy)
+    after = utilization_with_prefills(busy, total, ctrl)
+    ttfts = [p.ttft_ms for p in ctrl.placements]
+    print(f"[bubbletea] requests={rid} placed={len(ctrl.placements)} "
+          f"accept={ctrl.acceptance_rate():.0%}")
+    print(f"[bubbletea] utilization {res.utilization:.0%} -> {after:.0%} "
+          f"(paper: 45% -> 94%)")
+    print(f"[bubbletea] TTFT ms p50={np.percentile(ttfts, 50):.0f} "
+          f"p99={np.percentile(ttfts, 99):.0f}; "
+          f"placement search p50={np.percentile(ctrl.search_time_us, 50):.0f}us")
+
+    # ---- 3) real Splitwise handoff on a reduced model ----
+    cfg = get_smoke_config("gpt_a")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cluster = SplitwiseCluster(cfg, params, max_batch=4, max_len=128)
+    reqs = [
+        Request(i, (np.arange(6 + i) * 5 % cfg.vocab_size).astype(np.int32),
+                max_new_tokens=6)
+        for i in range(4)
+    ]
+    done = cluster.serve(reqs)
+    print(f"[splitwise] served {len(done)} requests; "
+          f"KV moved {cluster.kv_bytes_moved/1e6:.1f} MB; "
+          f"sample tokens {done[0].generated}")
+
+
+if __name__ == "__main__":
+    main()

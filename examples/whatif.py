@@ -1,0 +1,46 @@
+"""What-if DC planning (paper §4.5): sweep candidate DC sets and GPU
+counts through Algorithm 1 and print the cost/performance frontier — no
+deployment required.
+
+  PYTHONPATH=src python examples/whatif.py
+"""
+from repro.core import wan
+from repro.core.dc_selection import JobModel, algorithm1, best_plan, what_if
+
+
+def main():
+    # a Llama-70B-ish pretraining job: 80 layers, 875M params/layer
+    job = JobModel(
+        t_fwd_ms=2 * 875e6 * 4096 / 312e12 * 1e3,  # one microbatch, one layer-partition
+        act_bytes=wan.activation_bytes(1, 4096, 8192),
+        partition_param_bytes=875e6 * 2,
+        microbatches=64,
+    )
+    print(f"comm/compute ratio C = {job.comm_compute_ratio:.1f}")
+
+    scenarios = {
+        "single-dc-1200": {"virginia": 1200},
+        "two-equal-600": {"virginia": 600, "oregon": 600},
+        "paper-dc-set-2": {"a": 600, "b": 500, "c": 400, "d": 300, "e": 200},
+        "lopsided-1000+10": {"virginia": 1000, "saopaulo": 10},
+    }
+    out = what_if(job, scenarios, P=80, gpu_cost_per_hour=2.0)
+    print(f"{'scenario':18s} {'D':>3s} {'gpus':>5s} {'iter_ms':>9s} "
+          f"{'thr':>8s} {'$ /iter':>8s}  partitions")
+    for name, v in out.items():
+        print(f"{name:18s} {v['best_D']:3d} {v['gpus_used']:5d} "
+              f"{v['total_ms']:9.0f} {v['throughput']:8.4f} "
+              f"{v['cost_per_iteration']:8.4f}  {v['partitions']}")
+
+    # Fig 12-style sweep
+    print("\nFig 12 sweep (dc1=600 fixed, dc2 grows):")
+    base = best_plan(algorithm1(job, {"dc1": 600}, P=80)).throughput
+    for F in range(0, 11, 2):
+        b = best_plan(algorithm1(job, {"dc1": 600, "dc2": 60 * F}, P=80))
+        used2 = b.partitions.get("dc2", 0)
+        print(f"  F={F*10:3d}%  gain={b.throughput/base:5.2f}x  "
+              f"D={b.D}  dc2_partitions={used2}")
+
+
+if __name__ == "__main__":
+    main()

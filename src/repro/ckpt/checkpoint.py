@@ -1,0 +1,124 @@
+"""Checkpointing: pytree <-> npz with an async writer thread.
+
+The paper (§4.3) defers WAN-aware checkpointing to future work and uses
+standard async/in-memory checkpointing; we provide exactly that: the
+train loop hands a (params, opt_state, step) snapshot to a background
+thread, which serializes to ``<dir>/step_<n>.npz`` + a JSON manifest and
+maintains a ``latest`` pointer.  Restore is synchronous.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p)
+            for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree: Any, metadata: Optional[Dict] = None) -> None:
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **flat)
+    if metadata is not None:
+        with open(path + ".json", "w") as f:
+            json.dump(metadata, f)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    with np.load(path) as z:
+        leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+        out = []
+        for p, leaf in leaves_like:
+            key = _SEP.join(
+                str(q.key) if hasattr(q, "key") else str(q.idx) if hasattr(q, "idx") else str(q)
+                for q in p
+            )
+            arr = z[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            out.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out
+    )
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer (non-blocking ``save``)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+        os.makedirs(directory, exist_ok=True)
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree, meta = item
+            try:
+                path = os.path.join(self.dir, f"step_{step:08d}.npz")
+                save_pytree(path, tree, meta)
+                with open(os.path.join(self.dir, "latest"), "w") as f:
+                    f.write(os.path.basename(path))
+                self._gc()
+            except BaseException as e:  # surfaced on next save/close
+                self._err = e
+
+    def _gc(self):
+        ckpts = sorted(
+            f for f in os.listdir(self.dir) if f.startswith("step_") and f.endswith(".npz")
+        )
+        for old in ckpts[: -self.keep]:
+            os.remove(os.path.join(self.dir, old))
+            j = os.path.join(self.dir, old + ".json")
+            if os.path.exists(j):
+                os.remove(j)
+
+    def save(self, step: int, tree: Any, metadata: Optional[Dict] = None) -> None:
+        if self._err:
+            raise self._err
+        # snapshot to host memory NOW (donated/updated buffers must not
+        # be serialized later): device_get is the "in-memory copy" phase
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._q.put((step, host_tree, metadata or {}))
+
+    def wait(self) -> None:
+        import time
+
+        while not self._q.empty():
+            time.sleep(0.01)
+        if self._err:
+            raise self._err
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=30)
+
+    def latest_path(self) -> Optional[str]:
+        p = os.path.join(self.dir, "latest")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return os.path.join(self.dir, f.read().strip())

@@ -1,0 +1,227 @@
+"""BubbleTea — prefill-as-a-service in training bubbles (paper §5).
+
+Components:
+  * ``PrefillLatencyModel`` — deterministic prefill-duration / TTFT model
+    for an inference model served PP-sharded over training GPUs (Fig 14):
+    compute + per-stage pipeline hops + the weight-swap penalty that makes
+    high PP degrees *win* for large prefills (PP=p keeps model_bytes/p per
+    GPU resident in the small BubbleTea memory budget; PP=1 must stream
+    non-resident layers over PCIe once compute saturates).
+  * ``BubbleTeaController`` — receives prefill requests from the inference
+    controller, places them into *reserved* bubble windows of a training
+    pipeline (same-rank GPUs across DP-cells, same DC — §5.1), never
+    concurrent with training compute, and hands the KV cache to a decode
+    GPU in the same DC (Splitwise-style).  Requests that do not fit any
+    bubble are rejected back to the dedicated inference fleet.
+
+The controller consumes bubbles produced by ``repro.core.simulator`` /
+``repro.core.temporal`` — the same bubble-consolidation property Atlas
+§4.3 advertises is what gives BubbleTea long contiguous windows.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# hardware constants (A100 80GB testbed, paper §6)
+GPU_TFLOPS = 312.0  # A100 bf16 dense
+PREFILL_EFFICIENCY = 0.55  # achieved fraction of peak during prefill
+PCIE_GBPS_BYTES = 64.0  # one-way PCIe gen5 (paper §5 fn. 4), GB/s
+NVLINK_GBPS_BYTES = 100.0  # effective KV-transfer bandwidth intra-node
+# the three constants below are calibrated so the TTFT model hits the
+# paper's two Fig 14 anchors: PP=8 inflates TTFT by +29% at 512 tokens;
+# PP=1 is +67% over PP=8 at 8K tokens (see EXPERIMENTS.md §Fig14)
+BASE_OVERHEAD_MS = 29.0  # tokenization + queueing + launch
+PIPE_HOP_MS = 3.2  # per-stage activation hop + kernel relaunch
+SATURATION_TOKENS = 2048  # prompt length beyond which compute saturates
+SWAP_OVERLAP = 0.34  # fraction of swap hidden under compute
+
+
+@dataclasses.dataclass(frozen=True)
+class InferenceModelSpec:
+    name: str
+    num_params: float  # e.g. 8e9 for Llama3-8B
+    bytes_per_param: float = 2.0  # fp16
+    kv_bytes_per_token: float = 131072.0  # 2·L·Hkv·dh·2B (llama3-8b GQA)
+    mem_budget_gb: float = 2.0  # BubbleTea per-GPU weight budget (§5.1)
+
+    @property
+    def model_bytes(self) -> float:
+        return self.num_params * self.bytes_per_param
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillLatencyModel:
+    model: InferenceModelSpec
+    gpu_tflops: float = GPU_TFLOPS
+
+    def compute_ms(self, prompt_tokens: int) -> float:
+        flops = 2.0 * self.model.num_params * prompt_tokens
+        return flops / (self.gpu_tflops * 1e12 * PREFILL_EFFICIENCY) * 1e3
+
+    def swap_ms(self, prompt_tokens: int, pp_degree: int) -> float:
+        """Weight-streaming penalty (§6.6): with PP=p each GPU must hold
+        model_bytes/p; bytes beyond the resident budget stream over PCIe
+        once per compute wave and only partially overlap."""
+        per_gpu = self.model.model_bytes / pp_degree
+        budget = self.model.mem_budget_gb * 1e9
+        non_resident_total = max(0.0, per_gpu - budget) * pp_degree
+        if non_resident_total <= 0.0:
+            return 0.0
+        waves = max(1, -(-prompt_tokens // SATURATION_TOKENS))
+        if prompt_tokens < SATURATION_TOKENS:
+            return 0.0  # streaming fully hidden under unsaturated compute
+        stream_ms = non_resident_total / (PCIE_GBPS_BYTES * 1e9) * 1e3
+        return waves * stream_ms * (1.0 - SWAP_OVERLAP)
+
+    def prefill_ms(self, prompt_tokens: int, pp_degree: int) -> float:
+        """End-to-end prefill duration on `pp_degree` stages."""
+        return (
+            self.compute_ms(prompt_tokens)
+            + (pp_degree - 1) * PIPE_HOP_MS
+            + self.swap_ms(prompt_tokens, pp_degree)
+        )
+
+    def ttft_ms(self, prompt_tokens: int, pp_degree: int, queue_ms: float = 0.0) -> float:
+        kv_ms = (
+            prompt_tokens * self.model.kv_bytes_per_token
+            / (NVLINK_GBPS_BYTES * 1e9) * 1e3
+        )
+        return BASE_OVERHEAD_MS + queue_ms + self.prefill_ms(prompt_tokens, pp_degree) + kv_ms
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PrefillRequest:
+    req_id: int
+    arrival_ms: float
+    prompt_tokens: int
+
+
+@dataclasses.dataclass
+class Placement:
+    req_id: int
+    pipeline: int
+    start_ms: float
+    duration_ms: float
+    ttft_ms: float
+    queue_ms: float
+
+
+@dataclasses.dataclass
+class _Window:
+    start: float
+    end: float
+
+
+class BubbleTeaController:
+    """Admission control + placement of prefills into training bubbles.
+
+    ``pipelines``: list of per-inference-pipeline bubble interval lists.
+    Each inference pipeline is formed by same-rank GPUs across DP-cells in
+    one DC (paper §5.1); its usable windows are the *intersection* of its
+    member GPUs' training bubbles, which the caller computes (for PP=1 the
+    member is a single GPU and windows are its raw bubbles).
+    """
+
+    def __init__(
+        self,
+        pipelines: Sequence[Sequence[Tuple[float, float]]],
+        latency_model: PrefillLatencyModel,
+        pp_degree: int = 1,
+        guard_ms: float = 1.0,
+    ):
+        self.windows: List[List[_Window]] = [
+            sorted((_Window(a, b) for a, b in pipe), key=lambda w: w.start)
+            for pipe in pipelines
+        ]
+        self.lat = latency_model
+        self.pp = pp_degree
+        self.guard = guard_ms  # paper §6.5: small residual gap so training
+        # resumes without delay
+        self.placements: List[Placement] = []
+        self.rejected: List[int] = []
+        self.search_time_us: List[float] = []
+
+    def submit(self, req: PrefillRequest) -> Optional[Placement]:
+        """Place a prefill (first-fit over pipelines' windows) or reject."""
+        t0 = time.perf_counter()
+        need = self.lat.prefill_ms(req.prompt_tokens, self.pp) + self.guard
+        best: Optional[Tuple[float, int, int]] = None  # (start, pipe, idx)
+        for pi, wins in enumerate(self.windows):
+            for wi, w in enumerate(wins):
+                start = max(w.start, req.arrival_ms)
+                if w.end - start >= need:
+                    if best is None or start < best[0]:
+                        best = (start, pi, wi)
+                    break  # windows sorted; first feasible is earliest here
+        self.search_time_us.append((time.perf_counter() - t0) * 1e6)
+        if best is None:
+            self.rejected.append(req.req_id)
+            return None
+        start, pi, wi = best
+        w = self.windows[pi][wi]
+        dur = need - self.guard
+        # split the window
+        new = []
+        if start - w.start > 1e-9:
+            new.append(_Window(w.start, start))
+        if w.end - (start + need) > 1e-9:
+            new.append(_Window(start + need, w.end))
+        self.windows[pi][wi : wi + 1] = new
+        queue = start - req.arrival_ms
+        ttft = self.lat.ttft_ms(req.prompt_tokens, self.pp, queue_ms=queue)
+        p = Placement(req.req_id, pi, start, dur, ttft, queue)
+        self.placements.append(p)
+        return p
+
+    # -- reporting ---------------------------------------------------------
+
+    def acceptance_rate(self) -> float:
+        n = len(self.placements) + len(self.rejected)
+        return len(self.placements) / n if n else 0.0
+
+    def prefill_busy_ms(self) -> float:
+        return sum(p.duration_ms for p in self.placements)
+
+
+def utilization_with_prefills(
+    sim_busy_ms: float,
+    total_gpu_ms: float,
+    controller: BubbleTeaController,
+) -> float:
+    """GPU utilization after BubbleTea fills bubbles (paper Fig 13)."""
+    pp_factor = controller.pp  # a placement occupies all pp stages
+    extra = controller.prefill_busy_ms() * pp_factor
+    return min(1.0, (sim_busy_ms + extra) / total_gpu_ms)
+
+
+def intersect_bubbles(
+    bubble_lists: Sequence[Sequence[Tuple[float, float]]],
+) -> List[Tuple[float, float]]:
+    """Common idle windows across the GPUs forming one inference pipeline."""
+    if not bubble_lists:
+        return []
+    cur = list(bubble_lists[0])
+    for nxt in bubble_lists[1:]:
+        out = []
+        i = j = 0
+        nxt = list(nxt)
+        while i < len(cur) and j < len(nxt):
+            a0, a1 = cur[i]
+            b0, b1 = nxt[j]
+            lo, hi = max(a0, b0), min(a1, b1)
+            if hi > lo:
+                out.append((lo, hi))
+            if a1 < b1:
+                i += 1
+            else:
+                j += 1
+        cur = out
+    return cur

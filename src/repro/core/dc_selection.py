@@ -1,0 +1,195 @@
+"""Algorithm 1 — DC selection and what-if performance/cost modeling (§4.5).
+
+Given per-DC GPU availability, the comm/compute ratio C and the partition
+count P, sweep the number of DP-cells D, greedily pack PP partitions into
+DCs (in the given DC order — cost, distance, or availability), and report
+``total_time[D] = PP_time + all_reduce_time``.  Users pick D by
+throughput = D·C / total_time[D] (paper §4.5), or run exhaustive what-if
+sweeps over DC sets without any deployment.
+
+``get_latency_pp`` uses the closed-form pipeline model validated against
+the event simulator (see tests/test_dc_selection.py):
+    PP_time = fill + (M−1)·slot + drain
+    slot    = max(GPU work per microbatch, WAN channel time per microbatch)
+with temporal sharing shrinking the per-transfer time by the cell's DP
+factor (C) on the fill/drain paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import wan
+
+
+@dataclasses.dataclass(frozen=True)
+class JobModel:
+    """Workload constants feeding Algorithm 1."""
+
+    t_fwd_ms: float  # forward time per partition per microbatch
+    act_bytes: float  # activation/gradient bytes per boundary
+    partition_param_bytes: float  # parameter bytes per partition
+    microbatches: int
+    recompute: bool = True
+    bwd_mult: float = 2.0
+    wan_latency_ms: float = 40.0
+    multi_tcp: bool = True
+    intra_bw_gbps: float = wan.INTRA_DC_GBPS
+
+    @property
+    def comm_compute_ratio(self) -> float:
+        """C — WAN serialization time of one boundary transfer over t_fwd."""
+        bw = (
+            wan.NODE_PAIR_CAP_GBPS
+            if self.multi_tcp
+            else wan.tcp_single_bw_gbps(self.wan_latency_ms)
+        )
+        ser_ms = self.act_bytes * 8.0 / (bw * 1e9) * 1e3
+        return ser_ms / self.t_fwd_ms
+
+
+@dataclasses.dataclass
+class PlanEntry:
+    D: int
+    partitions: Dict[str, int]
+    pp_time_ms: float
+    allreduce_ms: float
+    total_ms: float
+    throughput: float  # pipelines·microbatches / ms  (relative units)
+    gpus_used: int
+
+
+def _stage_dc_from_partitions(partitions: Dict[str, int], dc_order: Sequence[str]) -> List[int]:
+    stage_dc: List[int] = []
+    for i, dc in enumerate(dc_order):
+        stage_dc.extend([i] * partitions.get(dc, 0))
+    return stage_dc
+
+
+def get_latency_pp(
+    job: JobModel,
+    partitions: Dict[str, int],
+    dc_order: Sequence[str],
+    dp_per_cell: int,
+) -> float:
+    """Closed-form pipeline latency with temporal bandwidth sharing."""
+    stage_dc = _stage_dc_from_partitions(partitions, dc_order)
+    P = len(stage_dc)
+    if P == 0:
+        return math.inf
+    M = job.microbatches
+    t_f = job.t_fwd_ms
+    t_b = job.bwd_mult * t_f
+    t_r = t_f if job.recompute else 0.0
+    D = max(1, dp_per_cell)
+
+    bw = (
+        wan.NODE_PAIR_CAP_GBPS
+        if job.multi_tcp
+        else wan.tcp_single_bw_gbps(job.wan_latency_ms)
+    )
+    ser = job.act_bytes * 8.0 / (bw * 1e9) * 1e3  # one-pipe serialization
+    hop = job.act_bytes * (D - 1) / D * 8.0 / (job.intra_bw_gbps * 1e9) * 1e3
+    # temporal sharing: channel occupancy ser/D; scatter/gather hops stream
+    # with the WAN send and only add delivery delay
+    ser_cell = ser / D + 2.0 * hop
+    n_wan = sum(1 for a, b in zip(stage_dc, stage_dc[1:]) if a != b)
+    intra_ms = job.act_bytes * 8.0 / (job.intra_bw_gbps * 1e9) * 1e3
+    n_intra = (P - 1) - n_wan
+
+    # steady-state slot: per-microbatch GPU work vs per-microbatch WAN
+    # channel occupancy (the cell's channel carries D transfers of ser/D
+    # each per microbatch index => ser per microbatch per boundary)
+    slot = max(t_f + t_r + t_b, ser)
+    fill = P * t_f + n_wan * (ser_cell + job.wan_latency_ms) + n_intra * intra_ms
+    drain = P * (t_r + t_b) + n_wan * (ser_cell + job.wan_latency_ms) + n_intra * intra_ms
+    return fill + (M - 1) * slot + drain
+
+
+def get_latency_dp(job: JobModel, n_replicas: int) -> float:
+    """All-reduce across the DP replicas of one layer — intra-DC ring
+    (§4.2: replicas of a layer always live in the same DC)."""
+    return wan.allreduce_ms(job.partition_param_bytes, n_replicas, job.intra_bw_gbps)
+
+
+def algorithm1(
+    job: JobModel,
+    num_gpu: Dict[str, int],
+    P: int,
+    *,
+    C: Optional[int] = None,
+    D_max: Optional[int] = None,
+    dc_order: Optional[Sequence[str]] = None,
+) -> List[PlanEntry]:
+    """Paper Algorithm 1. Returns one PlanEntry per DP-cell count D."""
+    if dc_order is None:  # default: decreasing GPU availability (§4.5)
+        dc_order = sorted(num_gpu, key=lambda d: -num_gpu[d])
+    if C is None:
+        C = max(1, round(job.comm_compute_ratio))
+    total_gpus = sum(num_gpu.values())
+    if D_max is None:
+        D_max = max(1, total_gpus // (C * P))
+
+    plans: List[PlanEntry] = []
+    for D in range(1, D_max + 1):
+        part_left = P
+        partitions: Dict[str, int] = {}
+        for dc in dc_order:
+            pp_gpu = num_gpu[dc] // (D * C)
+            assigned = min(part_left, pp_gpu)
+            partitions[dc] = assigned
+            part_left -= assigned
+            if part_left == 0:
+                break
+        if part_left > 0:
+            pp_time = math.inf
+            ar = 0.0
+        else:
+            pp_time = get_latency_pp(job, partitions, dc_order, C)
+            ar = get_latency_dp(job, D * C)
+        total = pp_time + ar
+        thr = (D * C * job.microbatches) / total if math.isfinite(total) else 0.0
+        plans.append(
+            PlanEntry(
+                D=D,
+                partitions=dict(partitions),
+                pp_time_ms=pp_time,
+                allreduce_ms=ar,
+                total_ms=total,
+                throughput=thr,
+                gpus_used=D * C * sum(partitions.values()),
+            )
+        )
+    return plans
+
+
+def best_plan(plans: List[PlanEntry]) -> PlanEntry:
+    return max(plans, key=lambda p: p.throughput)
+
+
+def what_if(
+    job: JobModel,
+    scenarios: Dict[str, Dict[str, int]],
+    P: int,
+    *,
+    C: Optional[int] = None,
+    gpu_cost_per_hour: float = 2.0,
+) -> Dict[str, Dict]:
+    """Cost/performance what-if sweep across candidate DC sets (§4.5):
+    for each scenario, the best plan, its throughput, and the $/iteration
+    estimate — all without any deployment."""
+    out: Dict[str, Dict] = {}
+    for name, gpus in scenarios.items():
+        plans = algorithm1(job, gpus, P, C=C)
+        best = best_plan(plans)
+        iter_hours = best.total_ms / 3.6e6
+        out[name] = {
+            "best_D": best.D,
+            "throughput": best.throughput,
+            "total_ms": best.total_ms,
+            "gpus_used": best.gpus_used,
+            "cost_per_iteration": best.gpus_used * gpu_cost_per_hour * iter_hours,
+            "partitions": best.partitions,
+        }
+    return out

@@ -1,0 +1,393 @@
+"""Discrete-event simulator for cross-DC pipeline training — paper §3/§6.
+
+Faithfully models the paper's setting:
+  - P pipeline stages placed in DCs (contiguous stages per DC, §3.2);
+  - M microbatches per minibatch; forward t_f, backward 2·t_f, optional
+    recomputation t_f before backward (Varuna semantics, §2);
+  - activation/gradient transfers of B·L·H bytes per stage boundary
+    (§3.2 fn. 2), serialized per (node-pair, direction) — activations and
+    gradients travel in opposite directions and do not compete (§3.2 obs e);
+  - WAN node-pair bandwidth from ``repro.core.wan`` (single- vs multi-TCP);
+  - schedulers: "gpipe" (all-F then all-B, recompute), "megatron" (1F1B,
+    no recompute), "varuna" (1F1B + recompute + backward priority), and
+    "atlas" (= varuna compute rules + *temporal bandwidth sharing*: the D
+    pipelines of a DP-cell pool their per-node-pair WAN allocations so one
+    transfer runs at D× bandwidth, serialized within the cell — §4.3/4.4).
+
+Outputs per-GPU busy intervals (Fig 4 / Fig 13-style timelines), bubbles,
+utilization, and iteration time; the DP all-reduce is added analytically
+(intra-DC rings, §4.2).
+
+Event-driven, pure Python; deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import wan
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    num_stages: int
+    microbatches: int
+    t_fwd_ms: float  # forward time per stage per microbatch
+    act_bytes: float  # activation (= gradient) bytes per boundary
+    stage_dc: Tuple[int, ...]  # DC index of each stage
+    stage_param_bytes: float = 0.0  # per-stage parameter bytes (for DP all-reduce)
+    recompute: bool = True
+    bwd_mult: float = 2.0  # t_bwd = bwd_mult · t_fwd
+    inflight_cap: Optional[int] = None  # max forwards ahead of backwards
+
+
+@dataclasses.dataclass(frozen=True)
+class GeoTopology:
+    wan_latency_ms: float = 40.0
+    multi_tcp: bool = True
+    intra_bw_gbps: float = wan.INTRA_DC_GBPS
+    intra_latency_ms: float = wan.INTRA_DC_LATENCY_MS
+
+    def link(self, dc_a: int, dc_b: int) -> wan.Link:
+        if dc_a == dc_b:
+            return wan.Link(self.intra_latency_ms, self.intra_bw_gbps)
+        return wan.wan_link(self.wan_latency_ms, self.multi_tcp)
+
+
+@dataclasses.dataclass
+class Interval:
+    start: float
+    end: float
+    kind: str  # 'fwd' | 'rec' | 'bwd' | 'prefill'
+    micro: int = -1
+
+
+@dataclasses.dataclass
+class SimResult:
+    iteration_ms: float
+    busy: Dict[Tuple[int, int], List[Interval]]  # (pipeline, stage) -> intervals
+    utilization: float
+    bubbles: Dict[Tuple[int, int], List[Tuple[float, float]]]
+    allreduce_ms: float
+    n_pipelines: int
+
+    def stage_bubbles(self, pipeline: int, stage: int) -> List[Tuple[float, float]]:
+        return self.bubbles[(pipeline, stage)]
+
+
+# ---------------------------------------------------------------------------
+
+
+def _priority(kind: str, micro: int, pipeline: int) -> Tuple:
+    # backward (incl. its recompute) preempts queued forwards (paper §4.4
+    # rule 4); earlier microbatches first; lower rank first.
+    order = {"bwd": 0, "fwd": 1}
+    return (order[kind], micro, pipeline)
+
+
+def simulate(
+    spec: PipelineSpec,
+    topo: GeoTopology,
+    *,
+    policy: str = "varuna",
+    n_pipelines: int = 1,
+    dp_replicas_for_allreduce: int = 1,
+) -> SimResult:
+    """Simulate one minibatch (iteration) of ``n_pipelines`` DP pipelines.
+
+    policy: gpipe | megatron | varuna | atlas.  Only "atlas" coordinates
+    the pipelines (temporal bandwidth sharing); the baselines run
+    identical, independent schedules and compete for nothing (each has its
+    own node-pair allocation — the paper's *spatial* sharing).
+    """
+    assert policy in ("gpipe", "megatron", "varuna", "atlas")
+    if policy == "atlas":
+        return _simulate_atlas(spec, topo, n_pipelines, dp_replicas_for_allreduce)
+    P, M = spec.num_stages, spec.microbatches
+    temporal = False
+    recompute = spec.recompute and policy in ("gpipe", "varuna", "atlas")
+    inflight_cap = spec.inflight_cap
+    if inflight_cap is None:
+        inflight_cap = M if policy == "gpipe" else P
+    t_f = spec.t_fwd_ms
+    t_b = spec.bwd_mult * spec.t_fwd_ms
+
+    D = n_pipelines
+    pipes = range(D)
+
+    # --- channels: (pipeline-or-cell, boundary, dir) ---
+    # temporal sharing pools the D per-pair allocations => D× bandwidth for
+    # a single transfer, one transfer at a time per cell (paper §4.3), plus
+    # the intra-DC scatter/gather hop.  A channel is a priority queue
+    # (paper §4.4 rule 3: transfers are *scheduled*, not FIFO): earliest
+    # microbatch first, gradients before activations (rule 4), then rank.
+    chan_free: Dict[Tuple, float] = {}
+    chan_pending: Dict[Tuple, List[Tuple]] = {}
+
+    def transfer_times(s_from: int, s_to: int) -> Tuple[float, float]:
+        """(channel occupancy ms, extra delivery delay ms).
+
+        Occupancy = serialization time (the bandwidth resource); the
+        propagation latency delays delivery but does not hold the link —
+        back-to-back transfers pipeline through the WAN.
+        """
+        link = topo.link(spec.stage_dc[s_from], spec.stage_dc[s_to])
+        ser = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
+        if link.bw_gbps >= topo.intra_bw_gbps:  # intra-DC hop
+            return ser, link.latency_ms
+        if temporal:
+            ser = ser / D
+            # scatter to / gather from the D-1 peer nodes over intra-DC
+            # links (paper §4.3); the hops STREAM with the WAN send, so
+            # they add delivery latency but do not occupy the shared
+            # channel ((D-1)/D of the bytes make each hop).
+            hop = (spec.act_bytes * (D - 1) / D * 8.0) / (topo.intra_bw_gbps * 1e9) * 1e3
+            return ser, link.latency_ms + 2.0 * hop
+        return ser, link.latency_ms
+
+    def chan_key(p: int, boundary: int, direction: str) -> Tuple:
+        if temporal:
+            return ("cell", boundary, direction)
+        return (p, boundary, direction)
+
+    # --- state ---
+    gpu_free = {(p, s): 0.0 for p in pipes for s in range(P)}
+    ready: Dict[Tuple[int, int], List[Tuple]] = {g: [] for g in gpu_free}
+    busy: Dict[Tuple[int, int], List[Interval]] = {g: [] for g in gpu_free}
+    fwd_done = {(p, s): 0 for p in pipes for s in range(P)}
+    bwd_done = {(p, s): 0 for p in pipes for s in range(P)}
+    fwd_barrier_release: Dict[int, float] = {}  # gpipe: pipeline -> all-F time
+
+    events: List[Tuple[float, int, str, Tuple]] = []
+    seq = itertools.count()
+
+    def push(t: float, kind: str, payload: Tuple):
+        heapq.heappush(events, (t, next(seq), kind, payload))
+
+    # seed: microbatch m ready at stage 0 at t=0
+    for p in pipes:
+        for m in range(M):
+            ready[(p, 0)].append(_priority("fwd", m, p) + ("fwd", m))
+
+    def try_dispatch(g: Tuple[int, int], now: float):
+        p, s = g
+        if gpu_free[g] > now or not ready[g]:
+            return
+        ready[g].sort()
+        for i, item in enumerate(ready[g]):
+            kind, m = item[-2], item[-1]
+            if kind == "fwd":
+                if fwd_done[g] - bwd_done[g] >= inflight_cap:
+                    continue
+            if kind == "bwd" and policy == "gpipe":
+                if fwd_barrier_release.get(p) is None:
+                    continue  # wait until all forwards of this pipeline done
+            ready[g].pop(i)
+            if kind == "fwd":
+                dur = t_f
+            else:
+                dur = t_b + (t_f if (recompute and s != P - 1) else 0.0)
+            gpu_free[g] = now + dur
+            busy[g].append(Interval(now, now + dur, kind, m))
+            push(now + dur, "gpu_done", (p, s, kind, m))
+            return
+
+    def on_gpu_done(now: float, p: int, s: int, kind: str, m: int):
+        g = (p, s)
+        if kind == "fwd":
+            fwd_done[g] += 1
+            if s < P - 1:
+                request_transfer(now, p, s, s + 1, "act", m)
+            else:
+                # last stage: backward immediately eligible
+                ready[g].append(_priority("bwd", m, p) + ("bwd", m))
+            if policy == "gpipe" and s == P - 1 and fwd_done[g] == M:
+                fwd_barrier_release[p] = now
+                try_dispatch((p, P - 1), now)
+        else:  # bwd
+            bwd_done[g] += 1
+            if s > 0:
+                request_transfer(now, p, s, s - 1, "grad", m)
+        try_dispatch(g, now)
+
+    def request_transfer(now: float, p: int, s_from: int, s_to: int, direction: str, m: int):
+        boundary = min(s_from, s_to)
+        key = chan_key(p, boundary, direction)
+        prio = (m, 0 if direction == "grad" else 1, p)
+        chan_pending.setdefault(key, []).append(prio + (p, s_from, s_to, direction, m))
+        pump_channel(key, now)
+
+    def pump_channel(key: Tuple, now: float):
+        pend = chan_pending.get(key)
+        if not pend or chan_free.get(key, 0.0) > now + 1e-12:
+            return
+        pend.sort()
+        _, _, _, p, s_from, s_to, direction, m = pend.pop(0)
+        ser, delay = transfer_times(s_from, s_to)
+        chan_free[key] = now + ser
+        push(now + ser + delay, "arrive", (p, s_to, direction, m))
+        push(now + ser, "chan_free", (key,))
+
+    def on_arrive(now: float, p: int, s: int, direction: str, m: int):
+        g = (p, s)
+        kind = "fwd" if direction == "act" else "bwd"
+        ready[g].append(_priority(kind, m, p) + (kind, m))
+        try_dispatch(g, now)
+
+    # kick off
+    for p in pipes:
+        try_dispatch((p, 0), 0.0)
+
+    while events:
+        now, _, ev, payload = heapq.heappop(events)
+        if ev == "gpu_done":
+            on_gpu_done(now, *payload)
+        elif ev == "arrive":
+            on_arrive(now, *payload)
+        elif ev == "chan_free":
+            pump_channel(payload[0], now)
+
+    pp_end = max((iv.end for ivs in busy.values() for iv in ivs), default=0.0)
+
+    # --- DP all-reduce (intra-DC rings, paper §4.2) ---
+    ar = wan.allreduce_ms(
+        spec.stage_param_bytes, dp_replicas_for_allreduce, topo.intra_bw_gbps
+    )
+    total = pp_end + ar
+
+    # --- bubbles & utilization ---
+    bubbles: Dict[Tuple[int, int], List[Tuple[float, float]]] = {}
+    busy_sum = 0.0
+    for g, ivs in busy.items():
+        ivs.sort(key=lambda iv: iv.start)
+        gaps = []
+        cur = 0.0
+        for iv in ivs:
+            if iv.start > cur + 1e-9:
+                gaps.append((cur, iv.start))
+            cur = max(cur, iv.end)
+            busy_sum += iv.end - iv.start
+        if cur < total - 1e-9:
+            gaps.append((cur, total))
+        bubbles[g] = gaps
+    util = busy_sum / (total * len(gpu_free)) if total > 0 else 0.0
+
+    return SimResult(
+        iteration_ms=total,
+        busy=busy,
+        utilization=util,
+        bubbles=bubbles,
+        allreduce_ms=ar,
+        n_pipelines=D,
+    )
+
+
+def _simulate_atlas(
+    spec: PipelineSpec,
+    topo: GeoTopology,
+    n_pipelines: int,
+    dp_replicas_for_allreduce: int,
+) -> SimResult:
+    """Atlas = precomputed §4.4 schedule (repro.core.temporal) wrapped into
+    the same SimResult shape as the reactive baselines."""
+    from repro.core import temporal
+
+    sched = temporal.atlas_schedule(
+        spec, topo, n_pipelines, inflight_cap=spec.inflight_cap
+    )
+    ar = wan.allreduce_ms(
+        spec.stage_param_bytes, dp_replicas_for_allreduce, topo.intra_bw_gbps
+    )
+    total = sched.makespan + ar
+    busy: Dict[Tuple[int, int], List[Interval]] = {
+        (p, s): [] for p in range(n_pipelines) for s in range(spec.num_stages)
+    }
+    for t in sched.tasks:
+        busy[(t.pipeline, t.stage)].append(Interval(t.start, t.end, t.kind, t.micro))
+    bubbles: Dict[Tuple[int, int], List[Tuple[float, float]]] = {}
+    busy_sum = 0.0
+    for g, ivs in busy.items():
+        ivs.sort(key=lambda iv: iv.start)
+        gaps = []
+        cur = 0.0
+        for iv in ivs:
+            if iv.start > cur + 1e-9:
+                gaps.append((cur, iv.start))
+            cur = max(cur, iv.end)
+            busy_sum += iv.end - iv.start
+        if cur < total - 1e-9:
+            gaps.append((cur, total))
+        bubbles[g] = gaps
+    util = busy_sum / (total * len(busy)) if total > 0 else 0.0
+    return SimResult(
+        iteration_ms=total,
+        busy=busy,
+        utilization=util,
+        bubbles=bubbles,
+        allreduce_ms=ar,
+        n_pipelines=n_pipelines,
+    )
+
+
+# ---------------------------------------------------------------------------
+# analytic DP-only iteration (paper §3.1, Fig 2)
+# ---------------------------------------------------------------------------
+
+
+def dp_iteration_ms(
+    compute_ms: float,
+    param_bytes: float,
+    n_nodes: int,
+    latency_ms: float,
+    *,
+    multi_tcp: bool = False,
+    intra_dc: bool = False,
+) -> float:
+    """One DP iteration: compute + ring all-reduce over the given network."""
+    if intra_dc:
+        bw = wan.INTRA_DC_GBPS
+    else:
+        bw = (
+            wan.NODE_PAIR_CAP_GBPS
+            if multi_tcp
+            else wan.tcp_single_bw_gbps(latency_ms)
+        )
+    return compute_ms + wan.allreduce_ms(param_bytes, n_nodes, bw)
+
+
+# ---------------------------------------------------------------------------
+# convenience: paper §6.1 testbed-style spec builders
+# ---------------------------------------------------------------------------
+
+
+def testbed_spec(
+    *,
+    hidden: int,
+    seq_len: int,
+    micro_batch: int,
+    layers_per_stage: int,
+    layer_params: float,
+    num_stages: int,
+    microbatches: int,
+    stage_dc: Sequence[int],
+    gpu_tflops: float = 312.0,  # A100 bf16 dense
+    recompute: bool = True,
+) -> PipelineSpec:
+    """Derive compute/comm times from model dims (paper §4.2 big-O terms)."""
+    # forward FLOPs per microbatch per stage ≈ 6·params·tokens  (fwd=2·,
+    # bwd=4· => bwd_mult 2); attention term folded into the constant.
+    tokens = micro_batch * seq_len
+    stage_params = layers_per_stage * layer_params
+    flops_fwd = 2.0 * stage_params * tokens
+    t_fwd_ms = flops_fwd / (gpu_tflops * 1e12) * 1e3
+    return PipelineSpec(
+        num_stages=num_stages,
+        microbatches=microbatches,
+        t_fwd_ms=t_fwd_ms,
+        act_bytes=wan.activation_bytes(micro_batch, seq_len, hidden),
+        stage_dc=tuple(stage_dc),
+        stage_param_bytes=stage_params * 2.0,  # fp16
+        recompute=recompute,
+    )

@@ -1,0 +1,199 @@
+"""Atlas temporal-bandwidth-sharing scheduler — the paper's §4.4 heuristic.
+
+Unlike the reactive baselines (Varuna/GPipe react to arrivals), Atlas
+*precomputes* the full iteration schedule for a DP-cell before training
+starts.  This module is that scheduler: a serial list-scheduler over
+(pipeline, stage, microbatch, phase) tasks and their WAN transfers,
+implementing the paper's four rules:
+
+  (1) the D DP pipelines of a cell share one WAN channel per stage
+      boundary and direction at D× node-pair bandwidth, one transfer at a
+      time (LocalDPRank staggering emerges from serialization order);
+  (2) memory-cap filtering: a forward is only scheduled when the stage's
+      in-flight count (forwards minus completed backwards) is below the
+      cap — Atlas never exceeds peak memory, unlike Varuna;
+  (3) compute is scheduled only if its output transfer can start the
+      moment compute ends (no buffered activations clogging the channel):
+      the task's start is delayed so that compute-end == channel-free;
+  (4) when both forward and backward are ready at a stage, backward wins
+      (it unlocks downstream stages).
+
+The returned Schedule carries per-GPU busy intervals and transfer windows;
+``repro.core.simulator.simulate(policy="atlas")`` wraps it into the same
+SimResult shape as the reactive baselines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import wan
+
+
+@dataclasses.dataclass
+class Task:
+    pipeline: int
+    stage: int
+    micro: int
+    kind: str  # 'fwd' | 'bwd' (bwd includes recompute time)
+    start: float = -1.0
+    end: float = -1.0
+
+
+@dataclasses.dataclass
+class Transfer:
+    pipeline: int
+    boundary: int  # between stage b and b+1
+    direction: str  # 'act' | 'grad'
+    micro: int
+    start: float
+    end: float  # channel occupancy end
+    arrive: float  # end + propagation latency
+
+
+@dataclasses.dataclass
+class Schedule:
+    tasks: List[Task]
+    transfers: List[Transfer]
+    makespan: float
+    num_stages: int
+    num_pipelines: int
+
+
+def is_wan_boundary(spec, topo, b: int) -> bool:
+    return (
+        topo.link(spec.stage_dc[b], spec.stage_dc[b + 1]).bw_gbps
+        < topo.intra_bw_gbps
+    )
+
+
+def atlas_schedule(
+    spec,  # repro.core.simulator.PipelineSpec
+    topo,  # repro.core.simulator.GeoTopology
+    n_pipelines: int,
+    *,
+    inflight_cap: Optional[int] = None,
+) -> Schedule:
+    P, M, D = spec.num_stages, spec.microbatches, n_pipelines
+    t_f = spec.t_fwd_ms
+    t_b = spec.bwd_mult * t_f
+    cap = inflight_cap if inflight_cap is not None else P
+
+    def boundary_times(b: int) -> Tuple[float, float]:
+        """(channel occupancy, delivery delay) for boundary b -> b+1.
+
+        The intra-DC scatter/gather hops stream with the WAN send: they
+        delay delivery but never hold the shared WAN channel."""
+        link = topo.link(spec.stage_dc[b], spec.stage_dc[b + 1])
+        ser = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
+        if link.bw_gbps >= topo.intra_bw_gbps:
+            return ser, link.latency_ms
+        hop = (spec.act_bytes * (D - 1) / D * 8.0) / (topo.intra_bw_gbps * 1e9) * 1e3
+        return ser / D, link.latency_ms + 2.0 * hop
+
+    is_wan = [
+        topo.link(spec.stage_dc[b], spec.stage_dc[b + 1]).bw_gbps < topo.intra_bw_gbps
+        for b in range(P - 1)
+    ]
+
+    gpu_free = {(p, s): 0.0 for p in range(D) for s in range(P)}
+    chan_free: Dict[Tuple[int, str], float] = {}
+    # LocalDPRank stagger (§4.4 rule 1): offset each pipeline's injection
+    # by one cell-transfer slot so transfer demands interleave instead of
+    # bursting the shared channel (Fig 6(b): DP-2 starts at 1, DP-1 at 5).
+    wan_sers = [
+        boundary_times(b)[0] for b in range(P - 1) if is_wan_boundary(spec, topo, b)
+    ]
+    slot = max(wan_sers) if wan_sers else 0.0
+    # dependency-readiness of tasks: time activation/grad is available
+    avail: Dict[Tuple[str, int, int, int], float] = {}
+    for p in range(D):
+        for m in range(M):
+            avail[("fwd", p, 0, m)] = p * slot
+    fwd_sched = {(p, s): 0 for p in range(D) for s in range(P)}
+    bwd_sched = {(p, s): 0 for p in range(D) for s in range(P)}
+
+    tasks: List[Task] = []
+    transfers: List[Transfer] = []
+    n_total = D * P * M * 2
+    done = 0
+
+    def task_dur(kind: str, s: int) -> float:
+        if kind == "fwd":
+            return t_f
+        rec = t_f if (spec.recompute and s != P - 1) else 0.0
+        return t_b + rec
+
+    def feasible_start(kind: str, p: int, s: int, m: int) -> Optional[float]:
+        key = (kind, p, s, m)
+        if key not in avail:
+            return None
+        if kind == "fwd" and fwd_sched[(p, s)] - bwd_sched[(p, s)] >= cap:
+            return None
+        t0 = max(avail[key], gpu_free[(p, s)])
+        dur = task_dur(kind, s)
+        # rule 3: output transfer must start at compute end
+        out_b = s if kind == "fwd" else s - 1
+        has_out = (kind == "fwd" and s < P - 1) or (kind == "bwd" and s > 0)
+        if has_out and is_wan[out_b]:
+            direction = "act" if kind == "fwd" else "grad"
+            cf = chan_free.get((out_b, direction), 0.0)
+            t0 = max(t0, cf - dur)
+        return t0
+
+    while done < n_total:
+        # choose among ready tasks the earliest feasible start;
+        # ties: backward first (rule 4), then micro, then rank
+        best = None
+        for key in list(avail.keys()):
+            kind, p, s, m = key
+            t0 = feasible_start(kind, p, s, m)
+            if t0 is None:
+                continue
+            rank = (t0, 0 if kind == "bwd" else 1, m, p)
+            if best is None or rank < best[0]:
+                best = (rank, key, t0)
+        assert best is not None, "deadlock in atlas schedule (cap too small?)"
+        _, (kind, p, s, m), t0 = best
+        del avail[(kind, p, s, m)]
+        dur = task_dur(kind, s)
+        end = t0 + dur
+        gpu_free[(p, s)] = end
+        tasks.append(Task(p, s, m, kind, t0, end))
+        if kind == "fwd":
+            fwd_sched[(p, s)] += 1
+            if s < P - 1:
+                _emit_transfer(
+                    transfers, chan_free, boundary_times, avail,
+                    p, s, "act", m, end, is_wan,
+                )
+            else:
+                avail[("bwd", p, s, m)] = end
+        else:
+            bwd_sched[(p, s)] += 1
+            if s > 0:
+                _emit_transfer(
+                    transfers, chan_free, boundary_times, avail,
+                    p, s - 1, "grad", m, end, is_wan,
+                )
+        done += 1
+
+    makespan = max(t.end for t in tasks)
+    if transfers:
+        makespan = max(makespan, max(tr.arrive for tr in transfers))
+    return Schedule(tasks, transfers, makespan, P, D)
+
+
+def _emit_transfer(transfers, chan_free, boundary_times, avail, p, b, direction, m, ready, is_wan):
+    ser, delay = boundary_times(b)
+    if is_wan[b]:
+        start = max(ready, chan_free.get((b, direction), 0.0))
+        chan_free[(b, direction)] = start + ser
+    else:
+        start = ready  # intra-DC links are effectively uncontended
+    arrive = start + ser + delay
+    transfers.append(Transfer(p, b, direction, m, start, start + ser, arrive))
+    dst = b + 1 if direction == "act" else b
+    kind = "fwd" if direction == "act" else "bwd"
+    avail[(kind, p, dst, m)] = arrive

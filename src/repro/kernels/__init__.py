@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (interpret-mode validated on CPU).
+
+Modules: flash_attention, decode_attention, wkv6, rmsnorm — each with a
+pure-jnp oracle in ``ref`` and a jit'd public wrapper in ``ops``.
+"""

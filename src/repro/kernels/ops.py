@@ -1,0 +1,121 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These accept the model-layer layouts ((B, T, H, D) etc.), reshape to the
+kernel layouts, pick interpret mode automatically (interpret=True anywhere
+but real TPU), and fall back to the jnp reference for shapes the kernels
+do not support (e.g. non-divisible blocks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import rmsnorm as _rms
+from repro.kernels import wkv6 as _wkv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q", "block_kv"))
+def flash_attention(
+    q: jax.Array,  # (B, T, Hq, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+) -> jax.Array:
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else D**-0.5
+    bq, bkv = min(block_q, T), min(block_kv, S)
+    if T % bq or S % bkv:
+        return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    group = Hq // Hkv
+    qr = q.transpose(0, 2, 1, 3).reshape(B * Hq, T, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    o = _fa.flash_attention_bhsd(
+        qr, kr, vr, group=group, scale=scale, causal=causal,
+        block_q=bq, block_kv=bkv, interpret=_interpret(),
+    )
+    return o.reshape(B, Hq, T, D).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "block_kv"))
+def decode_attention(
+    q: jax.Array,  # (B, 1, Hq, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,
+    q_pos: jax.Array,  # (B, 1)
+    kv_pos: jax.Array,  # (B, S)
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_kv: int = 256,
+) -> jax.Array:
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    assert T == 1
+    scale = scale if scale is not None else D**-0.5
+    bkv = min(block_kv, S)
+    if S % bkv:
+        return _ref.decode_attention_ref(q, k, v, q_pos, kv_pos, window=window, scale=scale)
+    group = Hq // Hkv
+    qr = q.transpose(0, 2, 1, 3).reshape(B * Hq, 1, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    qp = jnp.repeat(q_pos, Hq, axis=0).reshape(B * Hq, 1)
+    kp = jnp.repeat(kv_pos, Hkv, axis=0).reshape(B * Hkv, S)
+    o = _dec.decode_attention_bhsd(
+        qr, kr, vr, qp, kp, group=group, scale=scale,
+        window=window or 0, block_kv=bkv, interpret=_interpret(),
+    )
+    return o.reshape(B, Hq, 1, D).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6, block_rows: int = 256):
+    shape = x.shape
+    N = 1
+    for s in shape[:-1]:
+        N *= s
+    xr = x.reshape(N, shape[-1])
+    br = min(block_rows, N)
+    if N % br:
+        return _ref.rmsnorm_ref(x, scale, eps)
+    o = _rms.rmsnorm_rows(xr, scale, eps=eps, block_rows=br, interpret=_interpret())
+    return o.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(
+    r: jax.Array,  # (B, T, H, D)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,
+    u: jax.Array,  # (H, D)
+    *,
+    chunk: int = 64,
+) -> jax.Array:
+    B, T, H, D = r.shape
+    c = min(chunk, T)
+    if T % c:
+        return _ref.wkv6_ref(r, k, v, logw, u)
+    tr = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    ub = jnp.tile(u, (B, 1))  # (B*H, D)
+    o = _wkv.wkv6_bhtd(
+        tr(r), tr(k), tr(v), tr(logw.astype(jnp.float32)), ub, chunk=c,
+        interpret=_interpret(),
+    )
+    return o.reshape(B, H, T, D).transpose(0, 2, 1, 3)

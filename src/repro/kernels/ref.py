@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+used by the shape/dtype sweep tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0**30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, T, Hq, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D**-0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, T, Hkv, G, D)
+    s = jnp.einsum("btkgd,bskd->bkgts", qf, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(T)[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, T, Hq, D).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, 1, Hq, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,
+    q_pos: jax.Array,  # (B, 1)
+    kv_pos: jax.Array,  # (B, S)
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D**-0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, T, Hkv, G, D)
+    s = jnp.einsum("btkgd,bskd->bkgts", qf, k.astype(jnp.float32))
+    mask = (kv_pos[:, None, :] >= 0) & (kv_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        mask = mask & (kv_pos[:, None, :] > q_pos[:, :, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, T, Hq, D).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def wkv6_ref(
+    r: jax.Array,  # (B, T, H, D)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,  # (B, T, H, D) log decay (<= 0)
+    u: jax.Array,  # (H, D)
+) -> jax.Array:
+    """Sequential (exact) recurrence — O(T) scan, the gold reference."""
+    B, T, H, D = r.shape
+
+    def step(S, inp):
+        r_t, k_t, v_t, lw_t = inp  # (B,H,D) each
+        kv = jnp.einsum("bhd,bhe->bhde", k_t, v_t)
+        y = jnp.einsum("bhd,bhde->bhe", r_t, S + u[None, :, :, None] * kv)
+        S = S * jnp.exp(lw_t)[..., None] + kv
+        return S, y
+
+    sw = lambda a: jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    S0 = jnp.zeros((B, H, D, D), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, (sw(r), sw(k), sw(v), sw(logw)))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)  # (B, T, H, D)

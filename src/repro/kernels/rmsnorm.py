@@ -1,0 +1,45 @@
+"""Fused RMSNorm — Pallas kernel (memory-bound hot-spot).
+
+Grid over row blocks; each block loads (block_rows, d) into VMEM, computes
+the f32 variance on-chip and writes the scaled rows back once — one HBM
+round-trip instead of the unfused norm's several.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, d)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * scale_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_rows(
+    x: jax.Array,  # (N, d)
+    scale: jax.Array,  # (d,)
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    N, d = x.shape
+    block_rows = min(block_rows, N)
+    assert N % block_rows == 0
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+The paper's placement (§4.2) maps onto the axes as:
+  pod   -> DC            (pipeline stages cross it; thin DCN = WAN)
+  data  -> DP inside a DC (all-reduce rings never leave a pod)
+  model -> TP/EP on fast interconnect
+
+Functions, not module-level constants: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, multi_pod: bool = False):
+    """Small test mesh matching whatever devices exist (CPU runs)."""
+    n = len(jax.devices())
+    if multi_pod:
+        assert n >= 8 and n % 2 == 0
+        per = n // 2
+        dp = 2
+        tp = per // dp
+        return jax.make_mesh((2, dp, tp), ("pod", "data", "model"))
+    if n == 1:
+        return jax.make_mesh((1, 1), ("data", "model"))
+    dp = 2 if n % 2 == 0 else 1
+    return jax.make_mesh((dp, n // dp), ("data", "model"))

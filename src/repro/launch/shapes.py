@@ -1,0 +1,169 @@
+"""Assigned input shapes and the ShapeDtypeStruct builders for the dry-run.
+
+SHAPES (assignment sheet):
+  train_4k     seq=4,096    global_batch=256   -> train_step
+  prefill_32k  seq=32,768   global_batch=32    -> prefill_step
+  decode_32k   seq=32,768   global_batch=128   -> serve_step (1 new token)
+  long_500k    seq=524,288  global_batch=1     -> serve_step, sub-quadratic
+
+Policies (DESIGN.md §4):
+  * hubert (encoder-only): decode_32k / long_500k skipped; prefill_32k
+    lowers the encode forward.
+  * long_500k: native for rwkv6 (O(1) state), zamba2 (Mamba2 + shared-attn
+    KV) and deepseek-v2-lite (MLA latent cache is 27·(512+64)·S ≈ 16 GB
+    total at 500k — the MLA selling point); dense/vlm archs get a
+    sliding-window variant (window=8192).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import canon, get_config
+from repro.models.modules import ModelConfig
+
+SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k": {"seq_len": 4_096, "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32_768, "global_batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq_len": 32_768, "global_batch": 128, "kind": "decode"},
+    "long_500k": {"seq_len": 524_288, "global_batch": 1, "kind": "decode"},
+}
+
+LONG_WINDOW = 8_192  # sliding window for dense archs at 500k (beyond-paper)
+
+
+def shape_supported(arch: str, shape: str) -> Tuple[bool, str]:
+    cfg = get_config(arch)
+    if cfg.family == "audio" and shape in ("decode_32k", "long_500k"):
+        return False, "encoder-only: no autoregressive decode (DESIGN.md §4)"
+    return True, ""
+
+
+def config_for(arch: str, shape: str) -> ModelConfig:
+    """Arch config with the per-shape policy applied."""
+    cfg = get_config(arch)
+    if shape == "long_500k" and cfg.family in ("dense", "vlm", "moe"):
+        if cfg.mla is None:  # MLA's latent cache handles 500k natively
+            cfg = dataclasses.replace(cfg, window=LONG_WINDOW)
+    return cfg
+
+
+def _sharded(sds: jax.ShapeDtypeStruct, mesh: Mesh, spec: P) -> jax.ShapeDtypeStruct:
+    from repro.parallel.sharding import _fit_spec
+
+    fitted = _fit_spec(sds.shape, spec, mesh)
+    return jax.ShapeDtypeStruct(
+        sds.shape, sds.dtype, sharding=NamedSharding(mesh, fitted if fitted else P())
+    )
+
+
+def batch_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def seq_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "model") if multi_pod else ("model",)
+
+
+def batch_specs(
+    cfg: ModelConfig, shape: str, mesh: Mesh, *, multi_pod: bool, pipeline: bool = False
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs (with shardings) for the input batch."""
+    s = SHAPES[shape]
+    B, T = s["global_batch"], s["seq_len"]
+    kind = s["kind"]
+    # under pipeline-over-pod the batch dim is sharded by data only (each
+    # pod sees the full batch at its stage); otherwise pods split the batch
+    ba = ("data",) if (pipeline or not multi_pod) else ("pod", "data")
+    bspec = P(ba if len(ba) > 1 else ba[0])
+
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if kind == "decode":
+        out["tokens"] = _sharded(
+            jax.ShapeDtypeStruct((B,), jnp.int32), mesh, bspec
+        )
+        out["pos"] = _sharded(jax.ShapeDtypeStruct((B,), jnp.int32), mesh, bspec)
+        return out
+
+    if cfg.family == "audio":
+        out["embeds"] = _sharded(
+            jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.bfloat16),
+            mesh,
+            P(bspec[0], None, None),
+        )
+        out["labels"] = _sharded(
+            jax.ShapeDtypeStruct((B, T), jnp.int32), mesh, P(bspec[0], None)
+        )
+        out["mask"] = _sharded(
+            jax.ShapeDtypeStruct((B, T), jnp.float32), mesh, P(bspec[0], None)
+        )
+    elif cfg.family == "vlm" and kind == "train":
+        out["embeds"] = _sharded(
+            jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.bfloat16),
+            mesh,
+            P(bspec[0], None, None),
+        )
+        out["positions"] = _sharded(
+            jax.ShapeDtypeStruct((3, B, T), jnp.int32), mesh, P(None, bspec[0], None)
+        )
+        out["labels"] = _sharded(
+            jax.ShapeDtypeStruct((B, T), jnp.int32), mesh, P(bspec[0], None)
+        )
+        out["mask"] = _sharded(
+            jax.ShapeDtypeStruct((B, T), jnp.float32), mesh, P(bspec[0], None)
+        )
+    else:
+        out["tokens"] = _sharded(
+            jax.ShapeDtypeStruct((B, T), jnp.int32), mesh, P(bspec[0], None)
+        )
+    return out
+
+
+def cache_specs(
+    cfg: ModelConfig, shape: str, mesh: Mesh, model, *, multi_pod: bool
+) -> Any:
+    """Sharded ShapeDtypeStructs for the KV/state cache.
+
+    Batch dim (the first dim after the leading layer/group dims that
+    equals global_batch) shards over the batch axes; when B == 1
+    (long_500k) the sequence dim shards over (pod×)model instead.
+    """
+    s = SHAPES[shape]
+    B, S = s["global_batch"], s["seq_len"]
+    cache = model.cache_shape(B, S)
+    ba = batch_axes(multi_pod)
+    sa = seq_axes(multi_pod)
+    ba_size = 1
+    for a in ba:
+        ba_size *= mesh.shape[a]
+
+    def spec_for(sds: jax.ShapeDtypeStruct) -> P:
+        dims: list = [None] * len(sds.shape)
+        placed_batch = None
+        for i in range(1, len(sds.shape)):
+            if sds.shape[i] == B and B % ba_size == 0 and B > 1:
+                dims[i] = ba if len(ba) > 1 else ba[0]
+                placed_batch = i
+                break
+        # shard the largest remaining dim (seq for KV caches, heads for
+        # SSM states) over the model axis — and over pod too when the
+        # batch could not take it (long_500k's B == 1)
+        rem = sa if placed_batch is None else ("model",)
+        cand = [
+            i
+            for i in range(1, len(sds.shape))
+            if i != placed_batch and sds.shape[i] > 1
+        ]
+        if cand:
+            longest = max(cand, key=lambda i: sds.shape[i])
+            dims[longest] = rem if len(rem) > 1 else rem[0]
+        return P(*dims)
+
+    def one(sds):
+        return _sharded(sds, mesh, spec_for(sds))
+
+    return jax.tree.map(one, cache)

@@ -1,0 +1,235 @@
+"""Parameter/pytree module helpers — minimal functional NN layer zoo.
+
+No flax/haiku in this environment: parameters are nested dicts of jnp
+arrays, initializers are explicit, and every layer is a pure function
+``f(params, x, ...) -> y``.  Layer-stacked weights (leading ``L`` axis)
+support ``jax.lax.scan`` over depth, which keeps HLO size and compile time
+flat in the number of layers — essential for the 88-layer dry-runs on a
+single-core host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+PRNGKey = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# config dataclasses
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    num_shared_experts: int = 0
+    expert_d_ff: int = 1408
+    capacity_factor: float = 1.25
+    # layer index of the first MoE layer (earlier layers use the dense FFN)
+    first_moe_layer: int = 0
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) settings."""
+
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 128
+    conv_width: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    max_seq_len: int = 8192
+    # attention flavour
+    rope_theta: float = 10_000.0
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl M-RoPE
+    window: Optional[int] = None  # sliding-window attention (long-context)
+    mla: Optional[MLAConfig] = None
+    causal: bool = True  # False => bidirectional encoder (hubert)
+    ffn_activation: str = "swiglu"  # swiglu | relu2 | gelu
+    # moe / ssm / hybrid
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    attn_period: int = 0  # hybrid: one (shared) attention block every N layers
+    shared_attn_block: bool = False  # zamba2: attention weights shared
+    # numerics
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    # embeddings (untied by default: matches the assigned model cards, and
+    # a tied table crossing the GSPMD/manual-shard_map boundary trips an
+    # XLA partitioner CHECK — see DESIGN.md §8)
+    tie_embeddings: bool = False
+    # remat policy for the layer scan: 'none' | 'full' | 'dots'
+    remat: str = "full"
+    source: str = ""  # citation
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for roofline MODEL_FLOPS = 6·N·D)."""
+        d, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        if self.rwkv is not None:
+            # time-mix: r,k,v,g,w projections + output; channel-mix ~2 mats
+            per = 6 * d * d + 2 * d * self.d_ff + d * self.d_ff
+            return L * per + 2 * self.vocab_size * d
+        attn = d * (self.num_heads * hd) * 2 + d * (self.num_kv_heads * hd) * 2
+        if self.mla is not None:
+            m = self.mla
+            attn = (
+                d * self.num_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                + self.num_heads * m.v_head_dim * d
+            )
+        glu = 3 if self.ffn_activation == "swiglu" else 2
+        ffn = glu * d * self.d_ff
+        per_layer = attn + ffn
+        total = 0
+        if self.family == "hybrid" and self.ssm is not None:
+            n_attn = L // self.attn_period if self.attn_period else 0
+            n_ssm = L - n_attn
+            d_in = d * self.ssm.expand
+            ssm_per = d * (2 * d_in + 2 * self.ssm.d_state) + d_in * d
+            total = n_ssm * ssm_per + (1 if self.shared_attn_block else n_attn) * per_layer
+        elif self.family == "ssm" and self.ssm is not None:
+            d_in = d * self.ssm.expand
+            total = L * (d * (2 * d_in + 2 * self.ssm.d_state) + d_in * d)
+        elif self.moe is not None:
+            glu_e = 3  # experts use swiglu
+            e_ffn = glu_e * d * self.moe.expert_d_ff
+            shared = self.moe.num_shared_experts * e_ffn
+            router = d * self.moe.num_experts
+            n_moe = L - self.moe.first_moe_layer
+            n_dense = self.moe.first_moe_layer
+            total = (
+                n_moe * (attn + self.moe.num_experts * e_ffn + shared + router)
+                + n_dense * per_layer
+            )
+        else:
+            total = L * per_layer
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return total + emb
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed top-k experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        e_ffn = 3 * self.d_model * self.moe.expert_d_ff
+        n_moe = self.num_layers - self.moe.first_moe_layer
+        inactive = n_moe * (self.moe.num_experts - self.moe.top_k) * e_ffn
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# initializers + primitive layers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: PRNGKey, shape: Sequence[int], dtype=jnp.float32, scale: float = 1.0):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def embed_init(key: PRNGKey, shape: Sequence[int], dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+def rmsnorm_init(shape: Sequence[int], dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+def rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def dense(w: jax.Array, x: jax.Array) -> jax.Array:
+    """x: (..., d_in), w: (d_in, d_out) — contraction in input dtype."""
+    return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+
+
+def ffn_apply(params: Params, x: jax.Array, activation: str) -> jax.Array:
+    if activation == "swiglu":
+        gate = dense(params["w_gate"], x)
+        up = dense(params["w_up"], x)
+        h = jax.nn.silu(gate) * up
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(dense(params["w_up"], x)))
+    elif activation == "gelu":
+        h = jax.nn.gelu(dense(params["w_up"], x))
+    else:  # pragma: no cover - config validation elsewhere
+        raise ValueError(f"unknown activation {activation}")
+    return dense(params["w_down"], h)
+
+
+def ffn_init(key: PRNGKey, d_model: int, d_ff: int, activation: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def stack_layers(init_fn: Callable[[PRNGKey], Params], key: PRNGKey, n: int) -> Params:
+    """vmap an init over ``n`` layers -> params with a leading layer axis."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None):
+    """Mean token cross-entropy; logits (..., V) f32-upcast for stability."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

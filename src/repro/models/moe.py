@@ -1,0 +1,128 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k, capacity dispatch.
+
+Dispatch is sort-based (Megablocks-style dense emulation) rather than the
+GShard one-hot einsum: the one-hot combine tensor is O(T·E·C) and does not
+fit memory at our shapes, while sort+gather+scatter keeps the expert buffer
+at O(E·C·d) which shards cleanly over the ``model`` axis (expert
+parallelism, paper Appendix A: EP stays intra-DC/pod).
+
+Out-of-capacity assignments are dropped (standard capacity-factor
+semantics); gather/scatter out-of-bounds handling in XLA implements the
+drop for free.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import ModelConfig, Params, dense, dense_init
+from repro.parallel.sharding import constrain
+from jax.sharding import PartitionSpec as P
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    E, f = m.num_experts, m.expert_d_ff
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, f), cfg.param_dtype),
+        "w_up": dense_init(ks[2], (E, d, f), cfg.param_dtype),
+        "w_down": dense_init(ks[3], (E, f, d), cfg.param_dtype),
+    }
+    if m.num_shared_experts:
+        sf = m.num_shared_experts * f
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(ks2[0], (d, sf), cfg.param_dtype),
+            "w_up": dense_init(ks2[1], (d, sf), cfg.param_dtype),
+            "w_down": dense_init(ks2[2], (sf, d), cfg.param_dtype),
+        }
+    return p
+
+
+def capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = math.ceil(num_tokens * m.top_k / m.num_experts * m.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to a lane-friendly multiple
+
+
+def moe_apply(params: Params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (B, T, d) -> (y (B, T, d), aux_loss scalar).
+
+    Dispatch is *per sequence* (capacity enforced within each batch row):
+    every index op is then batched over B, which (a) keeps the sort local
+    to a data shard — no global argsort across the data axis — and (b)
+    keeps the expert buffer (B, E, C, d) shardable over data × model.
+    """
+    m = cfg.moe
+    B, T, d = x.shape
+    E, K = m.num_experts, m.top_k
+    NK = T * K
+
+    gate_logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), params["router"])
+    gates = jax.nn.softmax(gate_logits, axis=-1)  # (B, T, E)
+    top_w, top_i = jax.lax.top_k(gates, K)  # (B, T, K)
+
+    # ---- load-balance auxiliary loss (Switch-style) ----
+    me = jnp.mean(gates, axis=(0, 1))  # mean router prob per expert
+    one_hot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)  # (B,T,K,E)
+    ce = jnp.mean(jnp.sum(one_hot, axis=2), axis=(0, 1)) / K  # fraction routed
+    aux = E * jnp.sum(me * ce) * m.router_aux_weight
+
+    # ---- sort-based dispatch (vectorized over B) ----
+    C = capacity(T, cfg)
+    flat_e = top_i.reshape(B, NK)
+    flat_w = top_w.reshape(B, NK)
+    order = jnp.argsort(flat_e, axis=1, stable=True)  # (B, NK)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    counts = jax.vmap(lambda s: jnp.bincount(s, length=E))(sorted_e)  # (B, E)
+    starts = jnp.cumsum(counts, axis=1) - counts  # (B, E)
+    pos_in_e = (
+        jnp.arange(NK, dtype=jnp.int32)[None]
+        - jnp.take_along_axis(starts, sorted_e, axis=1).astype(jnp.int32)
+    )
+    token_idx = (order // K).astype(jnp.int32)  # (B, NK)
+    keep = pos_in_e < C
+
+    # All index ops are vmapped over B so XLA sees true gather/scatter
+    # *batch dims* — with an explicit bidx index array the partitioner
+    # cannot shard B and replicates the (B, T·K, d) combine across the
+    # model axis, emitting O(50 GB) f32/u32 all-reduces per step
+    # (§Perf A in EXPERIMENTS.md).
+    def dispatch_row(xr, se, pe, ti):
+        xg = jnp.take(xr, ti, axis=0)  # (NK, d)
+        # OOB (over-capacity) rows are dropped by scatter mode="drop".
+        return jnp.zeros((E, C, d), xr.dtype).at[se, pe].set(xg, mode="drop")
+
+    buf = jax.vmap(dispatch_row)(x, sorted_e, pos_in_e, token_idx)
+    buf = constrain(buf, P("data", "model", None, None))  # DP × EP
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["w_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", buf, params["w_up"].astype(x.dtype))
+    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(x.dtype))
+    # the combine stays LOCAL per data shard: one all-gather of out_buf
+    # over the expert (model) axis is ~25× cheaper than the replicated
+    # combine the partitioner otherwise picks.
+    out_buf = constrain(out_buf, P("data", None, None, None))
+
+    w = (flat_w * keep.astype(jnp.float32)).astype(x.dtype)
+
+    def combine_row(ob, se, pe, ti, wr):
+        vals = ob.at[se, pe].get(mode="fill", fill_value=0)  # (NK, d)
+        yr = jnp.zeros((T, d), jnp.float32)
+        return yr.at[ti].add((vals * wr[:, None]).astype(jnp.float32))
+
+    y = jax.vmap(combine_row)(out_buf, sorted_e, pos_in_e, token_idx, w)
+    y = constrain(y, P("data", None, None)).astype(x.dtype)
+
+    if m.num_shared_experts:
+        s = params["shared"]
+        sh = jax.nn.silu(dense(s["w_gate"], x)) * dense(s["w_up"], x)
+        y = y + dense(s["w_down"], sh)
+
+    return y, aux

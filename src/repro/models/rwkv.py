@@ -1,0 +1,201 @@
+"""RWKV-6 "Finch" block: token-shift time-mix with data-dependent decay
+(arXiv:2404.05892), chunked-parallel for training, O(d²) recurrent state
+for decode — the attention-free arch in the assigned pool.
+
+Per head (dim D), with per-channel decay w_t ∈ (0,1):
+    S_t   = diag(w_t) S_{t-1} + k_tᵀ v_t
+    out_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+Chunked form (GLA-style): within a chunk, rescale r/k by the running
+per-channel log-decay so intra-chunk scores become a plain masked matmul;
+carry S across chunks with ``lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import ModelConfig, Params, dense, dense_init, rmsnorm
+
+
+def rwkv6_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    H = d // hd
+    ks = jax.random.split(key, 10)
+    lora = 64
+    return {
+        # token-shift mix coefficients (static lerp; the data-dependent part
+        # comes through the decay LoRA below)
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "wr": dense_init(ks[0], (d, d), cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, d), cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, d), cfg.param_dtype),
+        "wg": dense_init(ks[3], (d, d), cfg.param_dtype),
+        "wo": dense_init(ks[4], (d, d), cfg.param_dtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + lora_b @ tanh(lora_a @ x)))
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": dense_init(ks[5], (d, lora), cfg.param_dtype),
+        "w_lora_b": dense_init(ks[6], (lora, d), cfg.param_dtype, scale=0.1),
+        "u": jnp.zeros((H, hd), jnp.float32),  # bonus for current token
+        "ln_scale": jnp.ones((d,), jnp.float32),
+        # channel-mix
+        "mu_ck": jnp.full((d,), 0.5, jnp.float32),
+        "ck": dense_init(ks[7], (d, cfg.d_ff), cfg.param_dtype),
+        "cv": dense_init(ks[8], (cfg.d_ff, d), cfg.param_dtype),
+        "cr": dense_init(ks[9], (d, d), cfg.param_dtype),
+    }
+
+
+def _token_shift(x: jax.Array, mu: jax.Array, prev: Optional[jax.Array]):
+    """lerp(x_{t-1}, x_t, mu); prev (B,d) is the last token of the previous
+    segment (decode state), zeros at sequence start."""
+    if x.shape[1] == 1 and prev is not None:
+        xm1 = prev[:, None, :]
+    else:
+        first = prev[:, None, :] if prev is not None else jnp.zeros_like(x[:, :1])
+        xm1 = jnp.concatenate([first, x[:, :-1]], axis=1)
+    mu = mu.astype(x.dtype)
+    return x * mu + xm1 * (1.0 - mu)
+
+
+def _wkv_chunked(r, k, v, logw, u, chunk, S0=None):
+    """r,k,v (B,T,H,D); logw (B,T,H,D) (log decay, <=0); u (H,D).
+
+    S0: optional initial state (B,H,D,D).
+    Returns y (B,T,H,D), final state (B,H,D,D) [key-dim x value-dim].
+    """
+    B, T, H, D = r.shape
+    nc = T // chunk
+    rc = r.reshape(B, nc, chunk, H, D).astype(jnp.float32)
+    kc = k.reshape(B, nc, chunk, H, D).astype(jnp.float32)
+    vc = v.reshape(B, nc, chunk, H, D).astype(jnp.float32)
+    lw = logw.reshape(B, nc, chunk, H, D).astype(jnp.float32)
+
+    # exclusive cumulative decay within chunk: L_t = sum_{j<t} logw_j
+    lcum_inc = jnp.cumsum(lw, axis=2)
+    lcum = lcum_inc - lw  # exclusive
+    ltot = lcum_inc[:, :, -1]  # (B,nc,H,D)
+
+    # rescaled queries/keys: score(t,s) = sum_d r_td k_sd exp(L_t - L_s - logw_s + logw_s)?
+    # For s < t the decay applied to k_s v_s at time t is prod_{j=s+1..t-1} w_j
+    # = exp(L_t - L_s - logw_? ) with exclusive L: prod_{j=s+1}^{t-1} = exp(lcum_t - lcum_{s+1})
+    # lcum_{s+1} = lcum_s + logw_s = lcum_inc_s. So decay = exp(lcum_t - lcum_inc_s).
+    r_sc = rc * jnp.exp(lcum)
+    k_sc = kc * jnp.exp(-lcum_inc)
+    scores = jnp.einsum("bkthd,bkshd->bkhts", r_sc, k_sc)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strictly lower
+    scores = scores * mask[None, None, None]
+    # current-token bonus: u ⊙ k_t
+    diag = jnp.einsum("bkthd,hd,bkthd->bkth", rc, u.astype(jnp.float32), kc)
+    y_intra = jnp.einsum("bkhts,bkshd->bkthd", scores, vc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    # chunk summary: S_k += sum_s exp(ltot - lcum_inc_s) k_s ⊗ v_s
+    kw = kc * jnp.exp(ltot[:, :, None] - lcum_inc)
+    S_chunk = jnp.einsum("bkshd,bkshe->bkhde", kw, vc)
+
+    def step(S_prev, inputs):
+        S_k, ltot_k = inputs  # (B,H,D,D), (B,H,D)
+        S_new = S_prev * jnp.exp(ltot_k)[..., None] + S_k
+        return S_new, S_prev
+
+    S_sw = jnp.moveaxis(S_chunk, 1, 0)
+    lt_sw = jnp.moveaxis(ltot, 1, 0)
+    if S0 is None:
+        S0 = jnp.zeros((B, H, D, D), jnp.float32)
+    S_final, S_prevs = jax.lax.scan(step, S0, (S_sw, lt_sw))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)  # (B,nc,H,D,D)
+
+    y_inter = jnp.einsum("bkthd,bkhde->bkthe", r_sc, S_prevs)
+    y = (y_intra + y_inter).reshape(B, T, H, D)
+    return y, S_final
+
+
+def rwkv6_apply(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    state: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Full RWKV-6 block (time-mix + channel-mix with pre-norms fused here).
+
+    state: {"wkv": (B,H,D,D) f32, "shift_t": (B,d), "shift_c": (B,d)}
+    """
+    B, T, d = x.shape
+    hd = cfg.rwkv.head_dim
+    H = d // hd
+
+    # ---- time mix ----
+    xn = rmsnorm(params["ln_scale"], x)
+    prev_t = state["shift_t"] if state is not None else None
+    xr = _token_shift(xn, params["mu_r"], prev_t)
+    xk = _token_shift(xn, params["mu_k"], prev_t)
+    xv = _token_shift(xn, params["mu_v"], prev_t)
+    xw = _token_shift(xn, params["mu_w"], prev_t)
+    xg = _token_shift(xn, params["mu_g"], prev_t)
+
+    r = dense(params["wr"], xr).reshape(B, T, H, hd)
+    k = dense(params["wk"], xk).reshape(B, T, H, hd)
+    v = dense(params["wv"], xv).reshape(B, T, H, hd)
+    g = jax.nn.silu(dense(params["wg"], xg))
+
+    lora = jnp.tanh(dense(params["w_lora_a"], xw))
+    w_dd = dense(params["w_lora_b"], lora).astype(jnp.float32)
+    logw = -jnp.exp(params["w0"] + w_dd)  # (B,T,d), <= 0
+    logw = logw.reshape(B, T, H, hd)
+
+    if state is None or T > 1:
+        S0 = state["wkv"] if state is not None else None
+        chunk = cfg.rwkv.chunk
+        Tpad = (-T) % chunk
+        if Tpad:
+            padf = lambda a: jnp.pad(a, [(0, 0), (0, Tpad)] + [(0, 0)] * (a.ndim - 2))
+            y, S = _wkv_chunked(padf(r), padf(k), padf(v), padf(logw), params["u"], chunk, S0)
+            y = y[:, :T]
+        else:
+            y, S = _wkv_chunked(r, k, v, logw, params["u"], chunk, S0)
+    else:
+        S_prev = state["wkv"]  # (B,H,D,D)
+        r1 = r[:, 0].astype(jnp.float32)
+        k1 = k[:, 0].astype(jnp.float32)
+        v1 = v[:, 0].astype(jnp.float32)
+        w1 = jnp.exp(logw[:, 0])  # (B,H,D)
+        kv = jnp.einsum("bhd,bhe->bhde", k1, v1)
+        y = jnp.einsum("bhd,bhde->bhe", r1, S_prev + params["u"][None, :, :, None] * kv)
+        S = S_prev * w1[..., None] + kv
+        y = y[:, None]
+
+    y = (y.reshape(B, T, d).astype(x.dtype)) * g.astype(x.dtype)
+    x = x + dense(params["wo"], y)
+
+    # ---- channel mix ----
+    xn2 = rmsnorm(params["ln_scale"], x)  # share scale: cheap & adequate here
+    prev_c = state["shift_c"] if state is not None else None
+    xk2 = _token_shift(xn2, params["mu_ck"], prev_c)
+    h = jnp.square(jax.nn.relu(dense(params["ck"], xk2)))
+    cm = dense(params["cv"], h) * jax.nn.sigmoid(dense(params["cr"], xk2))
+    out = x + cm
+
+    new_state = {
+        "wkv": S,
+        "shift_t": xn[:, -1],
+        "shift_c": xn2[:, -1],
+    }
+    return out, new_state
+
+
+def rwkv6_state_shape(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    H = d // hd
+    return {
+        "wkv": ((batch, H, hd, hd), jnp.float32),
+        "shift_t": ((batch, d), cfg.dtype),
+        "shift_c": ((batch, d), cfg.dtype),
+    }

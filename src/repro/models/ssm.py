@@ -1,0 +1,180 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-parallel for training
+and O(1)-state recurrent for decode.
+
+Recurrence (per head h, head_dim p, state n):
+    h_t = a_t * h_{t-1} + dt_t * x_t ⊗ B_t          a_t = exp(dt_t * A_h)  (scalar/head)
+    y_t = C_t · h_t + D_h * x_t
+Training uses the standard chunked form: intra-chunk attention-like masked
+matmul + inter-chunk ``lax.scan`` over carried states.  This is the
+sub-quadratic path that makes long_500k viable for SSM/hybrid archs.
+
+Tensor-parallel layout: the gate/input projections shard the *head*
+dimension (w_z/w_x output d_inner = heads·head_dim over ``model``); B/C/dt
+are small and replicated; the SSD scan is then head-local, and w_out
+contracts the sharded d_inner (one all-reduce per layer, mirroring the
+attention block's wo).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import ModelConfig, Params, dense, dense_init
+
+
+def mamba2_init(key, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = d * s.expand
+    nheads = d_in // s.head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_z": dense_init(ks[0], (d, d_in), cfg.param_dtype),  # gate
+        "w_x": dense_init(ks[1], (d, d_in), cfg.param_dtype),
+        "w_bc": dense_init(ks[2], (d, 2 * s.d_state), cfg.param_dtype),
+        "w_dt": dense_init(ks[3], (d, nheads), cfg.param_dtype),
+        "conv_x": dense_init(ks[4], (s.conv_width, d_in), cfg.param_dtype, scale=1.0),
+        "conv_bc": dense_init(ks[5], (s.conv_width, 2 * s.d_state), cfg.param_dtype, scale=1.0),
+        "A_log": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "w_out": dense_init(ks[0], (d_in, d), cfg.param_dtype),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, conv_w: jax.Array, state: Optional[jax.Array]):
+    """Depthwise causal conv1d. x (B,T,C); state (B,W-1,C) or None."""
+    W = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (W - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, T+W-1, C)
+    out = sum(xp[:, i : i + x.shape[1]] * conv_w[i].astype(x.dtype) for i in range(W))
+    new_state = xp[:, -(W - 1) :] if W > 1 else pad[:, :0]
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(x, B, C, dt, A, chunk, h0=None):
+    """Chunked SSD scan.
+
+    x (b,T,H,P)  B,C (b,T,N)  dt (b,T,H)  A (H,) negative.
+    h0: optional initial state (b,H,P,N).
+    Returns y (b,T,H,P), final_state (b,H,P,N).
+    """
+    b, T, H, Pd = x.shape
+    N = B.shape[-1]
+    nc = T // chunk
+    xc = x.reshape(b, nc, chunk, H, Pd)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+    dtc = dt.reshape(b, nc, chunk, H).astype(jnp.float32)
+
+    la = dtc * A  # log decay per step (b,nc,c,H), <= 0
+    lcum = jnp.cumsum(la, axis=2)  # inclusive cumulative log decay
+    ltot = lcum[:, :, -1]  # (b,nc,H)
+
+    # --- intra-chunk (masked attention-like) ---
+    cb = jnp.einsum("bktn,bksn->bkts", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    seg = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]  # (b,nc,t,s,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dec = jnp.exp(jnp.where(mask[None, None, :, :, None], seg, -jnp.inf))
+    att = cb[..., None] * dec * dtc[:, :, None, :, :]  # (b,nc,t,s,H)
+    y_intra = jnp.einsum("bktsh,bkshp->bkthp", att, xc.astype(jnp.float32))
+
+    # --- chunk summary states: S_k = sum_s exp(ltot - lcum_s) dt_s B_s x_s^T ---
+    w = jnp.exp(ltot[:, :, None, :] - lcum) * dtc  # (b,nc,c,H)
+    S = jnp.einsum("bkch,bkchp,bkcn->bkhpn", w, xc.astype(jnp.float32), Bc.astype(jnp.float32))
+
+    # --- inter-chunk scan over carried state ---
+    def step(h_prev, inputs):
+        S_k, ltot_k = inputs  # (b,H,P,N), (b,H)
+        h_new = h_prev * jnp.exp(ltot_k)[:, :, None, None] + S_k
+        return h_new, h_prev
+
+    S_sw = jnp.moveaxis(S, 1, 0)  # (nc,b,H,P,N)
+    lt_sw = jnp.moveaxis(ltot, 1, 0)
+    if h0 is None:
+        h0 = jnp.zeros((b, H, Pd, N), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(step, h0, (S_sw, lt_sw))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (b,nc,H,P,N) state entering chunk
+
+    # --- inter-chunk contribution: y_t += C_t · (exp(lcum_t) * h_prev) ---
+    y_inter = jnp.einsum(
+        "bktn,bkth,bkhpn->bkthp", Cc.astype(jnp.float32), jnp.exp(lcum), h_prevs
+    )
+    y = (y_intra + y_inter).reshape(b, T, H, Pd)
+    return y, h_final
+
+
+def mamba2_apply(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    state: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """x (B,T,d). state {"ssm": (B,H,P,N), "conv_x": (B,W-1,d_in),
+    "conv_bc": (B,W-1,2N)} for decode."""
+    s = cfg.ssm
+    B_, T, d = x.shape
+    d_in = d * s.expand
+    nheads = d_in // s.head_dim
+
+    z = dense(params["w_z"], x)
+    xs = dense(params["w_x"], x)
+    bc = dense(params["w_bc"], x)
+    dt = dense(params["w_dt"], x)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])  # (H,)
+
+    cx = state["conv_x"] if state is not None else None
+    cb = state["conv_bc"] if state is not None else None
+    xs, new_cx = _causal_conv(xs, params["conv_x"], cx)
+    bc, new_cb = _causal_conv(bc, params["conv_bc"], cb)
+    Bmat, Cmat = jnp.split(bc, 2, axis=-1)
+    xh = xs.reshape(B_, T, nheads, s.head_dim)
+
+    if T > 1 or state is None:
+        h0 = state["ssm"] if state is not None else None
+        Tpad = (-T) % s.chunk
+        if Tpad:
+            pad = lambda a: jnp.pad(a, [(0, 0), (0, Tpad)] + [(0, 0)] * (a.ndim - 2))
+            y, h_final = _ssd_chunked(
+                pad(xh), pad(Bmat), pad(Cmat), pad(dt), A, s.chunk, h0
+            )
+            y = y[:, :T]
+        else:
+            y, h_final = _ssd_chunked(xh, Bmat, Cmat, dt, A, s.chunk, h0)
+        new_state = {"ssm": h_final, "conv_x": new_cx, "conv_bc": new_cb}
+    else:
+        # single-step recurrence (T == 1)
+        h_prev = state["ssm"]  # (B,H,P,N)
+        a = jnp.exp(dt[:, 0] * A)  # (B,H)
+        upd = jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0].astype(jnp.float32), Bmat[:, 0].astype(jnp.float32)
+        )
+        h_new = h_prev * a[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h_new, Cmat[:, 0].astype(jnp.float32))[:, None]
+        new_state = {"ssm": h_new, "conv_x": new_cx, "conv_bc": new_cb}
+
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, T, d_in).astype(x.dtype)
+    # gated RMS norm (Mamba2 style)
+    yz = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(yz.astype(jnp.float32)), axis=-1, keepdims=True)
+    yz = (yz.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"]).astype(x.dtype)
+    return dense(params["w_out"], yz), new_state
+
+
+def mamba2_state_shape(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    nheads = d_in // s.head_dim
+    return {
+        "ssm": ((batch, nheads, s.head_dim, s.d_state), jnp.float32),
+        "conv_x": ((batch, s.conv_width - 1, d_in), cfg.dtype),
+        "conv_bc": ((batch, s.conv_width - 1, 2 * s.d_state), cfg.dtype),
+    }

@@ -1,0 +1,131 @@
+"""Serving engine: KV-cache management, batched prefill/decode, and the
+Splitwise-style prefill/decode split that BubbleTea builds on (paper §5).
+
+Roles:
+  * ``ServingEngine`` — owns params + a ring of KV caches, runs batched
+    ``prefill`` and ``decode_step`` (the jit'd model functions), applies
+    greedy/temperature sampling, and tracks per-request TTFT/TBT.
+  * ``SplitwiseCluster`` — two engines sharing weights: "prefill side"
+    (in BubbleTea's case: training GPUs during bubbles) hands the KV
+    cache to the "decode side" (dedicated decode GPUs in the same DC).
+    On CPU the "transfer" is a pytree copy; its simulated WAN/ICI cost is
+    accounted by repro.core.bubbletea's latency model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.modules import ModelConfig
+from repro.models.transformer import Model, build_model
+
+
+def zeros_cache(model: Model, batch: int, max_len: int):
+    """Concrete empty cache (pos arrays start at -1 = empty slot)."""
+
+    def mk(s):
+        if s.dtype == jnp.int32:
+            return jnp.full(s.shape, -1, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree.map(mk, model.cache_shape(batch, max_len))
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray  # (T,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    # filled during processing
+    generated: Optional[List[int]] = None
+    ttft_ms: float = 0.0
+    tbt_ms: List[float] = dataclasses.field(default_factory=list)
+
+
+class ServingEngine:
+    """Batched serving over one model replica."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, max_batch: int, max_len: int):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step)
+
+    def prefill_batch(self, requests: List[Request]) -> Tuple[Any, jax.Array, jax.Array]:
+        """Right-aligned batched prefill. Returns (cache, next_tokens, pos)."""
+        assert len(requests) <= self.max_batch
+        B = len(requests)
+        T = max(len(r.prompt) for r in requests)
+        toks = np.zeros((B, T), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, T - len(r.prompt) :] = r.prompt  # right-align
+        cache = zeros_cache(self.model, B, self.max_len)
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)}, cache)
+        logits.block_until_ready()
+        wall = (time.perf_counter() - t0) * 1e3
+        for r in requests:
+            r.ttft_ms = wall
+            r.generated = []
+        nxt = self._sample(logits, requests)
+        pos = jnp.full((B,), T, jnp.int32)
+        for i, r in enumerate(requests):
+            r.generated.append(int(nxt[i]))
+        return cache, nxt, pos
+
+    def decode_batch(self, requests: List[Request], cache, tokens, pos, steps: int):
+        for _ in range(steps):
+            t0 = time.perf_counter()
+            logits, cache = self._decode(self.params, cache, tokens, pos)
+            logits.block_until_ready()
+            wall = (time.perf_counter() - t0) * 1e3
+            tokens = self._sample(logits, requests)
+            pos = pos + 1
+            for i, r in enumerate(requests):
+                if len(r.generated) < r.max_new_tokens:
+                    r.generated.append(int(tokens[i]))
+                    r.tbt_ms.append(wall)
+        return cache, tokens, pos
+
+    def _sample(self, logits: jax.Array, requests: List[Request]) -> jax.Array:
+        temps = np.array([r.temperature for r in requests], np.float32)
+        if (temps == 0).all():
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        key = jax.random.PRNGKey(int(sum(r.req_id for r in requests)) & 0x7FFFFFFF)
+        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-3)
+        return jax.random.categorical(key, scaled).astype(jnp.int32)
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        cache, tok, pos = self.prefill_batch(requests)
+        steps = max(r.max_new_tokens for r in requests) - 1
+        self.decode_batch(requests, cache, tok, pos, steps)
+        return requests
+
+
+class SplitwiseCluster:
+    """Prefill on one engine, decode on another (KV handoff in between)."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, max_batch: int, max_len: int):
+        self.prefill_engine = ServingEngine(cfg, params, max_batch, max_len)
+        self.decode_engine = ServingEngine(cfg, params, max_batch, max_len)
+        self.kv_bytes_moved = 0
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        cache, tok, pos = self.prefill_engine.prefill_batch(requests)
+        # KV handoff (Splitwise): device-to-device copy; count the bytes
+        self.kv_bytes_moved += sum(
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)
+        )
+        cache = jax.tree.map(jnp.copy, cache)
+        steps = max(r.max_new_tokens for r in requests) - 1
+        self.decode_engine.decode_batch(requests, cache, tok, pos, steps)
+        return requests

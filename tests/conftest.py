@@ -1,0 +1,7 @@
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,84 @@
+"""Pallas kernel allclose tests: shape/dtype sweeps against the pure-jnp
+oracles in repro.kernels.ref (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("T,Hq,Hkv,D", [(128, 4, 4, 64), (256, 8, 2, 64), (128, 6, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(T, Hq, Hkv, D, dtype, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, T, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, Hkv, D), dtype)
+    o = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64)
+    o_ref = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("S,Hq,Hkv,D,window", [(256, 4, 4, 64, None), (512, 8, 2, 64, 128), (256, 4, 1, 32, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(S, Hq, Hkv, D, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B = 3
+    q = jax.random.normal(ks[0], (B, 1, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    # ring-buffer-like positions with empty slots
+    kv_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    kv_pos = jnp.where(kv_pos < S - 37, kv_pos, -1)
+    q_pos = jnp.full((B, 1), S - 40, jnp.int32)
+    o = ops.decode_attention(q, k, v, q_pos, kv_pos, window=window, block_kv=128)
+    o_ref = ref.decode_attention_ref(q, k, v, q_pos, kv_pos, window=window)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("shape", [(512, 128), (3, 256, 64), (2, 4, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(2), shape, dtype)
+    sc = jax.random.normal(jax.random.PRNGKey(3), shape[-1:], jnp.float32)
+    o = ops.rmsnorm(x, sc, block_rows=64)
+    o_ref = ref.rmsnorm_ref(x, sc)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("T,H,D,chunk", [(128, 2, 64, 32), (96, 4, 32, 32), (256, 1, 64, 64)])
+def test_wkv6_vs_sequential(T, H, D, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    B = 2
+    r = jax.random.normal(ks[0], (B, T, H, D)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, D)) * 0.5
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, T, H, D)) * 0.5 - 2.0)
+    u = jax.random.normal(ks[4], (H, D)) * 0.1
+    o = ops.wkv6(r, k, v, logw, u, chunk=chunk)
+    o_ref = ref.wkv6_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-4, rtol=2e-4)
+
+
+def test_flash_attention_fallback_on_ragged_shapes():
+    """Non-divisible block shapes must fall back to the reference path."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 100, 2, 32))
+    k = jax.random.normal(ks[1], (1, 100, 2, 32))
+    v = jax.random.normal(ks[2], (1, 100, 2, 32))
+    o = ops.flash_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    o_ref = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=1e-5, rtol=1e-5)

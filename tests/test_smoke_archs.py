@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each assigned architecture: instantiate the REDUCED same-family
+variant (≤2 layers equivalent, d_model ≤ 512, ≤4 experts), run one
+forward/train step on CPU, assert output shapes and no NaNs; plus a
+prefill→decode consistency check for the decoder families.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.data.pipeline import input_batch_for
+from repro.models.transformer import build_model
+from repro.optim.optimizer import OptimizerConfig, init_opt_state, make_train_step
+
+ASSIGNED = ARCHS[:10]
+B, T = 2, 64
+
+
+def _batch(cfg):
+    b = input_batch_for(cfg, B, T, seed=0)
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+def _zeros_cache(model, batch, max_len):
+    return jax.tree.map(
+        lambda s: jnp.full(s.shape, -1, s.dtype)
+        if s.dtype == jnp.int32
+        else jnp.zeros(s.shape, s.dtype),
+        model.cache_shape(batch, max_len),
+    )
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.d_model <= 512 and cfg.num_layers <= 4
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss not finite"
+
+    step = jax.jit(make_train_step(model.loss, OptimizerConfig(total_steps=10)))
+    opt = init_opt_state(params)
+    params2, opt2, m2 = step(params, opt, batch)
+    assert bool(jnp.isfinite(m2["loss"]))
+    assert bool(jnp.isfinite(m2["grad_norm"])) and float(m2["grad_norm"]) > 0
+    # params must actually move
+    delta = sum(
+        float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(params2), jax.tree.leaves(params))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [a for a in ASSIGNED if get_smoke_config(a).family not in ("audio",)],
+)
+def test_prefill_decode_shapes(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    cache = _zeros_cache(model, B, 2 * T)
+    logits, cache = jax.jit(model.prefill)(params, batch, cache)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not np.isnan(np.asarray(logits)).any()
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache = jax.jit(model.decode_step)(
+        params, cache, tok, jnp.full((B,), T, jnp.int32)
+    )
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert not np.isnan(np.asarray(logits2)).any()
+
+
+@pytest.mark.parametrize("arch", ["minitron_4b", "rwkv6_7b", "zamba2_2p7b"])
+def test_decode_matches_prefill(arch):
+    """Greedy decode at position T must equal prefill over T+1 tokens."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size)
+    cache = _zeros_cache(model, B, 2 * T)
+    logits, cache = jax.jit(model.prefill)(params, {"tokens": toks}, cache)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    dec, _ = jax.jit(model.decode_step)(params, cache, nxt, jnp.full((B,), T, jnp.int32))
+
+    cache2 = _zeros_cache(model, B, 2 * T)
+    full, _ = jax.jit(model.prefill)(
+        params, {"tokens": jnp.concatenate([toks, nxt[:, None]], 1)}, cache2
+    )
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=6e-2, rtol=6e-2)
+
+
+def test_hubert_is_encoder_only():
+    cfg = get_smoke_config("hubert_xlarge")
+    assert cfg.causal is False
+    # masked positions see future context: flipping a late frame changes
+    # an early frame's logits (bidirectionality)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    emb = jax.random.normal(jax.random.PRNGKey(1), (1, T, cfg.d_model)) * 0.05
+    lab = jnp.zeros((1, T), jnp.int32)
+
+    def frame_logits(e):
+        # reuse loss path machinery via prefill-style forward: loss over
+        # one-hot targets is enough to propagate; instead check loss diff
+        loss, _ = model.loss(params, {"embeds": e, "labels": lab, "mask": jnp.ones((1, T))})
+        return loss
+
+    base = frame_logits(emb)
+    emb2 = emb.at[0, -1].add(1.0)
+    assert abs(float(frame_logits(emb2)) - float(base)) > 0

@@ -1,0 +1,88 @@
+"""End-to-end system behaviour: the paper's full story on one box.
+
+Plan a deployment with Algorithm 1, simulate it (Atlas vs Varuna),
+schedule BubbleTea prefills into the simulated bubbles, then run the
+actual JAX substrate (train + serve) on the same config family.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.bubbletea import (
+    BubbleTeaController,
+    InferenceModelSpec,
+    PrefillLatencyModel,
+    PrefillRequest,
+    utilization_with_prefills,
+)
+from repro.core.dc_selection import JobModel, algorithm1, best_plan
+from repro.core.simulator import GeoTopology, simulate
+from repro.core.simulator import testbed_spec as make_spec
+from repro.core import wan
+from repro.data.pipeline import DataConfig, make_batches
+from repro.models.transformer import build_model
+from repro.optim.optimizer import OptimizerConfig, init_opt_state, make_train_step
+from repro.serving.engine import Request, ServingEngine
+
+
+def test_end_to_end_geo_training_story():
+    # 1) plan the deployment with Algorithm 1 (what-if, no hardware)
+    job = JobModel(
+        t_fwd_ms=10.0,
+        act_bytes=2 * 10e-3 * wan.NODE_PAIR_CAP_GBPS * 1e9 / 8,
+        partition_param_bytes=800e6 * 2,
+        microbatches=12,
+    )
+    plan = best_plan(algorithm1(job, {"dc1": 96, "dc2": 96}, P=12, C=2))
+    assert plan.throughput > 0 and plan.gpus_used <= 192
+
+    # 2) simulate the chosen deployment: Atlas vs single-TCP Varuna
+    stage_dc = []
+    for i, (dc, n) in enumerate(sorted(plan.partitions.items())):
+        stage_dc += [i] * n
+    spec = make_spec(
+        hidden=4096, seq_len=4096, micro_batch=1, layers_per_stage=1,
+        layer_params=412e6, num_stages=len(stage_dc), microbatches=12,
+        stage_dc=stage_dc,
+    )
+    topo = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
+    atlas = simulate(spec, topo, policy="atlas", n_pipelines=2)
+    varuna = simulate(
+        spec, GeoTopology(wan_latency_ms=40.0, multi_tcp=False), policy="varuna"
+    )
+    assert atlas.iteration_ms < varuna.iteration_ms
+
+    # 3) BubbleTea fills the bubbles
+    lm = PrefillLatencyModel(InferenceModelSpec("llama3-8b", 8e9))
+    ctrl = BubbleTeaController(
+        [list(atlas.bubbles[g]) for g in sorted(atlas.bubbles)], lm
+    )
+    rng = np.random.default_rng(0)
+    t = 0.0
+    while t < atlas.iteration_ms:
+        t += rng.exponential(1.5)
+        ctrl.submit(PrefillRequest(int(t * 1e3), t, int(rng.choice([128, 256, 512]))))
+    busy = sum(iv.end - iv.start for ivs in atlas.busy.values() for iv in ivs)
+    total = atlas.iteration_ms * len(atlas.busy)
+    assert utilization_with_prefills(busy, total, ctrl) > atlas.utilization
+
+    # 4) the actual JAX substrate trains and serves the same config family
+    cfg = get_smoke_config("gpt_a")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    step = jax.jit(
+        make_train_step(
+            model.loss, OptimizerConfig(peak_lr=3e-3, warmup_steps=3, total_steps=15)
+        )
+    )
+    st = init_opt_state(params)
+    losses = []
+    for b in make_batches(cfg, DataConfig(batch_size=8, seq_len=64), num_steps=15):
+        params, st, met = step(params, st, {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(met["loss"]))
+    assert losses[-1] < losses[0]
+
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64)
+    out = eng.generate([Request(0, np.arange(8, dtype=np.int32), max_new_tokens=4)])
+    assert len(out[0].generated) == 4

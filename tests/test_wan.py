@@ -1,0 +1,51 @@
+"""WAN transport model — paper Table 1 / Fig 5 / §4.1."""
+import pytest
+
+from repro.core import wan
+
+
+def test_table1_single_tcp_bandwidth():
+    """Model must match the paper's measured Table 1 within 10%."""
+    for latency_ms, mbps in wan.PAPER_TABLE1.items():
+        got = wan.tcp_single_bw_gbps(latency_ms) * 1e3
+        assert abs(got - mbps) / mbps < 0.10, (latency_ms, got, mbps)
+
+
+def test_single_tcp_monotone_in_latency():
+    prev = float("inf")
+    for lat in (5, 10, 20, 30, 40, 80, 160):
+        bw = wan.tcp_single_bw_gbps(lat)
+        assert bw <= prev
+        prev = bw
+
+
+def test_multi_tcp_caps_at_5gbps():
+    """Fig 5: aggregate grows ~linearly then clamps at the node-pair cap,
+    irrespective of distance."""
+    for lat in (10, 40, 100, 200):
+        n = wan.connections_for_cap(lat)
+        assert wan.tcp_multi_bw_gbps(lat, n) == pytest.approx(wan.NODE_PAIR_CAP_GBPS)
+        # one fewer connection is below the cap
+        assert wan.tcp_multi_bw_gbps(lat, n - 1) < wan.NODE_PAIR_CAP_GBPS or n == 1
+    # scaling is linear pre-cap
+    assert wan.tcp_multi_bw_gbps(40, 2) == pytest.approx(
+        2 * wan.tcp_single_bw_gbps(40)
+    )
+
+
+def test_multi_tcp_speedup_magnitude():
+    """§4.1: ~250 Mbps -> 5 Gbps cuts transfer latency ~20x."""
+    single = wan.tcp_single_bw_gbps(47)  # ~0.25 Gbps
+    assert wan.NODE_PAIR_CAP_GBPS / single == pytest.approx(20, rel=0.15)
+
+
+def test_allreduce_formula():
+    # 2·P·(N-1)/N bytes at BW; N=2, 1GB, 100 Gbps
+    ms = wan.allreduce_ms(1e9, 2, 100.0)
+    assert ms == pytest.approx(1e9 * 8 / 100e9 * 1e3, rel=1e-6)
+    assert wan.allreduce_ms(1e9, 1, 100.0) == 0.0
+
+
+def test_activation_bytes():
+    # B·L·H·2 (fp16) — paper §3.2 footnote 2
+    assert wan.activation_bytes(1, 6144, 8192) == 6144 * 8192 * 2
