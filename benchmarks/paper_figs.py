@@ -6,11 +6,12 @@ simulation exactly as the paper does for its own §6.3–6.5 results.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Tuple
 
 import numpy as np
 
-from repro.core import wan
+from repro.core import topology, wan
 from repro.core.bubbletea import (
     BubbleTeaController,
     InferenceModelSpec,
@@ -245,8 +246,58 @@ def sec67_compression() -> List[Row]:
     return rows
 
 
+def hetero_topologies() -> List[Row]:
+    """Beyond the paper: Atlas vs Varuna on heterogeneous WANs (per-pair
+    latency/bandwidth matrices) — uniform, the paper's Azure testbed
+    distances, a skewed 3-DC WAN, hub-and-spoke, and a chain.  Also shows
+    Algorithm 1's topology-aware placement: on the skewed WAN the chosen
+    DC order routes the pipeline around the slow pair."""
+    rows: List[Row] = []
+    spec = _testbed(GPT_B, 16)
+    topos = {
+        "uniform40": GeoTopology(wan_latency_ms=40, multi_tcp=True),
+        "azure": topology.azure_testbed(),
+        "skewed": topology.skewed_3dc(),
+        "star": topology.star(3),
+        "chain": topology.chain(3),
+    }
+    for name, t in topos.items():
+        at = simulate(spec, t, policy="atlas", n_pipelines=3, validate=True)
+        va = simulate(spec, t, policy="varuna", validate=True)
+        rows.append((f"hetero/atlas_iter_ms_{name}", round(at.iteration_ms, 0), ""))
+        rows.append((f"hetero/varuna_over_atlas_{name}",
+                     round(va.iteration_ms / at.iteration_ms, 2), "x"))
+
+    # Algorithm-1 placement: uniform vs skewed topology, same fleet.  The
+    # fleet is sized so the pipeline MUST span all three DCs; availability
+    # order (dc2 first) would put the slow dc2<->dc0 pair on a boundary,
+    # and only the topology-aware search routes around it.
+    fleet = {"dc0": 8, "dc1": 8, "dc2": 10}
+    job_u = JobModel(
+        t_fwd_ms=10.0,
+        act_bytes=2 * 10e-3 * wan.NODE_PAIR_CAP_GBPS * 1e9 / 8,
+        partition_param_bytes=800e6 * 2,
+        microbatches=60,
+        topology=topology.TopologyMatrix.uniform(
+            3, wan_latency_ms=10.0, dc_names=("dc0", "dc1", "dc2")
+        ),
+    )
+    job_s = dataclasses.replace(job_u, topology=topology.skewed_3dc())
+    for tag, job, search in (
+        ("uniform", job_u, None),
+        ("skewed", job_s, None),
+        ("skewed_nosearch", job_s, False),
+    ):
+        best = best_plan(algorithm1(job, fleet, P=12, C=2, search_orders=search))
+        order = ">".join(d for d in best.dc_order if best.partitions.get(d, 0))
+        rows.append((f"hetero/alg1_iter_ms_{tag}", round(best.total_ms, 0),
+                     f"order={order}"))
+    return rows
+
+
 ALL = [
     table1_tcp,
+    hetero_topologies,
     fig2_dp_slowdown,
     fig3_pp_slowdown,
     fig5_multitcp,

@@ -14,8 +14,9 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import get_smoke_config
-from repro.core import wan
+from repro.core import topology, wan
 from repro.core.dc_selection import JobModel, algorithm1, best_plan
 from repro.core.simulator import GeoTopology, simulate, testbed_spec
 from repro.data.pipeline import DataConfig, make_batches
@@ -48,8 +49,16 @@ def main(steps: int = 30):
     )
     for policy, mt, D in (("gpipe", False, 1), ("varuna", False, 1), ("atlas", True, 2)):
         r = simulate(spec, GeoTopology(wan_latency_ms=40, multi_tcp=mt),
-                     policy=policy, n_pipelines=D)
+                     policy=policy, n_pipelines=D, validate=True)
         print(f"[sim] {policy:7s} multi_tcp={mt}  iter={r.iteration_ms:8.0f}ms "
+              f"util={r.utilization:.0%}")
+
+    # ---- 2b) same job on a heterogeneous (skewed) WAN ----
+    for name, topo in (("uniform", GeoTopology(wan_latency_ms=40)),
+                       ("skewed", topology.skewed_3dc()),
+                       ("azure", topology.azure_testbed())):
+        r = simulate(spec, topo, policy="atlas", n_pipelines=2, validate=True)
+        print(f"[sim] atlas on {name:8s} iter={r.iteration_ms:8.0f}ms "
               f"util={r.utilization:.0%}")
 
     # ---- 3) real cross-pod pipeline on emulated devices ----
@@ -57,7 +66,7 @@ def main(steps: int = 30):
     cfg = get_smoke_config("gpt_a")
     model = build_model(cfg)
     print(f"[pipeline] mesh={dict(mesh.shape)} arch={cfg.name} boundary=striped")
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         loss_fn = make_pipeline_loss(cfg, mesh, n_micro=4, boundary="striped")
         step_fn = jax.jit(

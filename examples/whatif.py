@@ -4,7 +4,9 @@ deployment required.
 
   PYTHONPATH=src python examples/whatif.py
 """
-from repro.core import wan
+import dataclasses
+
+from repro.core import topology, wan
 from repro.core.dc_selection import JobModel, algorithm1, best_plan, what_if
 
 
@@ -31,6 +33,16 @@ def main():
         print(f"{name:18s} {v['best_D']:3d} {v['gpus_used']:5d} "
               f"{v['total_ms']:9.0f} {v['throughput']:8.4f} "
               f"{v['cost_per_iteration']:8.4f}  {v['partitions']}")
+
+    # heterogeneous WAN: the same fleet on a skewed topology — the
+    # topology-aware placement search keeps the slow pair off the cut
+    print("\nSkewed-WAN placement (dc0<->dc2 is 150 ms single-TCP):")
+    fleet = {"dc0": 16, "dc1": 16, "dc2": 20}  # must span all three DCs
+    job_skew = dataclasses.replace(job, topology=topology.skewed_3dc())
+    for tag, search in (("topology-aware", None), ("availability-order", False)):
+        b = best_plan(algorithm1(job_skew, fleet, P=40, C=1, search_orders=search))
+        order = ">".join(d for d in b.dc_order if b.partitions.get(d, 0))
+        print(f"  {tag:18s} iter={b.total_ms:9.0f}ms  order={order}")
 
     # Fig 12-style sweep
     print("\nFig 12 sweep (dc1=600 fixed, dc2 grows):")

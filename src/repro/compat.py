@@ -1,0 +1,98 @@
+"""Version-compat shims for the JAX APIs this repo uses.
+
+The codebase targets the modern public API (``jax.shard_map`` with
+``axis_names=``/``check_vma=``, ``jax.set_mesh``); older installs (e.g.
+0.4.x) only ship ``jax.experimental.shard_map`` (``auto=``/``check_rep=``)
+and no mesh setter.  Import ``shard_map``/``set_mesh`` from here instead
+of from ``jax`` so both generations work unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Set
+
+import jax
+
+try:  # modern API (jax >= 0.6)
+    from jax import shard_map as _new_shard_map  # type: ignore[attr-defined]
+except ImportError:
+    _new_shard_map = None
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+
+# Old XLA cannot autodiff through a *partial-auto* manual region (fatal
+# IsManualSubgroup check in the SPMD partitioner); callers that want
+# GSPMD to keep handling some axes should fall back to fully-manual
+# (replicated over the would-be-auto axes) when this is False.
+PARTIAL_AUTO_SUPPORTED = _new_shard_map is not None
+
+
+def shard_map(
+    f,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    axis_names: Optional[Set[Any]] = None,
+    check_vma: bool = False,
+):
+    """``jax.shard_map`` signature on any jax.
+
+    ``axis_names`` is the set of mesh axes the body is *manual* over; the
+    remaining axes stay automatic (GSPMD).  On old jax this maps to
+    ``auto = mesh_axes - axis_names`` and ``check_rep = check_vma``.
+    """
+    if _new_shard_map is not None:
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return _new_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, **kwargs,
+        )
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - set(axis_names)
+    return _old_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma, auto=auto,
+    )
+
+
+_native_set_mesh = getattr(jax, "set_mesh", None)
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient (``with set_mesh(m): ...``).
+
+    Maps to ``jax.set_mesh`` when available; on old jax the ``Mesh``
+    object itself is the context manager for the global physical mesh.
+    """
+    if _native_set_mesh is not None:
+        return _native_set_mesh(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """Ambient abstract mesh, or None when this jax cannot provide one."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        return None
+    m = fn()
+    if m is None or getattr(m, "empty", False):
+        return None
+    return m
+
+
+def constrain_auto(x, spec):
+    """``with_sharding_constraint`` over the *auto* axes from inside a
+    partial-auto shard_map body.
+
+    Old jax/XLA cannot express a constraint inside a manual region (the
+    SPMD partitioner rejects it), so this degrades to a no-op there and
+    GSPMD keeps choosing the boundary layout itself.
+    """
+    am = get_abstract_mesh()
+    if am is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(am, spec)
+    )

@@ -17,15 +17,25 @@ factor (C) on the fill/drain paths.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import wan
+from repro.core.topology import TopologyMatrix
 
 
 @dataclasses.dataclass(frozen=True)
 class JobModel:
-    """Workload constants feeding Algorithm 1."""
+    """Workload constants feeding Algorithm 1.
+
+    ``topology`` (optional) switches the model from a uniform WAN to a
+    per-DC-pair ``TopologyMatrix``: every pipeline boundary then pays its
+    *own* link's serialization + latency, and Algorithm 1 searches DC
+    *orders* so the slow pairs stay off the stage boundaries.  DC names
+    resolve to matrix indices via ``topology.dc_names`` when present,
+    otherwise by position in the order under evaluation.
+    """
 
     t_fwd_ms: float  # forward time per partition per microbatch
     act_bytes: float  # activation/gradient bytes per boundary
@@ -36,15 +46,33 @@ class JobModel:
     wan_latency_ms: float = 40.0
     multi_tcp: bool = True
     intra_bw_gbps: float = wan.INTRA_DC_GBPS
+    topology: Optional[TopologyMatrix] = None
+
+    def pair_link(self, idx_a: int, idx_b: int) -> wan.Link:
+        if self.topology is not None:
+            return self.topology.link(idx_a, idx_b)
+        if idx_a == idx_b:
+            return wan.Link(wan.INTRA_DC_LATENCY_MS, self.intra_bw_gbps)
+        return wan.wan_link(self.wan_latency_ms, self.multi_tcp)
 
     @property
     def comm_compute_ratio(self) -> float:
-        """C — WAN serialization time of one boundary transfer over t_fwd."""
-        bw = (
-            wan.NODE_PAIR_CAP_GBPS
-            if self.multi_tcp
-            else wan.tcp_single_bw_gbps(self.wan_latency_ms)
-        )
+        """C — WAN serialization time of one boundary transfer over t_fwd.
+
+        Heterogeneous topologies size C from the *best* WAN pair: the
+        placement-order search keeps the slow pairs off the stage
+        boundaries, so the best link is what a cell actually crosses —
+        sizing from the bottleneck would inflate C until no DC can hold
+        a partition (every plan infeasible) on exactly the skewed WANs
+        the search handles."""
+        if self.topology is not None and self.topology.n_dcs > 1:
+            bw = self.topology.best_link().bw_gbps
+        else:
+            bw = (
+                wan.NODE_PAIR_CAP_GBPS
+                if self.multi_tcp
+                else wan.tcp_single_bw_gbps(self.wan_latency_ms)
+            )
         ser_ms = self.act_bytes * 8.0 / (bw * 1e9) * 1e3
         return ser_ms / self.t_fwd_ms
 
@@ -58,6 +86,7 @@ class PlanEntry:
     total_ms: float
     throughput: float  # pipelines·microbatches / ms  (relative units)
     gpus_used: int
+    dc_order: Tuple[str, ...] = ()  # placement order the stages follow
 
 
 def _stage_dc_from_partitions(partitions: Dict[str, int], dc_order: Sequence[str]) -> List[int]:
@@ -73,7 +102,13 @@ def get_latency_pp(
     dc_order: Sequence[str],
     dp_per_cell: int,
 ) -> float:
-    """Closed-form pipeline latency with temporal bandwidth sharing."""
+    """Closed-form pipeline latency with temporal bandwidth sharing.
+
+    Heterogeneity-aware: each WAN boundary pays its *own* link's
+    serialization and propagation latency, and the steady-state slot is
+    set by the slowest boundary (every microbatch must traverse every
+    boundary; channels are independent, so the pipeline's rate is the
+    bottleneck channel's)."""
     stage_dc = _stage_dc_from_partitions(partitions, dc_order)
     P = len(stage_dc)
     if P == 0:
@@ -84,26 +119,47 @@ def get_latency_pp(
     t_r = t_f if job.recompute else 0.0
     D = max(1, dp_per_cell)
 
-    bw = (
-        wan.NODE_PAIR_CAP_GBPS
-        if job.multi_tcp
-        else wan.tcp_single_bw_gbps(job.wan_latency_ms)
+    # map a position in dc_order to a topology DC index: by name when the
+    # matrix carries names (unknown names are an error — a silent
+    # positional fallback would price the wrong link), by position in the
+    # given order otherwise
+    if job.topology is not None and job.topology.dc_names:
+        idx = [job.topology.index_of(dc) for dc in dc_order]
+    else:
+        idx = list(range(len(dc_order)))
+
+    intra_bw = (
+        job.topology.intra_bw_gbps if job.topology is not None else job.intra_bw_gbps
     )
-    ser = job.act_bytes * 8.0 / (bw * 1e9) * 1e3  # one-pipe serialization
-    hop = job.act_bytes * (D - 1) / D * 8.0 / (job.intra_bw_gbps * 1e9) * 1e3
+    hop = job.act_bytes * (D - 1) / D * 8.0 / (intra_bw * 1e9) * 1e3
+    intra_ms = job.act_bytes * 8.0 / (intra_bw * 1e9) * 1e3
+
     # temporal sharing: channel occupancy ser/D; scatter/gather hops stream
-    # with the WAN send and only add delivery delay
-    ser_cell = ser / D + 2.0 * hop
-    n_wan = sum(1 for a, b in zip(stage_dc, stage_dc[1:]) if a != b)
-    intra_ms = job.act_bytes * 8.0 / (job.intra_bw_gbps * 1e9) * 1e3
-    n_intra = (P - 1) - n_wan
+    # with the WAN send and only add delivery delay.  Activations ride the
+    # forward a -> b link, gradients the reverse b -> a link (asymmetric
+    # topologies price them differently, like the event simulator).
+    wan_fill_ms = 0.0  # per-boundary fill terms (activation direction)
+    wan_drain_ms = 0.0  # per-boundary drain terms (gradient direction)
+    max_ser = 0.0  # slowest channel's per-microbatch occupancy
+    n_intra = 0
+    for a, b in zip(stage_dc, stage_dc[1:]):
+        if a == b:
+            n_intra += 1
+            continue
+        fwd = job.pair_link(idx[a], idx[b])
+        rev = job.pair_link(idx[b], idx[a])
+        ser_f = job.act_bytes * 8.0 / (fwd.bw_gbps * 1e9) * 1e3
+        ser_r = job.act_bytes * 8.0 / (rev.bw_gbps * 1e9) * 1e3
+        wan_fill_ms += ser_f / D + 2.0 * hop + fwd.latency_ms
+        wan_drain_ms += ser_r / D + 2.0 * hop + rev.latency_ms
+        max_ser = max(max_ser, ser_f, ser_r)
 
     # steady-state slot: per-microbatch GPU work vs per-microbatch WAN
-    # channel occupancy (the cell's channel carries D transfers of ser/D
-    # each per microbatch index => ser per microbatch per boundary)
-    slot = max(t_f + t_r + t_b, ser)
-    fill = P * t_f + n_wan * (ser_cell + job.wan_latency_ms) + n_intra * intra_ms
-    drain = P * (t_r + t_b) + n_wan * (ser_cell + job.wan_latency_ms) + n_intra * intra_ms
+    # channel occupancy of the bottleneck boundary (the cell's channel
+    # carries D transfers of ser/D each per microbatch index => ser)
+    slot = max(t_f + t_r + t_b, max_ser)
+    fill = P * t_f + wan_fill_ms + n_intra * intra_ms
+    drain = P * (t_r + t_b) + wan_drain_ms + n_intra * intra_ms
     return fill + (M - 1) * slot + drain
 
 
@@ -111,6 +167,21 @@ def get_latency_dp(job: JobModel, n_replicas: int) -> float:
     """All-reduce across the DP replicas of one layer — intra-DC ring
     (§4.2: replicas of a layer always live in the same DC)."""
     return wan.allreduce_ms(job.partition_param_bytes, n_replicas, job.intra_bw_gbps)
+
+
+def _pack_partitions(
+    num_gpu: Dict[str, int], order: Sequence[str], P: int, gpus_per_partition: int
+) -> Tuple[Dict[str, int], int]:
+    part_left = P
+    partitions: Dict[str, int] = {}
+    for dc in order:
+        pp_gpu = num_gpu[dc] // gpus_per_partition
+        assigned = min(part_left, pp_gpu)
+        partitions[dc] = assigned
+        part_left -= assigned
+        if part_left == 0:
+            break
+    return partitions, part_left
 
 
 def algorithm1(
@@ -121,8 +192,20 @@ def algorithm1(
     C: Optional[int] = None,
     D_max: Optional[int] = None,
     dc_order: Optional[Sequence[str]] = None,
+    search_orders: Optional[bool] = None,
 ) -> List[PlanEntry]:
-    """Paper Algorithm 1. Returns one PlanEntry per DP-cell count D."""
+    """Paper Algorithm 1. Returns one PlanEntry per DP-cell count D.
+
+    With a heterogeneous *named* ``job.topology`` every DC *placement
+    order* is evaluated per D and the fastest wins — on a skewed WAN the
+    slow pair must not become a stage boundary, which a fixed
+    availability-sorted order cannot guarantee.  The search needs DC
+    names on the matrix (fleet keys must resolve to fixed topology
+    sites; permuting a positional mapping would re-site the fleet) and
+    is exhaustive, so it caps at 6 DCs — pass ``search_orders=False``
+    with an explicit ``dc_order`` beyond that.
+    """
+    explicit_order = dc_order is not None
     if dc_order is None:  # default: decreasing GPU availability (§4.5)
         dc_order = sorted(num_gpu, key=lambda d: -num_gpu[d])
     if C is None:
@@ -130,28 +213,44 @@ def algorithm1(
     total_gpus = sum(num_gpu.values())
     if D_max is None:
         D_max = max(1, total_gpus // (C * P))
+    named = (
+        job.topology is not None
+        and job.topology.dc_names
+        and all(dc in job.topology.dc_names for dc in dc_order)
+    )
+    if search_orders is None:
+        # an explicitly supplied order (cost, distance, ... — §4.5) is a
+        # caller decision; only auto-search the default availability order
+        search_orders = bool(named) and not explicit_order and len(dc_order) <= 6
+    if search_orders:
+        if not named:
+            raise ValueError(
+                "search_orders needs a topology with dc_names covering every "
+                "fleet DC (a positional mapping cannot be permuted)"
+            )
+        if len(dc_order) > 6:
+            raise ValueError(
+                f"search_orders is exhaustive and capped at 6 DCs "
+                f"(got {len(dc_order)}); pass an explicit dc_order instead"
+            )
+        orders = [tuple(o) for o in itertools.permutations(dc_order)]
+    else:
+        orders = [tuple(dc_order)]
 
     plans: List[PlanEntry] = []
     for D in range(1, D_max + 1):
-        part_left = P
-        partitions: Dict[str, int] = {}
-        for dc in dc_order:
-            pp_gpu = num_gpu[dc] // (D * C)
-            assigned = min(part_left, pp_gpu)
-            partitions[dc] = assigned
-            part_left -= assigned
-            if part_left == 0:
-                break
-        if part_left > 0:
-            pp_time = math.inf
-            ar = 0.0
-        else:
-            pp_time = get_latency_pp(job, partitions, dc_order, C)
-            ar = get_latency_dp(job, D * C)
-        total = pp_time + ar
-        thr = (D * C * job.microbatches) / total if math.isfinite(total) else 0.0
-        plans.append(
-            PlanEntry(
+        best: Optional[PlanEntry] = None
+        for order in orders:
+            partitions, part_left = _pack_partitions(num_gpu, order, P, D * C)
+            if part_left > 0:
+                pp_time = math.inf
+                ar = 0.0
+            else:
+                pp_time = get_latency_pp(job, partitions, order, C)
+                ar = get_latency_dp(job, D * C)
+            total = pp_time + ar
+            thr = (D * C * job.microbatches) / total if math.isfinite(total) else 0.0
+            entry = PlanEntry(
                 D=D,
                 partitions=dict(partitions),
                 pp_time_ms=pp_time,
@@ -159,8 +258,11 @@ def algorithm1(
                 total_ms=total,
                 throughput=thr,
                 gpus_used=D * C * sum(partitions.values()),
+                dc_order=order,
             )
-        )
+            if best is None or entry.total_ms < best.total_ms:
+                best = entry
+        plans.append(best)
     return plans
 
 

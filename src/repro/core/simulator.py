@@ -28,6 +28,7 @@ import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import wan
+from repro.core.topology import TopologyMatrix
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +46,11 @@ class PipelineSpec:
 
 @dataclasses.dataclass(frozen=True)
 class GeoTopology:
+    """Backward-compatible *uniform* topology: one latency/transport for
+    every DC pair.  Heterogeneous WANs use ``repro.core.topology
+    .TopologyMatrix``, which exposes the same ``link``/``intra_bw_gbps``
+    interface; ``simulate`` and the Atlas scheduler accept either."""
+
     wan_latency_ms: float = 40.0
     multi_tcp: bool = True
     intra_bw_gbps: float = wan.INTRA_DC_GBPS
@@ -54,6 +60,19 @@ class GeoTopology:
         if dc_a == dc_b:
             return wan.Link(self.intra_latency_ms, self.intra_bw_gbps)
         return wan.wan_link(self.wan_latency_ms, self.multi_tcp)
+
+    def is_wan(self, dc_a: int, dc_b: int) -> bool:
+        return dc_a != dc_b
+
+    def matrix(self, n_dcs: int) -> "TopologyMatrix":
+        """The equivalent (uniform) ``TopologyMatrix``."""
+        return TopologyMatrix.uniform(
+            n_dcs,
+            wan_latency_ms=self.wan_latency_ms,
+            multi_tcp=self.multi_tcp,
+            intra_bw_gbps=self.intra_bw_gbps,
+            intra_latency_ms=self.intra_latency_ms,
+        )
 
 
 @dataclasses.dataclass
@@ -89,11 +108,12 @@ def _priority(kind: str, micro: int, pipeline: int) -> Tuple:
 
 def simulate(
     spec: PipelineSpec,
-    topo: GeoTopology,
+    topo,  # GeoTopology | repro.core.topology.TopologyMatrix
     *,
     policy: str = "varuna",
     n_pipelines: int = 1,
     dp_replicas_for_allreduce: int = 1,
+    validate: bool = False,
 ) -> SimResult:
     """Simulate one minibatch (iteration) of ``n_pipelines`` DP pipelines.
 
@@ -101,10 +121,16 @@ def simulate(
     the pipelines (temporal bandwidth sharing); the baselines run
     identical, independent schedules and compete for nothing (each has its
     own node-pair allocation — the paper's *spatial* sharing).
+
+    ``topo`` is anything exposing ``link(dc_a, dc_b)`` and
+    ``intra_bw_gbps`` — the uniform ``GeoTopology`` or a heterogeneous
+    ``TopologyMatrix``.  ``validate=True`` runs the physical-invariant
+    checker (``repro.core.validate``) on the result before returning.
     """
     assert policy in ("gpipe", "megatron", "varuna", "atlas")
     if policy == "atlas":
-        return _simulate_atlas(spec, topo, n_pipelines, dp_replicas_for_allreduce)
+        res = _simulate_atlas(spec, topo, n_pipelines, dp_replicas_for_allreduce)
+        return _maybe_validate(res, spec, policy, validate)
     P, M = spec.num_stages, spec.microbatches
     temporal = False
     recompute = spec.recompute and policy in ("gpipe", "varuna", "atlas")
@@ -133,9 +159,10 @@ def simulate(
         propagation latency delays delivery but does not hold the link —
         back-to-back transfers pipeline through the WAN.
         """
-        link = topo.link(spec.stage_dc[s_from], spec.stage_dc[s_to])
+        dc_a, dc_b = spec.stage_dc[s_from], spec.stage_dc[s_to]
+        link = topo.link(dc_a, dc_b)
         ser = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
-        if link.bw_gbps >= topo.intra_bw_gbps:  # intra-DC hop
+        if dc_a == dc_b:  # intra-DC hop
             return ser, link.latency_ms
         if temporal:
             ser = ser / D
@@ -274,7 +301,7 @@ def simulate(
         bubbles[g] = gaps
     util = busy_sum / (total * len(gpu_free)) if total > 0 else 0.0
 
-    return SimResult(
+    res = SimResult(
         iteration_ms=total,
         busy=busy,
         utilization=util,
@@ -282,11 +309,20 @@ def simulate(
         allreduce_ms=ar,
         n_pipelines=D,
     )
+    return _maybe_validate(res, spec, policy, validate)
+
+
+def _maybe_validate(res: SimResult, spec: PipelineSpec, policy: str, validate: bool) -> SimResult:
+    if validate:
+        from repro.core import validate as _validate
+
+        _validate.check_sim_result(res, spec, policy=policy)
+    return res
 
 
 def _simulate_atlas(
     spec: PipelineSpec,
-    topo: GeoTopology,
+    topo,  # GeoTopology | TopologyMatrix
     n_pipelines: int,
     dp_replicas_for_allreduce: int,
 ) -> SimResult:

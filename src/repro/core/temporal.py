@@ -62,15 +62,12 @@ class Schedule:
 
 
 def is_wan_boundary(spec, topo, b: int) -> bool:
-    return (
-        topo.link(spec.stage_dc[b], spec.stage_dc[b + 1]).bw_gbps
-        < topo.intra_bw_gbps
-    )
+    return spec.stage_dc[b] != spec.stage_dc[b + 1]
 
 
 def atlas_schedule(
     spec,  # repro.core.simulator.PipelineSpec
-    topo,  # repro.core.simulator.GeoTopology
+    topo,  # simulator.GeoTopology | topology.TopologyMatrix
     n_pipelines: int,
     *,
     inflight_cap: Optional[int] = None,
@@ -80,22 +77,23 @@ def atlas_schedule(
     t_b = spec.bwd_mult * t_f
     cap = inflight_cap if inflight_cap is not None else P
 
-    def boundary_times(b: int) -> Tuple[float, float]:
-        """(channel occupancy, delivery delay) for boundary b -> b+1.
+    def boundary_times(b: int, direction: str = "act") -> Tuple[float, float]:
+        """(channel occupancy, delivery delay) for boundary b.
 
-        The intra-DC scatter/gather hops stream with the WAN send: they
-        delay delivery but never hold the shared WAN channel."""
-        link = topo.link(spec.stage_dc[b], spec.stage_dc[b + 1])
+        Direction matters on asymmetric topologies: activations ride the
+        b -> b+1 link, gradients the reverse b+1 -> b link (matching the
+        event simulator's transfer_times).  The intra-DC scatter/gather
+        hops stream with the WAN send: they delay delivery but never
+        hold the shared WAN channel."""
+        dc_a, dc_b = spec.stage_dc[b], spec.stage_dc[b + 1]
+        link = topo.link(dc_a, dc_b) if direction == "act" else topo.link(dc_b, dc_a)
         ser = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
-        if link.bw_gbps >= topo.intra_bw_gbps:
+        if dc_a == dc_b:
             return ser, link.latency_ms
         hop = (spec.act_bytes * (D - 1) / D * 8.0) / (topo.intra_bw_gbps * 1e9) * 1e3
         return ser / D, link.latency_ms + 2.0 * hop
 
-    is_wan = [
-        topo.link(spec.stage_dc[b], spec.stage_dc[b + 1]).bw_gbps < topo.intra_bw_gbps
-        for b in range(P - 1)
-    ]
+    is_wan = [spec.stage_dc[b] != spec.stage_dc[b + 1] for b in range(P - 1)]
 
     gpu_free = {(p, s): 0.0 for p in range(D) for s in range(P)}
     chan_free: Dict[Tuple[int, str], float] = {}
@@ -103,7 +101,10 @@ def atlas_schedule(
     # by one cell-transfer slot so transfer demands interleave instead of
     # bursting the shared channel (Fig 6(b): DP-2 starts at 1, DP-1 at 5).
     wan_sers = [
-        boundary_times(b)[0] for b in range(P - 1) if is_wan_boundary(spec, topo, b)
+        boundary_times(b, d)[0]
+        for b in range(P - 1)
+        if is_wan_boundary(spec, topo, b)
+        for d in ("act", "grad")
     ]
     slot = max(wan_sers) if wan_sers else 0.0
     # dependency-readiness of tasks: time activation/grad is available
@@ -186,7 +187,7 @@ def atlas_schedule(
 
 
 def _emit_transfer(transfers, chan_free, boundary_times, avail, p, b, direction, m, ready, is_wan):
-    ser, delay = boundary_times(b)
+    ser, delay = boundary_times(b, direction)
     if is_wan[b]:
         start = max(ready, chan_free.get((b, direction), 0.0))
         chan_free[(b, direction)] = start + ser

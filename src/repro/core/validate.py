@@ -1,0 +1,292 @@
+"""Schedule-invariant checker — differential testing for the schedulers.
+
+Any schedule the repo produces (a reactive ``SimResult`` from
+``repro.core.simulator.simulate`` or a precomputed Atlas ``Schedule`` from
+``repro.core.temporal``) must obey the physics of the machine it models:
+
+  * a GPU never executes two tasks at once;
+  * every (pipeline, stage) runs exactly M forwards and M backwards, with
+    the documented durations (backward = bwd_mult·t_fwd, + recompute);
+  * backward-after-forward causality per microbatch, and stage-order
+    causality along the pipeline (an activation cannot be consumed before
+    it was produced; a gradient cannot flow upstream before the
+    downstream backward finished);
+  * the in-flight memory cap holds (forwards never run more than ``cap``
+    ahead of backwards on a stage);
+  * WAN transfers serialize per (boundary, direction) channel and occupy
+    it for exactly the bytes/bandwidth serialization time (temporal
+    sharing: 1/D of it);
+  * utilization ∈ [0, 1] and the reported bubbles exactly tile the
+    complement of busy time;
+  * the precomputed Atlas schedule and the event-driven simulator agree
+    on iteration time.
+
+Violations raise ``InvariantViolation`` (an ``AssertionError``, so these
+work directly as pytest helpers).  ``simulate(..., validate=True)`` runs
+the checker as an opt-in runtime assertion mode.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import wan
+
+EPS = 1e-6
+
+
+class InvariantViolation(AssertionError):
+    """A schedule broke a physical invariant."""
+
+
+def _fail(msg: str, *ctx) -> None:
+    raise InvariantViolation(msg + (f" :: {ctx}" if ctx else ""))
+
+
+# ---------------------------------------------------------------------------
+# SimResult checks (any policy)
+# ---------------------------------------------------------------------------
+
+
+def _default_cap(spec, policy: Optional[str]) -> Optional[int]:
+    if spec.inflight_cap is not None:
+        return spec.inflight_cap
+    if policy == "gpipe":
+        return spec.microbatches
+    if policy in ("megatron", "varuna", "atlas"):
+        return spec.num_stages
+    return None
+
+
+def check_sim_result(
+    res,
+    spec,
+    *,
+    policy: Optional[str] = None,
+    inflight_cap: Optional[int] = None,
+) -> None:
+    """Assert the physical invariants on a ``simulator.SimResult``."""
+    P, M = spec.num_stages, spec.microbatches
+    t_f = spec.t_fwd_ms
+    t_b = spec.bwd_mult * t_f
+    total = res.iteration_ms
+    cap = inflight_cap if inflight_cap is not None else _default_cap(spec, policy)
+
+    if not (-EPS <= res.utilization <= 1.0 + EPS):
+        _fail("utilization outside [0, 1]", res.utilization)
+    if total < -EPS:
+        _fail("negative iteration time", total)
+    if set(res.busy) != {(p, s) for p in range(res.n_pipelines) for s in range(P)}:
+        _fail("busy map does not cover pipelines x stages")
+
+    busy_sum = 0.0
+    for g, ivs in res.busy.items():
+        ivs = sorted(ivs, key=lambda iv: iv.start)
+        by_kind: Dict[str, List] = {"fwd": [], "bwd": []}
+        prev_end = 0.0
+        for iv in ivs:
+            if iv.start < -EPS or iv.end > total + EPS:
+                _fail("interval outside [0, iteration]", g, iv)
+            if iv.end <= iv.start + EPS:
+                _fail("empty/negative interval", g, iv)
+            if iv.start < prev_end - EPS:
+                _fail("GPU executes two tasks at once", g, iv, prev_end)
+            prev_end = iv.end
+            busy_sum += iv.end - iv.start
+            if iv.kind not in by_kind:
+                _fail("unknown task kind", g, iv)
+            by_kind[iv.kind].append(iv)
+            dur = iv.end - iv.start
+            if iv.kind == "fwd":
+                if abs(dur - t_f) > EPS:
+                    _fail("forward duration != t_fwd", g, iv, t_f)
+            else:
+                if not (abs(dur - t_b) < EPS or abs(dur - (t_b + t_f)) < EPS):
+                    _fail("backward duration != t_bwd (+recompute)", g, iv, t_b)
+        if len(by_kind["fwd"]) != M or len(by_kind["bwd"]) != M:
+            _fail("stage did not run M forwards + M backwards", g,
+                  len(by_kind["fwd"]), len(by_kind["bwd"]))
+        micros_f = sorted(iv.micro for iv in by_kind["fwd"])
+        micros_b = sorted(iv.micro for iv in by_kind["bwd"])
+        if micros_f != list(range(M)) or micros_b != list(range(M)):
+            _fail("microbatch indices not a permutation of 0..M-1", g)
+
+        # backward-after-forward per microbatch
+        f_end = {iv.micro: iv.end for iv in by_kind["fwd"]}
+        for iv in by_kind["bwd"]:
+            if iv.start < f_end[iv.micro] - EPS:
+                _fail("backward before its forward", g, iv)
+
+        # memory cap: completed forwards minus completed backwards at any
+        # forward's start must leave room for it
+        if cap is not None:
+            for iv in by_kind["fwd"]:
+                in_flight = sum(1 for o in by_kind["fwd"] if o.end <= iv.start + EPS) \
+                    - sum(1 for o in by_kind["bwd"] if o.end <= iv.start + EPS)
+                if in_flight >= cap:
+                    _fail("in-flight cap exceeded", g, iv, in_flight, cap)
+
+    # stage-order causality (transfers only delay, never advance)
+    for p in range(res.n_pipelines):
+        for s in range(P - 1):
+            fa = {iv.micro: iv for iv in res.busy[(p, s)] if iv.kind == "fwd"}
+            fb = {iv.micro: iv for iv in res.busy[(p, s + 1)] if iv.kind == "fwd"}
+            ba = {iv.micro: iv for iv in res.busy[(p, s)] if iv.kind == "bwd"}
+            bb = {iv.micro: iv for iv in res.busy[(p, s + 1)] if iv.kind == "bwd"}
+            for m in range(M):
+                if fb[m].start < fa[m].end - EPS:
+                    _fail("activation consumed before produced", p, s, m)
+                if ba[m].start < bb[m].end - EPS:
+                    _fail("gradient consumed before produced", p, s, m)
+
+    # bubbles tile the complement of busy
+    for g, ivs in res.busy.items():
+        gaps = []
+        cur = 0.0
+        for iv in sorted(ivs, key=lambda iv: iv.start):
+            if iv.start > cur + 1e-9:
+                gaps.append((cur, iv.start))
+            cur = max(cur, iv.end)
+        if cur < total - 1e-9:
+            gaps.append((cur, total))
+        rec = res.bubbles.get(g)
+        if rec is None or len(rec) != len(gaps) or any(
+            abs(a - c) > 1e-6 or abs(b - d) > 1e-6
+            for (a, b), (c, d) in zip(gaps, rec)
+        ):
+            _fail("bubbles do not tile the complement of busy", g)
+
+    n_gpus = len(res.busy)
+    if total > 0:
+        want_util = busy_sum / (total * n_gpus)
+        if abs(want_util - res.utilization) > 1e-6:
+            _fail("utilization inconsistent with busy intervals",
+                  res.utilization, want_util)
+
+
+# ---------------------------------------------------------------------------
+# Atlas Schedule checks (transfers + channels)
+# ---------------------------------------------------------------------------
+
+
+def check_schedule(sched, spec, topo, *, inflight_cap: Optional[int] = None) -> None:
+    """Assert the §4.4 invariants on a precomputed ``temporal.Schedule``."""
+    P, M = spec.num_stages, spec.microbatches
+    D = sched.num_pipelines
+    t_f = spec.t_fwd_ms
+    t_b = spec.bwd_mult * t_f
+
+    tasks_by_gpu: Dict[Tuple[int, int], List] = {}
+    task_index: Dict[Tuple[str, int, int, int], object] = {}
+    for t in sched.tasks:
+        if not (0 <= t.stage < P and 0 <= t.pipeline < D and 0 <= t.micro < M):
+            _fail("task outside spec ranges", t)
+        tasks_by_gpu.setdefault((t.pipeline, t.stage), []).append(t)
+        task_index[(t.kind, t.pipeline, t.stage, t.micro)] = t
+
+    for g, ts in tasks_by_gpu.items():
+        ts.sort(key=lambda t: t.start)
+        prev = 0.0
+        for t in ts:
+            if t.start < prev - EPS:
+                _fail("GPU executes two tasks at once (schedule)", g, t)
+            prev = t.end
+            dur = t.end - t.start
+            want = t_f if t.kind == "fwd" else (
+                t_b + (t_f if (spec.recompute and t.stage != P - 1) else 0.0)
+            )
+            if abs(dur - want) > EPS:
+                _fail("task duration mismatch", g, t, want)
+        nf = sum(1 for t in ts if t.kind == "fwd")
+        nb = sum(1 for t in ts if t.kind == "bwd")
+        if nf != M or nb != M:
+            _fail("stage did not run M forwards + M backwards (schedule)", g, nf, nb)
+
+    cap = inflight_cap if inflight_cap is not None else (
+        spec.inflight_cap if spec.inflight_cap is not None else P
+    )
+    for g, ts in tasks_by_gpu.items():
+        fwds = [t for t in ts if t.kind == "fwd"]
+        bwds = [t for t in ts if t.kind == "bwd"]
+        for t in fwds:
+            in_flight = sum(1 for o in fwds if o.start <= t.start + EPS) \
+                - sum(1 for o in bwds if o.end <= t.start + EPS)
+            if in_flight > cap:
+                _fail("in-flight cap exceeded (schedule)", g, t, in_flight, cap)
+
+    # transfers: channel serialization, bandwidth, and dependency edges
+    chan: Dict[Tuple[int, str], List] = {}
+    for tr in sched.transfers:
+        b = tr.boundary
+        dc_a, dc_b = spec.stage_dc[b], spec.stage_dc[b + 1]
+        # activations ride b -> b+1, gradients the reverse link (matters
+        # on asymmetric topologies)
+        link = topo.link(dc_a, dc_b) if tr.direction == "act" else topo.link(dc_b, dc_a)
+        is_wan_b = dc_a != dc_b
+        ser_one = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
+        ser = ser_one / D if is_wan_b else ser_one
+        occupancy = tr.end - tr.start
+        if occupancy < ser - EPS:
+            _fail("transfer faster than link bandwidth allows", tr, ser)
+        if tr.arrive < tr.end + link.latency_ms - EPS:
+            _fail("transfer arrives before propagation latency", tr, link)
+        src_kind, src_stage = ("fwd", b) if tr.direction == "act" else ("bwd", b + 1)
+        dst_kind, dst_stage = ("fwd", b + 1) if tr.direction == "act" else ("bwd", b)
+        src = task_index.get((src_kind, tr.pipeline, src_stage, tr.micro))
+        dst = task_index.get((dst_kind, tr.pipeline, dst_stage, tr.micro))
+        if src is None or dst is None:
+            _fail("transfer without producer/consumer task", tr)
+        if tr.start < src.end - EPS:
+            _fail("transfer starts before its producer finished", tr, src)
+        if dst.start < tr.arrive - EPS:
+            _fail("consumer starts before transfer arrived", tr, dst)
+        if is_wan_b:
+            chan.setdefault((b, tr.direction), []).append(tr)
+
+    for key, trs in chan.items():
+        trs.sort(key=lambda tr: tr.start)
+        prev = trs[0]
+        for tr in trs[1:]:
+            if tr.start < prev.end - EPS:
+                _fail("two transfers share a WAN channel at once", key, prev, tr)
+            prev = tr
+
+    last = max([t.end for t in sched.tasks] + [tr.arrive for tr in sched.transfers])
+    if abs(last - sched.makespan) > EPS:
+        _fail("makespan inconsistent with tasks/transfers", last, sched.makespan)
+
+
+# ---------------------------------------------------------------------------
+# differential: precomputed Atlas schedule vs event-driven simulation
+# ---------------------------------------------------------------------------
+
+
+def check_atlas_consistency(spec, topo, n_pipelines: int = 1, dp_replicas: int = 1) -> None:
+    """The precomputed §4.4 schedule and the event-driven simulator must
+    report the same iteration time (the simulator's atlas policy wraps the
+    schedule; this guards the wrapper AND re-validates both artifacts)."""
+    from repro.core import simulator, temporal
+
+    sched = temporal.atlas_schedule(
+        spec, topo, n_pipelines, inflight_cap=spec.inflight_cap
+    )
+    check_schedule(sched, spec, topo)
+    res = simulator.simulate(
+        spec, topo, policy="atlas", n_pipelines=n_pipelines,
+        dp_replicas_for_allreduce=dp_replicas,
+    )
+    check_sim_result(res, spec, policy="atlas")
+    ar = wan.allreduce_ms(
+        spec.stage_param_bytes, dp_replicas, topo.intra_bw_gbps
+    )
+    if abs((sched.makespan + ar) - res.iteration_ms) > EPS:
+        _fail("precomputed schedule and simulator disagree on iteration time",
+              sched.makespan + ar, res.iteration_ms)
+
+
+def check_policy(spec, topo, policy: str, n_pipelines: int = 1):
+    """Simulate one policy with validation on; returns the SimResult."""
+    from repro.core import simulator
+
+    res = simulator.simulate(spec, topo, policy=policy, n_pipelines=n_pipelines)
+    check_sim_result(res, spec, policy=policy)
+    return res

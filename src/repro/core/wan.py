@@ -86,19 +86,34 @@ def bandwidth_trace_gbps(
     decreasing with distance (long-haul paths are dedicated/underutilized)
     and emit a deterministic AR(1) trace around the mean.
     """
+    link = Link(latency_ms, NODE_PAIR_CAP_GBPS if multi_tcp else tcp_single_bw_gbps(latency_ms))
+    return bandwidth_trace_for_link(
+        link, hours=hours, samples_per_hour=samples_per_hour, seed=seed
+    )
+
+
+def bandwidth_trace_for_link(
+    link: Link,
+    *,
+    hours: float = 24.0,
+    samples_per_hour: int = 60,
+    seed: int = 0,
+) -> "list[float]":
+    """Fig-7 stability trace for an arbitrary (heterogeneous) link: a
+    deterministic AR(1) fluctuation around the link's bandwidth with CoV
+    decreasing in distance (~2.3% short-haul, ~0.8% long-haul)."""
     import math
     import random
 
-    mean = NODE_PAIR_CAP_GBPS if multi_tcp else tcp_single_bw_gbps(latency_ms)
-    cov = 0.023 * math.exp(-latency_ms / 80.0) + 0.008  # ~2.3% short, ~0.8% long
-    rng = random.Random(seed * 100003 + int(latency_ms))
+    cov = 0.023 * math.exp(-link.latency_ms / 80.0) + 0.008
+    rng = random.Random(seed * 100003 + int(link.latency_ms))
     n = int(hours * samples_per_hour)
     out = []
     x = 0.0
     x_std = 0.1 / math.sqrt(1 - 0.9**2)  # stationary std of the AR(1)
     for _ in range(n):
         x = 0.9 * x + 0.1 * rng.gauss(0.0, 1.0)
-        out.append(mean * (1.0 + cov * x / x_std))
+        out.append(link.bw_gbps * (1.0 + cov * x / x_std))
     return out
 
 

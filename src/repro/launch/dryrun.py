@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import ARCHS, canon
 from repro.launch import shapes as shp
 from repro.launch.mesh import make_production_mesh
@@ -164,7 +165,7 @@ def build_lowerable(arch: str, shape: str, multi_pod: bool, boundary: str = "str
     kind = shp.SHAPES[shape]["kind"]
     opt_cfg = OptimizerConfig()
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params_sds = _sds_params(model, mesh, fsdp=fsdp)
         if kind == "train":
             if multi_pod:
@@ -205,8 +206,32 @@ def build_lowerable(arch: str, shape: str, multi_pod: bool, boundary: str = "str
         return mesh, fn, args, cfg
 
 
+def wan_projection(dcn_bytes: float, topo) -> Dict[str, Any]:
+    """Project the measured inter-pod DCN bytes onto a WAN topology: the
+    per-iteration transfer time if the pod boundary ran over the given
+    (possibly heterogeneous) WAN instead of the datacenter DCN.  Uses the
+    bottleneck pair — the paper's placement rule puts the cut on the best
+    pair, but capacity planning must survive the worst."""
+    from repro.core.topology import TopologyMatrix
+
+    if isinstance(topo, str):
+        from repro.core.topology import preset
+
+        topo = preset(topo)
+    worst = topo.bottleneck()
+    best = topo.best_link()
+    return {
+        "topology": topo.name,
+        "worst_pair_s": worst.transfer_ms(dcn_bytes) / 1e3,
+        "best_pair_s": best.transfer_ms(dcn_bytes) / 1e3,
+        "worst_pair_gbps": worst.bw_gbps,
+        "best_pair_gbps": best.bw_gbps,
+    }
+
+
 def run_one(arch: str, shape: str, mesh_name: str, boundary: str = "striped",
-            fsdp: Optional[bool] = None, relayout: bool = False) -> Dict[str, Any]:
+            fsdp: Optional[bool] = None, relayout: bool = False,
+            wan_preset: Optional[str] = None) -> Dict[str, Any]:
     multi_pod = mesh_name == "multi"
     ok, why = shp.shape_supported(arch, shape)
     if not ok:
@@ -215,7 +240,7 @@ def run_one(arch: str, shape: str, mesh_name: str, boundary: str = "striped",
     t0 = time.time()
     mesh, fn, args, cfg = build_lowerable(arch, shape, multi_pod, boundary,
                                           fsdp=fsdp, relayout=relayout)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = fn.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -276,6 +301,8 @@ def run_one(arch: str, shape: str, mesh_name: str, boundary: str = "striped",
         "params": cfg.param_count(),
         "active_params": n_active,
     }
+    if wan_preset:
+        result["wan"] = wan_projection(coll["dcn"], wan_preset)
     return result
 
 
@@ -289,6 +316,10 @@ def main():
                     help="paper-faithful model-axis-only param sharding")
     ap.add_argument("--relayout", action="store_true",
                     help="head-aligned single-pod mesh re-layout (§Perf C)")
+    ap.add_argument("--wan-preset", default=None,
+                    choices=["azure", "skewed", "star", "chain"],
+                    help="also project the inter-pod DCN bytes onto this "
+                         "WAN topology (repro.core.topology presets)")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--out", default=OUT_DIR)
     args = ap.parse_args()
@@ -310,7 +341,8 @@ def main():
                 try:
                     res = run_one(arch, shape, mesh_name, args.boundary,
                                   fsdp=False if args.no_fsdp else None,
-                                  relayout=args.relayout)
+                                  relayout=args.relayout,
+                                  wan_preset=args.wan_preset)
                 except Exception as e:
                     res = {"arch": arch, "shape": shape, "mesh": mesh_name,
                            "boundary": args.boundary, "status": "error",

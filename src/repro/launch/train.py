@@ -18,6 +18,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import canon, get_config, get_smoke_config
 from repro.ckpt.checkpoint import AsyncCheckpointer
 from repro.data.pipeline import DataConfig, make_batches
@@ -56,7 +57,7 @@ def main(argv=None):
 
     opt_cfg = OptimizerConfig(peak_lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
                               total_steps=args.steps)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = model.init(jax.random.PRNGKey(args.seed))
         p_sh = make_param_shardings(jax.eval_shape(lambda: params), mesh)
         params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, p_sh)

@@ -12,6 +12,7 @@ Layout conventions:
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional, Tuple
 
 import jax
@@ -40,6 +41,23 @@ def set_attention_impl(impl: str) -> None:
 
 def get_attention_impl() -> str:
     return _IMPL
+
+
+@contextlib.contextmanager
+def force_impl(impl: str):
+    """Pin the attention impl for the duration (trace-time decision).
+
+    The pallas flash kernel ignores q_pos/kv_pos, so any caller whose
+    positions are not dense 0..T-1 (e.g. serving's left-padded prefill,
+    pad slots at position -1) must trace under ``force_impl("xla")`` to
+    keep the position mask."""
+    global _IMPL
+    prev = _IMPL
+    set_attention_impl(impl)
+    try:
+        yield
+    finally:
+        _IMPL = prev
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import attention
 from repro.models.modules import ModelConfig
 from repro.models.transformer import Model, build_model
 
@@ -58,26 +59,58 @@ class ServingEngine:
         self.max_batch = max_batch
         self.max_len = max_len
         self._prefill = jax.jit(self.model.prefill)
+
+        def _prefill_masked(params, batch, cache):
+            # ragged batches carry pad slots at position -1; the pallas
+            # flash kernel ignores positions, so pin the masking (xla)
+            # sdpa at trace time (the decode kernel DOES mask kv_pos<0,
+            # so decode needs no pinning).
+            with attention.force_impl("xla"):
+                return self.model.prefill(params, batch, cache)
+
+        self._prefill_masked = jax.jit(_prefill_masked)
         self._decode = jax.jit(self.model.decode_step)
+        # recurrent families (mamba/rwkv/hybrid) scan every input token
+        # into their state — pad slots cannot be masked by positions, so
+        # ragged batches must be served per-request (see generate/serve)
+        self._recurrent = cfg.rwkv is not None or cfg.family in ("ssm", "hybrid")
 
     def prefill_batch(self, requests: List[Request]) -> Tuple[Any, jax.Array, jax.Array]:
-        """Right-aligned batched prefill. Returns (cache, next_tokens, pos)."""
+        """Right-aligned batched prefill. Returns (cache, next_tokens, pos).
+
+        Pad slots carry position -1 — ``sdpa``/the decode kernel treat
+        negative positions as empty and mask them, so for attention
+        models a short prompt's output does not depend on its batch
+        neighbours; each request then decodes from its own prompt
+        length.  Recurrent families cannot mask pads this way — their
+        ragged batches are split upstream (``generate``/``serve``)."""
         assert len(requests) <= self.max_batch
         B = len(requests)
         T = max(len(r.prompt) for r in requests)
         toks = np.zeros((B, T), np.int32)
+        pos2d = np.full((B, T), -1, np.int32)
         for i, r in enumerate(requests):
-            toks[i, T - len(r.prompt) :] = r.prompt  # right-align
+            L = len(r.prompt)
+            toks[i, T - L:] = r.prompt  # right-align
+            pos2d[i, T - L:] = np.arange(L)
+        positions = jnp.asarray(pos2d)
+        if self.cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
         cache = zeros_cache(self.model, B, self.max_len)
+        prefill = self._prefill_masked if self._ragged(requests) else self._prefill
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)}, cache)
+        logits, cache = prefill(
+            self.params,
+            {"tokens": jnp.asarray(toks), "positions": positions},
+            cache,
+        )
         logits.block_until_ready()
         wall = (time.perf_counter() - t0) * 1e3
         for r in requests:
             r.ttft_ms = wall
             r.generated = []
         nxt = self._sample(logits, requests)
-        pos = jnp.full((B,), T, jnp.int32)
+        pos = jnp.asarray([len(r.prompt) for r in requests], jnp.int32)
         for i, r in enumerate(requests):
             r.generated.append(int(nxt[i]))
         return cache, nxt, pos
@@ -104,7 +137,23 @@ class ServingEngine:
         scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-3)
         return jax.random.categorical(key, scaled).astype(jnp.int32)
 
+    def _ragged(self, requests: List[Request]) -> bool:
+        T = max(len(r.prompt) for r in requests)
+        return any(len(r.prompt) != T for r in requests)
+
+    def split_ragged_recurrent(self, requests: List[Request], serve_fn) -> bool:
+        """Recurrent families scan pads into their state (positions can't
+        mask them): serve such ragged batches per-request via ``serve_fn``.
+        Returns True when the batch was handled that way."""
+        if self._recurrent and self._ragged(requests):
+            for r in requests:
+                serve_fn([r])
+            return True
+        return False
+
     def generate(self, requests: List[Request]) -> List[Request]:
+        if self.split_ragged_recurrent(requests, self.generate):
+            return requests
         cache, tok, pos = self.prefill_batch(requests)
         steps = max(r.max_new_tokens for r in requests) - 1
         self.decode_batch(requests, cache, tok, pos, steps)
@@ -120,6 +169,8 @@ class SplitwiseCluster:
         self.kv_bytes_moved = 0
 
     def serve(self, requests: List[Request]) -> List[Request]:
+        if self.prefill_engine.split_ragged_recurrent(requests, self.serve):
+            return requests
         cache, tok, pos = self.prefill_engine.prefill_batch(requests)
         # KV handoff (Splitwise): device-to-device copy; count the bytes
         self.kv_bytes_moved += sum(

@@ -12,9 +12,18 @@ def _tol(dtype):
     return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
 
 
-@pytest.mark.parametrize("T,Hq,Hkv,D", [(128, 4, 4, 64), (256, 8, 2, 64), (128, 6, 1, 32)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("causal", [True, False])
+# full shape sweep in f32; bf16 tolerance is covered on one shape per
+# causal mode (each cell is a separate pallas-interpret compile)
+@pytest.mark.parametrize("T,Hq,Hkv,D,dtype,causal", [
+    (128, 4, 4, 64, jnp.float32, True),
+    (128, 4, 4, 64, jnp.float32, False),
+    (128, 8, 2, 64, jnp.float32, True),
+    (128, 8, 2, 64, jnp.float32, False),
+    (128, 6, 1, 32, jnp.float32, True),
+    (128, 6, 1, 32, jnp.float32, False),
+    (128, 4, 4, 64, jnp.bfloat16, True),
+    (128, 8, 2, 64, jnp.bfloat16, False),
+])
 def test_flash_attention(T, Hq, Hkv, D, dtype, causal):
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     B = 2
@@ -28,8 +37,12 @@ def test_flash_attention(T, Hq, Hkv, D, dtype, causal):
     )
 
 
-@pytest.mark.parametrize("S,Hq,Hkv,D,window", [(256, 4, 4, 64, None), (512, 8, 2, 64, 128), (256, 4, 1, 32, 64)])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,Hq,Hkv,D,window,dtype", [
+    (256, 4, 4, 64, None, jnp.float32),
+    (256, 8, 2, 64, 128, jnp.float32),
+    (256, 4, 1, 32, 64, jnp.float32),
+    (256, 4, 4, 64, None, jnp.bfloat16),
+])
 def test_decode_attention(S, Hq, Hkv, D, window, dtype):
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
     B = 3
@@ -59,7 +72,7 @@ def test_rmsnorm(shape, dtype):
     )
 
 
-@pytest.mark.parametrize("T,H,D,chunk", [(128, 2, 64, 32), (96, 4, 32, 32), (256, 1, 64, 64)])
+@pytest.mark.parametrize("T,H,D,chunk", [(128, 2, 64, 32), (96, 4, 32, 32), (128, 1, 64, 64)])
 def test_wkv6_vs_sequential(T, H, D, chunk):
     ks = jax.random.split(jax.random.PRNGKey(4), 5)
     B = 2
@@ -71,6 +84,33 @@ def test_wkv6_vs_sequential(T, H, D, chunk):
     o = ops.wkv6(r, k, v, logw, u, chunk=chunk)
     o_ref = ref.wkv6_ref(r, k, v, logw, u)
     np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.slow  # default 128/256 block sizes need larger (slower) shapes
+def test_flash_attention_multiblock_default_blocks():
+    """Cross-block online-softmax carry with the kernels' DEFAULT block
+    sizes (the fast-tier sweep exercises multi-block grids via explicit
+    64-wide blocks)."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (2, 256, 4, 64))
+    k = jax.random.normal(ks[1], (2, 256, 2, 64))
+    v = jax.random.normal(ks[2], (2, 256, 2, 64))
+    o = ops.flash_attention(q, k, v, causal=True)  # default blocks
+    o_ref = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.slow
+def test_decode_attention_multiblock_default_blocks():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 64))
+    k = jax.random.normal(ks[1], (2, 512, 2, 64))
+    v = jax.random.normal(ks[2], (2, 512, 2, 64))
+    kv_pos = jnp.broadcast_to(jnp.arange(512)[None], (2, 512)).astype(jnp.int32)
+    q_pos = jnp.full((2, 1), 511, jnp.int32)
+    o = ops.decode_attention(q, k, v, q_pos, kv_pos)  # default block_kv
+    o_ref = ref.decode_attention_ref(q, k, v, q_pos, kv_pos)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5, rtol=2e-5)
 
 
 def test_flash_attention_fallback_on_ragged_shapes():

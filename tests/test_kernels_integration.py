@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # compile-heavy: excluded from tier-1
+
 from repro.configs import get_smoke_config
 from repro.models import attention
 from repro.models.transformer import build_model

@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # compile-heavy: excluded from tier-1
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -29,6 +31,7 @@ import jax, jax.numpy as jnp
 from repro.configs import get_smoke_config
 from repro.models.transformer import build_model
 from repro.parallel.pipeline import make_pipeline_loss
+from repro import compat
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 """
 
@@ -41,7 +44,7 @@ m = build_model(cfg)
 params = m.init(jax.random.PRNGKey(0))
 batch = {{"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)}}
 ref, _ = jax.jit(m.loss)(params, batch)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     s = jax.jit(make_pipeline_loss(cfg, mesh, n_micro=4, boundary="striped"))(params, batch)
     d = jax.jit(make_pipeline_loss(cfg, mesh, n_micro=4, boundary="direct"))(params, batch)
 assert abs(float(s) - float(ref)) < 3e-2, (float(s), float(ref))
@@ -57,7 +60,7 @@ cfg = get_smoke_config("minitron_4b")
 m = build_model(cfg)
 params = m.init(jax.random.PRNGKey(0))
 batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)}
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     g = jax.jit(jax.grad(make_pipeline_loss(cfg, mesh, n_micro=4)))(params, batch)
 g0 = jax.jit(jax.grad(lambda p, b: m.loss(p, b)[0]))(params, batch)
 num = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)-b.astype(jnp.float32)))) for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(g0)))
@@ -80,7 +83,7 @@ m = build_model(cfg)
 params_sds = jax.eval_shape(m.init, jax.random.PRNGKey(0))
 batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
 res = {}
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     for mode in ("striped", "direct"):
         lf = make_pipeline_loss(cfg, mesh, n_micro=4, boundary=mode)
         compiled = jax.jit(lf).lower(params_sds, batch).compile()
@@ -105,7 +108,7 @@ for arch in ("deepseek_v2_lite_16b", "zamba2_2p7b"):
     params = m.init(jax.random.PRNGKey(0))
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)}
     ref, _ = jax.jit(m.loss)(params, batch)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         s = jax.jit(make_pipeline_loss(cfg, mesh, n_micro=4))(params, batch)
     assert abs(float(s) - float(ref)) < 3e-2, (arch, float(s), float(ref))
 print("OK")

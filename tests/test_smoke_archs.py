@@ -10,6 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # compile-heavy: excluded from tier-1
+
 from repro.configs import ARCHS, get_smoke_config
 from repro.data.pipeline import input_batch_for
 from repro.models.transformer import build_model

@@ -19,7 +19,6 @@ from repro.optim.optimizer import (
     lr_at,
     make_train_step,
 )
-from repro.serving.engine import Request, ServingEngine, SplitwiseCluster
 
 
 # ---------------------------------------------------------------- optimizer
@@ -54,6 +53,7 @@ def test_weight_decay_only_on_matrices():
     assert float(jnp.max(p2["w"])) < 1.0  # decayed
 
 
+@pytest.mark.slow  # compiles a full train step
 def test_training_learns():
     cfg = get_smoke_config("gpt_a")
     m = build_model(cfg)
@@ -68,6 +68,7 @@ def test_training_learns():
     assert losses[-1] < losses[0] - 0.3, losses[::8]
 
 
+@pytest.mark.slow  # compiles two train-step variants
 def test_grad_accumulation_matches_full_batch():
     cfg = get_smoke_config("gpt_a")
     m = build_model(cfg)
@@ -145,46 +146,5 @@ def test_save_load_pytree_shapes_checked():
             load_pytree(p, {"w": np.ones((3, 3))})
 
 
-# ---------------------------------------------------------------- serving
-
-
-def test_serving_greedy_deterministic():
-    cfg = get_smoke_config("gpt_a")
-    m = build_model(cfg)
-    params = m.init(jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=64)
-    r1 = eng.generate([Request(0, np.arange(8, dtype=np.int32), max_new_tokens=6)])
-    r2 = eng.generate([Request(0, np.arange(8, dtype=np.int32), max_new_tokens=6)])
-    assert r1[0].generated == r2[0].generated
-    assert len(r1[0].generated) == 6
-    assert r1[0].ttft_ms > 0 and len(r1[0].tbt_ms) == 5
-
-
-def test_splitwise_matches_monolithic():
-    """Prefill/decode disaggregation must not change the tokens (§5)."""
-    cfg = get_smoke_config("gpt_a")
-    m = build_model(cfg)
-    params = m.init(jax.random.PRNGKey(0))
-    prompt = (np.arange(10) * 3 % cfg.vocab_size).astype(np.int32)
-    mono = ServingEngine(cfg, params, 2, 64).generate(
-        [Request(0, prompt, max_new_tokens=5)]
-    )[0]
-    split = SplitwiseCluster(cfg, params, 2, 64).serve(
-        [Request(0, prompt, max_new_tokens=5)]
-    )[0]
-    assert mono.generated == split.generated
-
-
-def test_serving_batch_isolation():
-    """A request's output must not depend on its batch neighbours."""
-    cfg = get_smoke_config("gpt_a")
-    m = build_model(cfg)
-    params = m.init(jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, max_batch=3, max_len=64)
-    p0 = (np.arange(9) % cfg.vocab_size).astype(np.int32)
-    alone = eng.generate([Request(0, p0.copy(), max_new_tokens=4)])[0].generated
-    other = (np.arange(6) * 7 % cfg.vocab_size).astype(np.int32)
-    together = eng.generate(
-        [Request(1, p0.copy(), max_new_tokens=4), Request(2, other, max_new_tokens=4)]
-    )[0].generated
-    assert alone == together
+# serving lifecycle tests live in tests/test_serving_engine.py (one
+# shared engine per module keeps the prefill/decode jits compiled once)

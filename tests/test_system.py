@@ -7,6 +7,7 @@ actual JAX substrate (train + serve) on the same config family.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.core.bubbletea import (
@@ -26,6 +27,7 @@ from repro.optim.optimizer import OptimizerConfig, init_opt_state, make_train_st
 from repro.serving.engine import Request, ServingEngine
 
 
+@pytest.mark.slow  # trains + serves a real (smoke) model
 def test_end_to_end_geo_training_story():
     # 1) plan the deployment with Algorithm 1 (what-if, no hardware)
     job = JobModel(

@@ -1,0 +1,268 @@
+"""TopologyMatrix: heterogeneous per-DC-pair WAN model + threading.
+
+Covers the PR's acceptance criterion: a skewed 3-DC matrix (one slow
+pair) must change both the DC placement Algorithm 1 picks and the
+simulated iteration time, relative to the uniform topology.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import topology as tp
+from repro.core import wan
+from repro.core.dc_selection import JobModel, algorithm1, best_plan
+from repro.core.simulator import GeoTopology, PipelineSpec, simulate
+from repro.core.simulator import testbed_spec as make_testbed_spec
+
+
+def _spec(stage_dc, M=8):
+    return make_testbed_spec(
+        hidden=8192, seq_len=6144, micro_batch=1, layers_per_stage=1,
+        layer_params=1.2e9, num_stages=len(stage_dc), microbatches=M,
+        stage_dc=stage_dc,
+    )
+
+
+# ------------------------------------------------------------- construction
+
+
+def test_uniform_matrix_matches_geotopology():
+    geo = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
+    mat = geo.matrix(3)
+    for a in range(3):
+        for b in range(3):
+            assert geo.link(a, b) == mat.link(a, b)
+    spec = _spec([0, 0, 1, 2])
+    for policy in ("gpipe", "megatron", "varuna", "atlas"):
+        r_geo = simulate(spec, geo, policy=policy, n_pipelines=2)
+        r_mat = simulate(spec, mat, policy=policy, n_pipelines=2)
+        assert r_geo.iteration_ms == pytest.approx(r_mat.iteration_ms, rel=1e-12)
+
+
+def test_from_latency_uses_tcp_law():
+    lat = [[0, 10, 95], [10, 0, 40], [95, 40, 0]]
+    m = tp.TopologyMatrix.from_latency(lat, multi_tcp=False)
+    assert m.link(0, 1).bw_gbps == pytest.approx(wan.tcp_single_bw_gbps(10))
+    assert m.link(0, 2).bw_gbps == pytest.approx(wan.tcp_single_bw_gbps(95))
+    assert m.link(0, 2).bw_gbps < m.link(0, 1).bw_gbps
+    m2 = tp.TopologyMatrix.from_latency(lat, multi_tcp=True)
+    assert m2.link(0, 2).bw_gbps == pytest.approx(wan.NODE_PAIR_CAP_GBPS)
+
+
+def test_asymmetric_links_allowed():
+    links = {
+        (0, 1): wan.Link(latency_ms=10.0, bw_gbps=5.0),
+        (1, 0): wan.Link(latency_ms=60.0, bw_gbps=1.0),
+    }
+    m = tp.TopologyMatrix.from_links(2, links)
+    assert m.link(0, 1).latency_ms == 10.0
+    assert m.link(1, 0).latency_ms == 60.0
+    # one-directional entries fall back to the reverse pair
+    m2 = tp.TopologyMatrix.from_links(2, {(0, 1): wan.Link(20.0, 3.0)})
+    assert m2.link(1, 0) == m2.link(0, 1)
+
+
+def test_intra_dc_link():
+    m = tp.TopologyMatrix.uniform(3)
+    assert m.link(1, 1).bw_gbps == wan.INTRA_DC_GBPS
+    assert m.link(1, 1).latency_ms == wan.INTRA_DC_LATENCY_MS
+    assert not m.is_wan(1, 1) and m.is_wan(0, 1)
+
+
+def test_presets_shape_and_skew():
+    az = tp.azure_testbed()
+    assert az.n_dcs == 4 and az.dc_names[0] == "us-east"
+    assert az.link(0, 3).latency_ms > az.link(0, 1).latency_ms  # asia >> us
+
+    sk = tp.skewed_3dc()
+    slow = sk.link(0, 2)
+    assert slow.latency_ms > sk.link(0, 1).latency_ms
+    assert slow.bw_gbps < sk.link(0, 1).bw_gbps  # single-TCP collapse
+    assert sk.bottleneck() == slow
+
+    st = tp.star(4, hub_ms=15.0)
+    assert st.link(1, 2).latency_ms == pytest.approx(30.0)  # via hub
+    assert st.link(0, 2).latency_ms == pytest.approx(15.0)
+
+    ch = tp.chain(4, hop_ms=20.0)
+    assert ch.link(0, 3).latency_ms == pytest.approx(60.0)
+    assert ch.link(0, 3).bw_gbps < ch.link(0, 1).bw_gbps  # distant = single-TCP
+
+    assert tp.preset("skewed").name == "skewed-3dc"
+    assert tp.preset("uniform3").n_dcs == 3
+
+
+# ---------------------------------------------------------- acceptance test
+
+
+def test_skewed_topology_changes_iteration_time():
+    """One slow pair must slow the pipeline iff the pipeline crosses it."""
+    uniform = tp.TopologyMatrix.uniform(3, wan_latency_ms=10.0)
+    skewed = tp.skewed_3dc(fast_ms=10.0, slow_ms=150.0)
+    crossing = _spec([0, 2, 1])  # boundary (0,2) is the slow pair
+    avoiding = _spec([0, 1, 2])  # boundaries (0,1), (1,2) are fast
+    for policy in ("varuna", "atlas"):
+        t_cross_u = simulate(crossing, uniform, policy=policy, n_pipelines=2,
+                             validate=True).iteration_ms
+        t_cross_s = simulate(crossing, skewed, policy=policy, n_pipelines=2,
+                             validate=True).iteration_ms
+        t_avoid_s = simulate(avoiding, skewed, policy=policy, n_pipelines=2,
+                             validate=True).iteration_ms
+        assert t_cross_s > 1.5 * t_cross_u  # skew hurts when crossed
+        assert t_avoid_s < t_cross_s  # and re-placement recovers it
+        assert t_avoid_s == pytest.approx(
+            simulate(avoiding, uniform, policy=policy, n_pipelines=2).iteration_ms,
+            rel=0.01,
+        )
+
+
+def test_skewed_topology_changes_dc_placement():
+    """Algorithm 1 must pick a different DC order on the skewed WAN (the
+    slow dc0<->dc2 pair stays off the stage boundaries)."""
+    fleet = {"dc0": 8, "dc1": 8, "dc2": 10}  # forces a 3-DC span
+    base = JobModel(
+        t_fwd_ms=10.0,
+        act_bytes=2 * 10e-3 * wan.NODE_PAIR_CAP_GBPS * 1e9 / 8,
+        partition_param_bytes=800e6 * 2,
+        microbatches=24,
+    )
+    job_u = dataclasses.replace(
+        base,
+        topology=tp.TopologyMatrix.uniform(3, 10.0, dc_names=("dc0", "dc1", "dc2")),
+    )
+    job_s = dataclasses.replace(base, topology=tp.skewed_3dc())
+
+    plan_u = best_plan(algorithm1(job_u, fleet, P=12, C=2))
+    plan_s = best_plan(algorithm1(job_s, fleet, P=12, C=2))
+    plan_s_fixed = best_plan(algorithm1(job_s, fleet, P=12, C=2, search_orders=False))
+
+    # the skewed plan keeps dc1 between dc0 and dc2
+    used = [d for d in plan_s.dc_order if plan_s.partitions.get(d, 0)]
+    assert used.index("dc1") == 1, plan_s.dc_order
+    # placement differs from the availability order the uniform job uses
+    assert plan_s.dc_order != plan_s_fixed.dc_order
+    # and topology-aware placement is dramatically faster than ignoring it
+    assert plan_s.total_ms < 0.5 * plan_s_fixed.total_ms
+    # on the uniform WAN the re-placement buys (essentially) nothing
+    assert plan_u.total_ms == pytest.approx(plan_s.total_ms, rel=0.05)
+
+
+def test_hetero_topology_in_closed_form_matches_simulator_direction():
+    """get_latency_pp must rank placements the same way the event-driven
+    simulator does on a skewed WAN."""
+    sk = tp.skewed_3dc()
+    job = JobModel(
+        t_fwd_ms=10.0,
+        act_bytes=2 * 10e-3 * wan.NODE_PAIR_CAP_GBPS * 1e9 / 8,
+        partition_param_bytes=0.0,
+        microbatches=8,
+        topology=sk,
+    )
+    part = {"dc0": 1, "dc1": 1, "dc2": 1}
+    from repro.core.dc_selection import get_latency_pp
+
+    t_good = get_latency_pp(job, part, ("dc0", "dc1", "dc2"), 1)
+    t_bad = get_latency_pp(job, part, ("dc0", "dc2", "dc1"), 1)
+    assert t_good < t_bad
+
+    sim_good = simulate(_spec([0, 1, 2]), sk, policy="varuna").iteration_ms
+    sim_bad = simulate(_spec([0, 2, 1]), sk, policy="varuna").iteration_ms
+    assert sim_good < sim_bad
+
+
+def test_asymmetric_links_price_gradients_on_reverse_link():
+    """Activations ride a->b, gradients b->a: scheduler, simulator and
+    validator must all agree on an asymmetric matrix."""
+    from repro.core import temporal
+    from repro.core import validate as V
+
+    links = {
+        (0, 1): wan.Link(latency_ms=10.0, bw_gbps=5.0),   # act direction
+        (1, 0): wan.Link(latency_ms=10.0, bw_gbps=0.5),   # grad direction, 10x slower
+    }
+    topo = tp.TopologyMatrix.from_links(2, links, name="asym2")
+    spec = PipelineSpec(num_stages=2, microbatches=4, t_fwd_ms=10.0,
+                        act_bytes=1e8, stage_dc=(0, 1))
+    D = 2
+    sched = temporal.atlas_schedule(spec, topo, D)
+    acts = [tr for tr in sched.transfers if tr.direction == "act"]
+    grads = [tr for tr in sched.transfers if tr.direction == "grad"]
+    ser_act = 1e8 * 8 / (5.0e9) * 1e3 / D
+    ser_grad = 1e8 * 8 / (0.5e9) * 1e3 / D
+    assert acts[0].end - acts[0].start == pytest.approx(ser_act, rel=1e-9)
+    assert grads[0].end - grads[0].start == pytest.approx(ser_grad, rel=1e-9)
+    V.check_schedule(sched, spec, topo)
+    V.check_atlas_consistency(spec, topo, n_pipelines=D)
+    # the event-driven baseline prices the slow reverse link too: the
+    # asymmetric matrix must land strictly between all-fast and all-slow
+    fast = tp.TopologyMatrix.from_links(
+        2, {(0, 1): links[(0, 1)], (1, 0): links[(0, 1)]}, name="fast2")
+    slow = tp.TopologyMatrix.from_links(
+        2, {(0, 1): links[(1, 0)], (1, 0): links[(1, 0)]}, name="slow2")
+    t_fast = simulate(spec, fast, policy="varuna").iteration_ms
+    t_asym = simulate(spec, topo, policy="varuna").iteration_ms
+    t_slow = simulate(spec, slow, policy="varuna").iteration_ms
+    assert t_fast < t_asym < t_slow
+
+
+def test_explicit_dc_order_disables_auto_search():
+    """A caller-supplied §4.5 ordering (e.g. by cost) must be respected,
+    not silently permuted away."""
+    fleet = {"dc0": 8, "dc1": 8, "dc2": 10}
+    job = JobModel(
+        t_fwd_ms=10.0,
+        act_bytes=2 * 10e-3 * wan.NODE_PAIR_CAP_GBPS * 1e9 / 8,
+        partition_param_bytes=800e6 * 2,
+        microbatches=24,
+        topology=tp.skewed_3dc(),
+    )
+    order = ("dc0", "dc2", "dc1")  # deliberately crosses the slow pair
+    plans = algorithm1(job, fleet, P=12, C=2, dc_order=order)
+    assert all(p.dc_order == order for p in plans)
+    # opting in still searches, and finds something strictly better
+    searched = best_plan(algorithm1(job, fleet, P=12, C=2, dc_order=order,
+                                    search_orders=True))
+    assert searched.total_ms < best_plan(plans).total_ms
+    # positional (unnamed) topologies refuse the search explicitly
+    import dataclasses as dc
+
+    job_unnamed = dc.replace(job, topology=tp.star(3))
+    with pytest.raises(ValueError):
+        algorithm1(job_unnamed, fleet, P=12, C=2, search_orders=True)
+
+
+def test_default_C_stays_feasible_on_skewed_topology():
+    """Auto-derived C must come from the best WAN pair — sizing it from
+    the 150 ms single-TCP bottleneck would make every plan infeasible on
+    exactly the skewed WANs the placement search handles."""
+    job = JobModel(
+        t_fwd_ms=10.0,
+        act_bytes=2 * 10e-3 * wan.NODE_PAIR_CAP_GBPS * 1e9 / 8,
+        partition_param_bytes=800e6 * 2,
+        microbatches=60,
+        topology=tp.skewed_3dc(),
+    )
+    best = best_plan(algorithm1(job, {"dc0": 8, "dc1": 8, "dc2": 10}, P=12))
+    assert best.throughput > 0
+    assert best.total_ms != float("inf")
+    # and the chosen order still routes around the slow dc0<->dc2 pair
+    used = [d for d in best.dc_order if best.partitions.get(d, 0)]
+    assert used.index("dc1") == 1
+
+
+def test_wan_projection_helper():
+    from repro.launch.dryrun import wan_projection
+
+    out = wan_projection(1e9, "skewed")
+    assert out["topology"] == "skewed-3dc"
+    assert out["worst_pair_s"] > out["best_pair_s"] > 0
+
+
+def test_bandwidth_trace_for_link():
+    slow = wan.wan_link(150.0, False)
+    fast = wan.wan_link(10.0, True)
+    tr_slow = wan.bandwidth_trace_for_link(slow, seed=3)
+    tr_fast = wan.bandwidth_trace_for_link(fast, seed=3)
+    assert abs(sum(tr_slow) / len(tr_slow) - slow.bw_gbps) < 0.1 * slow.bw_gbps
+    # longer path fluctuates less (paper Fig 7)
+    assert wan.trace_cov(tr_slow) < wan.trace_cov(tr_fast)

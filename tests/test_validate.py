@@ -1,0 +1,147 @@
+"""Schedule-invariant checker: positive runs on all four policies and
+negative runs on deliberately corrupted schedules."""
+import copy
+
+import pytest
+
+from repro.core import temporal
+from repro.core import topology as tp
+from repro.core import validate as V
+from repro.core.simulator import GeoTopology, PipelineSpec, simulate
+
+POLICIES = ("gpipe", "megatron", "varuna", "atlas")
+
+
+def _spec(stage_dc=(0, 0, 1, 2), M=8, **kw):
+    return PipelineSpec(
+        num_stages=len(stage_dc), microbatches=M, t_fwd_ms=10.0,
+        act_bytes=1.5e8, stage_dc=tuple(stage_dc), stage_param_bytes=8e8,
+        **kw,
+    )
+
+
+TOPOS = {
+    "uniform": GeoTopology(wan_latency_ms=40.0, multi_tcp=True),
+    "skewed": tp.skewed_3dc(),
+    "azure": tp.azure_testbed(),
+}
+
+
+# ---------------------------------------------------------------- positive
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("topo_name", list(TOPOS))
+def test_all_policies_pass_invariants(policy, topo_name):
+    spec = _spec()
+    res = simulate(spec, TOPOS[topo_name], policy=policy, n_pipelines=2,
+                   validate=True)
+    V.check_sim_result(res, spec, policy=policy)  # pytest-helper form
+    assert 0.0 <= res.utilization <= 1.0
+
+
+def test_validate_flag_equivalent_to_helper():
+    spec = _spec()
+    topo = TOPOS["uniform"]
+    r1 = simulate(spec, topo, policy="varuna", validate=True)
+    r2 = simulate(spec, topo, policy="varuna")
+    assert r1.iteration_ms == r2.iteration_ms
+
+
+def test_atlas_schedule_passes_and_agrees_with_simulator():
+    spec = _spec()
+    for topo in TOPOS.values():
+        sched = temporal.atlas_schedule(spec, topo, 2)
+        V.check_schedule(sched, spec, topo)
+        V.check_atlas_consistency(spec, topo, n_pipelines=2, dp_replicas=2)
+
+
+def test_inflight_cap_respected_by_atlas():
+    spec = _spec(M=8, inflight_cap=2)
+    topo = TOPOS["uniform"]
+    sched = temporal.atlas_schedule(spec, topo, 1, inflight_cap=2)
+    V.check_schedule(sched, spec, topo, inflight_cap=2)
+
+
+# ---------------------------------------------------------------- negative
+
+
+def _valid_result(policy="varuna"):
+    spec = _spec()
+    res = simulate(spec, TOPOS["uniform"], policy=policy)
+    return spec, res
+
+
+def test_detects_gpu_overlap():
+    spec, res = _valid_result()
+    g = (0, 1)
+    ivs = sorted(res.busy[g], key=lambda iv: iv.start)
+    ivs[1].start = ivs[0].start  # two tasks at once on one GPU
+    ivs[1].end = ivs[0].end
+    with pytest.raises(V.InvariantViolation):
+        V.check_sim_result(res, spec, policy="varuna")
+
+
+def test_detects_backward_before_forward():
+    spec, res = _valid_result()
+    g = (0, spec.num_stages - 1)
+    bwd = next(iv for iv in res.busy[g] if iv.kind == "bwd")
+    fwd = next(iv for iv in res.busy[g] if iv.kind == "fwd" and iv.micro == bwd.micro)
+    bwd.start, bwd.end = fwd.start - 30.0, fwd.start - 10.0
+    with pytest.raises(V.InvariantViolation):
+        V.check_sim_result(res, spec, policy="varuna")
+
+
+def test_detects_missing_task():
+    spec, res = _valid_result()
+    res.busy[(0, 0)].pop()
+    with pytest.raises(V.InvariantViolation):
+        V.check_sim_result(res, spec, policy="varuna")
+
+
+def test_detects_bogus_utilization():
+    spec, res = _valid_result()
+    res.utilization = 1.7
+    with pytest.raises(V.InvariantViolation):
+        V.check_sim_result(res, spec, policy="varuna")
+
+
+def test_detects_transfer_beating_bandwidth():
+    """A transfer occupying the channel for less than bytes/bandwidth is
+    physically impossible and must be flagged."""
+    spec = _spec()
+    topo = TOPOS["uniform"]
+    sched = temporal.atlas_schedule(spec, topo, 2)
+    wan_trs = [tr for tr in sched.transfers
+               if spec.stage_dc[tr.boundary] != spec.stage_dc[tr.boundary + 1]]
+    tr = wan_trs[0]
+    tr.end = tr.start + (tr.end - tr.start) * 0.25  # 4x the link speed
+    with pytest.raises(V.InvariantViolation):
+        V.check_schedule(sched, spec, topo)
+
+
+def test_detects_channel_double_booking():
+    spec = _spec()
+    topo = TOPOS["uniform"]
+    sched = temporal.atlas_schedule(spec, topo, 2)
+    wan_b = next(b for b in range(spec.num_stages - 1)
+                 if spec.stage_dc[b] != spec.stage_dc[b + 1])
+    trs = sorted((tr for tr in sched.transfers
+                  if tr.boundary == wan_b and tr.direction == "act"),
+                 key=lambda tr: tr.start)
+    a, b = trs[0], trs[1]
+    dur = b.end - b.start
+    shift = b.start - a.start  # slide b fully onto a's occupancy window
+    b.start, b.end, b.arrive = a.start, a.start + dur, b.arrive - shift
+    with pytest.raises(V.InvariantViolation):
+        V.check_schedule(sched, spec, topo)
+
+
+def test_detects_makespan_mismatch():
+    spec = _spec()
+    topo = TOPOS["uniform"]
+    sched = temporal.atlas_schedule(spec, topo, 1)
+    sched = copy.deepcopy(sched)
+    sched.makespan *= 0.5
+    with pytest.raises(V.InvariantViolation):
+        V.check_schedule(sched, spec, topo)

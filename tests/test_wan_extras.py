@@ -48,6 +48,7 @@ def test_sec67_compression_is_net_loss():
     assert comp > 1.3 * atlas  # paper: ~2× slowdown; direction must hold
 
 
+@pytest.mark.slow  # subprocess + full jit compile
 @pytest.mark.parametrize(
     "argv",
     [
