@@ -3,10 +3,16 @@ table from the dry-run artifacts.  Prints ``name,value,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run              # everything
   PYTHONPATH=src python -m benchmarks.run --only fig9  # one figure
+  PYTHONPATH=src python -m benchmarks.run --json out.json  # CSV + JSON artifact
+
+``--json`` writes the same rows plus per-figure wall-clock timings as a
+JSON artifact, so CI and future PRs can diff perf numbers against
+``BENCH_sim.json`` (see benchmarks/sim_bench.py for the engine bench).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -14,10 +20,14 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter on benchmark name")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + per-figure timings as JSON")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_figs
 
+    all_rows = []
+    timings_us = {}
     print("name,value,derived")
     for fn in paper_figs.ALL:
         if args.only and args.only not in fn.__name__:
@@ -25,8 +35,10 @@ def main(argv=None) -> None:
         t0 = time.perf_counter()
         rows = fn()
         dt_us = (time.perf_counter() - t0) * 1e6
+        timings_us[fn.__name__] = round(dt_us)
         for name, value, derived in rows:
             print(f"{name},{value},{derived}")
+        all_rows.extend(rows)
         print(f"_timing/{fn.__name__}_us,{dt_us:.0f},", flush=True)
 
     if not args.skip_roofline and (args.only is None or "roofline" in args.only):
@@ -37,6 +49,19 @@ def main(argv=None) -> None:
             print("_roofline/missing,0,run repro.launch.dryrun first", flush=True)
         for name, value, derived in rows:
             print(f"{name},{value},{derived}")
+        all_rows.extend(rows)
+
+    if args.json:
+        artifact = {
+            "schema": "bench_rows/v1",
+            "generated_unix": int(time.time()),
+            "rows": [
+                {"name": n, "value": v, "derived": d} for n, v, d in all_rows
+            ],
+            "timings_us": timings_us,
+        }
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,300 @@
+"""Schedule-engine perf harness — the first point of the perf trajectory.
+
+Times the optimized engine (``repro.core.simulator``: heap event core,
+lazy-heap Atlas list-scheduler, steady-state fast-forward) against the
+frozen pre-refactor reference (``repro.core.reference``) across four
+spec scales × all four policies, and the placement-order search
+(branch-and-bound vs exhaustive).  Writes ``BENCH_sim.json`` so CI and
+future PRs can diff perf artifacts (fields documented in ROADMAP.md).
+
+  PYTHONPATH=src python -m benchmarks.sim_bench                 # full sweep
+  PYTHONPATH=src python -m benchmarks.sim_bench --quick         # CI smoke
+  PYTHONPATH=src python -m benchmarks.sim_bench --ceiling-s 120 # regression guard
+
+The full sweep budgets each reference cell (SIGALRM): the pre-refactor
+Atlas scheduler is O(n·|avail|) and needs *hours* at the large config,
+so its timing is recorded as a lower bound (``timed_out: true``) and
+the config speedup is reported as "≥".  ``--quick`` runs the new engine
+at every scale but the reference only at the small/paper scales, and
+(with ``--ceiling-s``) fails if the new engine's large-config sweep
+exceeds a generous wall-clock ceiling — a regression guard, not a tight
+budget.  Target (ISSUE 2): ≥ 10x on the large config, new vs reference.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import signal
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import reference as ref
+from repro.core import wan
+from repro.core.simulator import GeoTopology, PipelineSpec, simulate
+from repro.core.simulator import testbed_spec
+
+SPEEDUP_TARGET = 10.0  # large config, new engine vs pre-refactor reference
+
+GPT_B = dict(hidden=8192, seq_len=6144, micro_batch=1, layers_per_stage=1,
+             layer_params=1.2e9)
+POLICIES = ("gpipe", "megatron", "varuna", "atlas")
+
+
+def _c_spec(C: float, P: int, M: int, n_dcs: int) -> PipelineSpec:
+    act = C * 10e-3 * wan.NODE_PAIR_CAP_GBPS * 1e9 / 8.0
+    per = P // n_dcs
+    stage_dc = sum([[d] * per for d in range(n_dcs)], [])
+    return PipelineSpec(num_stages=P, microbatches=M, t_fwd_ms=10.0,
+                        act_bytes=act, stage_dc=tuple(stage_dc))
+
+
+def _configs() -> Dict[str, Dict]:
+    """name -> {spec, topo, D, reference: should the reference run here}."""
+    return {
+        # the paper's §6.1 testbed shape, toy M — sanity scale
+        "small": dict(
+            spec=testbed_spec(**GPT_B, num_stages=4, microbatches=16,
+                              stage_dc=[0, 0, 1, 2]),
+            topo=GeoTopology(wan_latency_ms=40.0, multi_tcp=True),
+            D=3, reference=True, repeats=3,
+        ),
+        # testbed shape at a realistic minibatch
+        "paper": dict(
+            spec=testbed_spec(**GPT_B, num_stages=4, microbatches=128,
+                              stage_dc=[0, 0, 1, 2]),
+            topo=GeoTopology(wan_latency_ms=40.0, multi_tcp=True),
+            D=3, reference=True, repeats=2,
+        ),
+        # the acceptance sweep: P=16, M=1024, D=8, C=2 over 4 DCs
+        "large": dict(
+            spec=_c_spec(2.0, P=16, M=1024, n_dcs=4),
+            topo=GeoTopology(wan_latency_ms=40.0, multi_tcp=True),
+            D=8, reference=True, repeats=1,
+        ),
+        # GPT-3-scale microbatch count on the testbed shape: the
+        # steady-state fast-forward's home turf (new engine only)
+        "frontier": dict(
+            spec=testbed_spec(**GPT_B, num_stages=8, microbatches=4096,
+                              stage_dc=[0, 0, 1, 1, 2, 2, 3, 3]),
+            topo=GeoTopology(wan_latency_ms=40.0, multi_tcp=True),
+            D=8, reference=False, repeats=1,
+        ),
+    }
+
+
+# ------------------------------------------------------------- measurement
+
+
+class _Budget(Exception):
+    pass
+
+
+def _alarm(signum, frame):  # pragma: no cover - signal path
+    raise _Budget()
+
+
+def _timed(fn, budget_s: Optional[float]) -> Tuple[Optional[object], float, bool]:
+    """(result, wall seconds, timed_out).  Budget via SIGALRM (pure-Python
+    engines never release the GIL, so a thread watchdog could not stop
+    them; the alarm interrupts the interpreter loop)."""
+    use_alarm = budget_s is not None and budget_s > 0 and hasattr(signal, "SIGALRM")
+    if use_alarm:
+        old = signal.signal(signal.SIGALRM, _alarm)
+        signal.setitimer(signal.ITIMER_REAL, budget_s)  # float-precise budget
+    t0 = time.perf_counter()
+    try:
+        out = fn()
+        return out, time.perf_counter() - t0, False
+    except _Budget:
+        return None, time.perf_counter() - t0, True
+    finally:
+        if use_alarm:
+            signal.setitimer(signal.ITIMER_REAL, 0.0)
+            signal.signal(signal.SIGALRM, old)
+
+
+def _run_cell(engine: str, spec, topo, policy: str, D: int,
+              repeats: int, budget_s: Optional[float]) -> Dict:
+    def once():
+        if engine == "reference":
+            return ref.simulate(spec, topo, policy=policy, n_pipelines=D)
+        return simulate(spec, topo, policy=policy, n_pipelines=D)
+
+    best: Optional[float] = None  # best *successful* wall
+    res = None
+    hit_budget = False
+    for _ in range(max(1, repeats)):
+        r, wall, timed_out = _timed(once, budget_s)
+        if timed_out:
+            hit_budget = True
+            if best is None:
+                best = wall  # lower bound: no repeat completed
+            break
+        res = r
+        best = wall if best is None else min(best, wall)
+    cell = {
+        "engine": engine,
+        "policy": policy,
+        "wall_ms": round(best * 1e3, 3),
+        # timed_out means the recorded wall is a budget-bounded lower
+        # bound; a budget hit after a completed repeat keeps the real
+        # measurement
+        "timed_out": hit_budget and res is None,
+    }
+    if res is not None:
+        cell["iteration_ms"] = round(res.iteration_ms, 6)
+        stats = getattr(res, "stats", None) or {}
+        for field in ("events", "fast_forward", "period"):
+            if stats.get(field) is not None:
+                cell[field] = stats[field]
+    return cell
+
+
+def _bench_placement_search() -> Dict:
+    """Branch-and-bound vs exhaustive Algorithm-1 order search."""
+    import random
+
+    from repro.core import topology as tp
+    from repro.core.dc_selection import JobModel, algorithm1
+
+    def named_topo(n, seed):
+        rng = random.Random(seed)
+        lat = [[0.0] * n for _ in range(n)]
+        for a in range(n):
+            for b in range(a + 1, n):
+                lat[a][b] = lat[b][a] = float(rng.choice([5, 10, 20, 40, 80, 150]))
+        return tp.TopologyMatrix.from_latency(
+            lat, multi_tcp=True, dc_names=tuple(f"dc{i}" for i in range(n)))
+
+    job6 = JobModel(t_fwd_ms=10.0,
+                    act_bytes=2 * 10e-3 * wan.NODE_PAIR_CAP_GBPS * 1e9 / 8,
+                    partition_param_bytes=8e8, microbatches=60,
+                    topology=named_topo(6, 1))
+    fleet6 = {f"dc{i}": 4 for i in range(6)}
+    job8 = JobModel(t_fwd_ms=10.0,
+                    act_bytes=2 * 10e-3 * wan.NODE_PAIR_CAP_GBPS * 1e9 / 8,
+                    partition_param_bytes=8e8, microbatches=60,
+                    topology=named_topo(8, 1))
+    fleet8 = {f"dc{i}": 4 for i in range(8)}
+
+    out: Dict[str, float] = {}
+    t0 = time.perf_counter()
+    algorithm1(job6, fleet6, P=12, C=2, search_orders=True, order_search="exhaustive")
+    out["exhaustive_6dc_ms"] = round((time.perf_counter() - t0) * 1e3, 3)
+    t0 = time.perf_counter()
+    algorithm1(job6, fleet6, P=12, C=2, search_orders=True, order_search="bnb")
+    out["bnb_6dc_ms"] = round((time.perf_counter() - t0) * 1e3, 3)
+    t0 = time.perf_counter()
+    algorithm1(job8, fleet8, P=16, C=2, search_orders=True, order_search="bnb")
+    out["bnb_8dc_ms"] = round((time.perf_counter() - t0) * 1e3, 3)
+    if out["bnb_6dc_ms"] > 0:
+        out["speedup_6dc"] = round(out["exhaustive_6dc_ms"] / out["bnb_6dc_ms"], 1)
+    return out
+
+
+# ---------------------------------------------------------------- main
+
+
+def run_bench(quick: bool = False, budget_s: Optional[float] = 180.0,
+              validate_large: bool = True) -> Dict:
+    configs = _configs()
+    cells: List[Dict] = []
+    speedups: Dict[str, Dict] = {}
+    for name, cfg in configs.items():
+        spec, topo, D = cfg["spec"], cfg["topo"], cfg["D"]
+        run_reference = cfg["reference"] and not (quick and name == "large")
+        new_total = 0.0
+        ref_total = 0.0
+        ref_bounded = False
+        ref_ran = False
+        for policy in POLICIES:
+            cell = _run_cell("new", spec, topo, policy, D, cfg["repeats"], None)
+            cell["config"] = name
+            cells.append(cell)
+            new_total += cell["wall_ms"]
+            if run_reference:
+                rcell = _run_cell("reference", spec, topo, policy, D,
+                                  cfg["repeats"], budget_s)
+                rcell["config"] = name
+                cells.append(rcell)
+                ref_total += rcell["wall_ms"]
+                ref_bounded = ref_bounded or rcell["timed_out"]
+                ref_ran = True
+            print(f"  {name}/{policy}: new={cell['wall_ms']:.1f}ms"
+                  + (f" ref={rcell['wall_ms']:.1f}ms"
+                     + (" (budget hit)" if rcell["timed_out"] else "")
+                     if run_reference else ""),
+                  file=sys.stderr, flush=True)
+        entry = {"new_total_ms": round(new_total, 3)}
+        if ref_ran:
+            entry.update(
+                ref_total_ms=round(ref_total, 3),
+                speedup=round(ref_total / new_total, 1) if new_total else None,
+                lower_bound=ref_bounded,
+            )
+        speedups[name] = entry
+
+    validate_ok = None
+    if validate_large:
+        cfg = configs["large"]
+        t0 = time.perf_counter()
+        for policy in POLICIES:
+            simulate(cfg["spec"], cfg["topo"], policy=policy,
+                     n_pipelines=cfg["D"], validate=True)
+        validate_ok = True
+        print(f"  large validate=True sweep: "
+              f"{(time.perf_counter() - t0) * 1e3:.0f}ms, all invariants hold",
+              file=sys.stderr, flush=True)
+
+    return {
+        "schema": "BENCH_sim/v1",
+        "generated_unix": int(time.time()),
+        "host": {"python": platform.python_version(),
+                 "platform": platform.platform()},
+        "target": {"large_speedup_min": SPEEDUP_TARGET},
+        "configs": {
+            n: {"P": c["spec"].num_stages, "M": c["spec"].microbatches,
+                "D": c["D"], "policies": list(POLICIES)}
+            for n, c in configs.items()
+        },
+        "cells": cells,
+        "speedups": speedups,
+        "placement_search": _bench_placement_search(),
+        "large_validate_ok": validate_ok,
+        "quick": quick,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: skip the reference engine at the large "
+                         "scale (it needs a multi-minute budget)")
+    ap.add_argument("--out", default="BENCH_sim.json")
+    ap.add_argument("--budget-s", type=float, default=180.0,
+                    help="per-cell wall budget for the reference engine")
+    ap.add_argument("--ceiling-s", type=float, default=None,
+                    help="fail (exit 1) if the new engine's large-config "
+                         "sweep exceeds this many seconds — regression guard")
+    args = ap.parse_args(argv)
+
+    out = run_bench(quick=args.quick, budget_s=args.budget_s)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=False)
+    print(f"wrote {args.out}", file=sys.stderr)
+
+    large_new = out["speedups"]["large"]["new_total_ms"] / 1e3
+    print(json.dumps({"speedups": out["speedups"],
+                      "placement_search": out["placement_search"],
+                      "large_new_s": round(large_new, 2)}, indent=1))
+    if args.ceiling_s is not None and large_new > args.ceiling_s:
+        print(f"FAIL: large-config sweep took {large_new:.1f}s "
+              f"> ceiling {args.ceiling_s:.0f}s", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,19 @@ the event simulator (see tests/test_dc_selection.py):
     PP_time = fill + (M−1)·slot + drain
     slot    = max(GPU work per microbatch, WAN channel time per microbatch)
 with temporal sharing shrinking the per-transfer time by the cell's DP
-factor (C) on the fill/drain paths.
+factor (C) on the fill/drain paths.  Evaluations are memoized — what-if
+sweeps and the D loop revisit the same (partitions, order) points.
+
+Placement-order search: with a heterogeneous *named* topology the DC
+order matters (slow pairs must stay off the stage boundaries).  The
+original search enumerated every permutation (O(n!), capped at 6 DCs);
+the default is now branch-and-bound over partial orders — a partial
+placement's cost is lower-bounded by the cheapest boundary links that
+could still be appended, the slot term by the boundaries already placed
+— which prunes permutations sharing a dominated prefix and lifts the
+cap to 12 DCs (8 named DCs search in well under a second).  The
+exhaustive search is kept behind ``order_search="exhaustive"`` as the
+differential-testing reference: both must return the same best plan.
 """
 from __future__ import annotations
 
@@ -23,6 +35,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import wan
 from repro.core.topology import TopologyMatrix
+
+MAX_SEARCH_DCS = 12  # branch-and-bound order search
+MAX_EXHAUSTIVE_DCS = 8  # reference O(n!) search (tests only, realistically)
+AUTO_SEARCH_DCS = 10  # auto-enable threshold for named topologies
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +112,54 @@ def _stage_dc_from_partitions(partitions: Dict[str, int], dc_order: Sequence[str
     return stage_dc
 
 
+# --------------------------------------------------------------------------
+# closed-form pipeline latency (memoized)
+# --------------------------------------------------------------------------
+
+_PP_MEMO: Dict[Tuple, float] = {}
+_PP_MEMO_MAX = 200_000
+# structural job fingerprints, cached per live JobModel object (the weakref
+# identity check guards against id() reuse after garbage collection; the
+# JobModel itself is unhashable whenever its topology carries a link dict)
+_JOB_KEY_CACHE: Dict[int, Tuple[object, Tuple]] = {}
+_JOB_KEY_CACHE_MAX = 4096
+
+
+def _job_memo_key(job: JobModel) -> Tuple:
+    import weakref
+
+    hit = _JOB_KEY_CACHE.get(id(job))
+    if hit is not None and hit[0]() is job:
+        return hit[1]
+    topo = job.topology
+    tkey: Optional[Tuple] = None
+    if topo is not None:
+        tkey = (
+            topo.n_dcs,
+            tuple(sorted(topo.links.items())),
+            topo.intra_bw_gbps,
+            topo.intra_latency_ms,
+            topo.default_latency_ms,
+            topo.multi_tcp,
+            topo.dc_names,
+        )
+    key = (
+        job.t_fwd_ms,
+        job.act_bytes,
+        job.microbatches,
+        job.recompute,
+        job.bwd_mult,
+        job.wan_latency_ms,
+        job.multi_tcp,
+        job.intra_bw_gbps,
+        tkey,
+    )
+    if len(_JOB_KEY_CACHE) >= _JOB_KEY_CACHE_MAX:
+        _JOB_KEY_CACHE.clear()
+    _JOB_KEY_CACHE[id(job)] = (weakref.ref(job), key)
+    return key
+
+
 def get_latency_pp(
     job: JobModel,
     partitions: Dict[str, int],
@@ -108,7 +172,48 @@ def get_latency_pp(
     serialization and propagation latency, and the steady-state slot is
     set by the slowest boundary (every microbatch must traverse every
     boundary; channels are independent, so the pipeline's rate is the
-    bottleneck channel's)."""
+    bottleneck channel's).  Results are memoized per (job, partitions,
+    order, cell): the order search and what-if sweeps re-evaluate the
+    same placements many times."""
+    key = (
+        _job_memo_key(job),
+        tuple(sorted(partitions.items())),
+        tuple(dc_order),
+        dp_per_cell,
+    )
+    hit = _PP_MEMO.get(key)
+    if hit is not None:
+        return hit
+    val = _latency_pp_impl(job, partitions, dc_order, dp_per_cell)
+    if len(_PP_MEMO) >= _PP_MEMO_MAX:
+        _PP_MEMO.clear()
+    _PP_MEMO[key] = val
+    return val
+
+
+def _pair_terms(
+    job: JobModel, idx_a: int, idx_b: int, D: int, hop: float
+) -> Tuple[float, float, float]:
+    """(fill term, drain term, channel occupancy) of one WAN boundary
+    a -> b: activations ride the forward link, gradients the reverse one,
+    the scatter/gather hops stream with the WAN send.  The single pricing
+    point shared by the closed form and the branch-and-bound search —
+    change the model here and both stay in lock-step."""
+    fwd = job.pair_link(idx_a, idx_b)
+    rev = job.pair_link(idx_b, idx_a)
+    ser_f = job.act_bytes * 8.0 / (fwd.bw_gbps * 1e9) * 1e3
+    ser_r = job.act_bytes * 8.0 / (rev.bw_gbps * 1e9) * 1e3
+    fill = ser_f / D + 2.0 * hop + fwd.latency_ms
+    drain = ser_r / D + 2.0 * hop + rev.latency_ms
+    return fill, drain, max(ser_f, ser_r)
+
+
+def _latency_pp_impl(
+    job: JobModel,
+    partitions: Dict[str, int],
+    dc_order: Sequence[str],
+    dp_per_cell: int,
+) -> float:
     stage_dc = _stage_dc_from_partitions(partitions, dc_order)
     P = len(stage_dc)
     if P == 0:
@@ -135,9 +240,7 @@ def get_latency_pp(
     intra_ms = job.act_bytes * 8.0 / (intra_bw * 1e9) * 1e3
 
     # temporal sharing: channel occupancy ser/D; scatter/gather hops stream
-    # with the WAN send and only add delivery delay.  Activations ride the
-    # forward a -> b link, gradients the reverse b -> a link (asymmetric
-    # topologies price them differently, like the event simulator).
+    # with the WAN send and only add delivery delay (see _pair_terms)
     wan_fill_ms = 0.0  # per-boundary fill terms (activation direction)
     wan_drain_ms = 0.0  # per-boundary drain terms (gradient direction)
     max_ser = 0.0  # slowest channel's per-microbatch occupancy
@@ -146,13 +249,10 @@ def get_latency_pp(
         if a == b:
             n_intra += 1
             continue
-        fwd = job.pair_link(idx[a], idx[b])
-        rev = job.pair_link(idx[b], idx[a])
-        ser_f = job.act_bytes * 8.0 / (fwd.bw_gbps * 1e9) * 1e3
-        ser_r = job.act_bytes * 8.0 / (rev.bw_gbps * 1e9) * 1e3
-        wan_fill_ms += ser_f / D + 2.0 * hop + fwd.latency_ms
-        wan_drain_ms += ser_r / D + 2.0 * hop + rev.latency_ms
-        max_ser = max(max_ser, ser_f, ser_r)
+        fill, drain, ser = _pair_terms(job, idx[a], idx[b], D, hop)
+        wan_fill_ms += fill
+        wan_drain_ms += drain
+        max_ser = max(max_ser, ser)
 
     # steady-state slot: per-microbatch GPU work vs per-microbatch WAN
     # channel occupancy of the bottleneck boundary (the cell's channel
@@ -184,6 +284,127 @@ def _pack_partitions(
     return partitions, part_left
 
 
+# --------------------------------------------------------------------------
+# placement-order search: branch-and-bound over partial orders
+# --------------------------------------------------------------------------
+
+
+def _bnb_best_order(
+    job: JobModel,
+    num_gpu: Dict[str, int],
+    P: int,
+    dc_order: Sequence[str],
+    cell: int,
+    gpus_per_partition: int,
+) -> Optional[Tuple[str, ...]]:
+    """Best placement order for one D (None = infeasible for this D).
+
+    Search over *used-DC prefixes* only: once P partitions are packed the
+    relative order of the remaining DCs is irrelevant (they hold no
+    stage), and zero-capacity DCs never hold a stage — two symmetry
+    classes the exhaustive permutation scan re-visits factorially often.
+    A partial order is cut when a lower bound on its completion — the
+    boundary terms already placed, plus the fewest possible future WAN
+    boundaries priced at the cheapest remaining link, plus the (M−1)·slot
+    term of the boundaries placed so far — cannot beat the incumbent.
+    Children are expanded in ``dc_order`` sequence and the incumbent only
+    replaced on strict improvement, so ties resolve to the same
+    (lexicographically first) order the exhaustive reference returns."""
+    topo = job.topology
+    assert topo is not None and topo.dc_names, "order search needs a named topology"
+    caps = {dc: num_gpu.get(dc, 0) // gpus_per_partition for dc in dc_order}
+    usable = [dc for dc in dc_order if caps[dc] > 0]
+    if sum(caps[dc] for dc in usable) < P:
+        return None
+
+    M = job.microbatches
+    t_f = job.t_fwd_ms
+    t_b = job.bwd_mult * t_f
+    t_r = t_f if job.recompute else 0.0
+    D = max(1, cell)
+    comp_slot = t_f + t_r + t_b
+    const = P * t_f + P * (t_r + t_b)
+    intra_bw = topo.intra_bw_gbps
+    hop = job.act_bytes * (D - 1) / D * 8.0 / (intra_bw * 1e9) * 1e3
+    intra_cost = 2.0 * (job.act_bytes * 8.0 / (intra_bw * 1e9) * 1e3)  # fill+drain
+
+    idx = {dc: topo.index_of(dc) for dc in usable}
+    pair_cost: Dict[Tuple[str, str], float] = {}
+    pair_ser: Dict[Tuple[str, str], float] = {}
+    for a in usable:
+        for b in usable:
+            if a == b:
+                continue
+            fill, drain, ser = _pair_terms(job, idx[a], idx[b], D, hop)
+            pair_cost[(a, b)] = fill + drain
+            pair_ser[(a, b)] = ser
+    cheapest_pair = min(pair_cost.values()) if pair_cost else 0.0
+
+    best_cost = math.inf
+    best_order: Optional[Tuple[str, ...]] = None
+
+    def boundary_lb(left: int, remaining: List[str]) -> float:
+        """Cheapest possible cost of the `left` boundaries still to come:
+        at least `fewest DCs that can hold them` WAN hops, the rest
+        intra-DC."""
+        if left <= 0:
+            return 0.0
+        rem_caps = sorted((caps[dc] for dc in remaining), reverse=True)
+        need, n_more = left, 0
+        for c in rem_caps:
+            if need <= 0:
+                break
+            need -= c
+            n_more += 1
+        if cheapest_pair >= intra_cost:
+            return n_more * cheapest_pair + (left - n_more) * intra_cost
+        return left * min(cheapest_pair, intra_cost)
+
+    def dfs(order: List[str], used: set, placed: int, acc: float, acc_ser: float):
+        nonlocal best_cost, best_order
+        # ties (within float noise, relative) keep the earlier — i.e.
+        # lexicographically-first — order, matching the exhaustive scan
+        if placed >= P:
+            total = const + acc + (M - 1) * max(comp_slot, acc_ser)
+            if best_order is None or total < best_cost - 1e-9 * (1.0 + best_cost):
+                best_cost = total
+                best_order = tuple(order)
+            return
+        left = P - placed
+        remaining = [dc for dc in usable if dc not in used]
+        if sum(caps[dc] for dc in remaining) < left:
+            return
+        if best_order is not None:
+            lb = const + acc + boundary_lb(left, remaining) \
+                + (M - 1) * max(comp_slot, acc_ser)
+            if lb >= best_cost - 1e-9 * (1.0 + best_cost):
+                return
+        last = order[-1] if order else None
+        for dc in remaining:
+            k = min(caps[dc], left)
+            step = (k - 1) * intra_cost
+            ser = acc_ser
+            if last is not None:
+                step += pair_cost[(last, dc)]
+                ser = max(ser, pair_ser[(last, dc)])
+            order.append(dc)
+            used.add(dc)
+            dfs(order, used, placed + k, acc + step, ser)
+            order.pop()
+            used.remove(dc)
+
+    dfs([], set(), 0, 0.0, 0.0)
+    if best_order is None:
+        return None
+    rest = [dc for dc in dc_order if dc not in best_order]
+    return best_order + tuple(rest)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1
+# --------------------------------------------------------------------------
+
+
 def algorithm1(
     job: JobModel,
     num_gpu: Dict[str, int],
@@ -193,6 +414,7 @@ def algorithm1(
     D_max: Optional[int] = None,
     dc_order: Optional[Sequence[str]] = None,
     search_orders: Optional[bool] = None,
+    order_search: str = "bnb",
 ) -> List[PlanEntry]:
     """Paper Algorithm 1. Returns one PlanEntry per DP-cell count D.
 
@@ -201,10 +423,14 @@ def algorithm1(
     slow pair must not become a stage boundary, which a fixed
     availability-sorted order cannot guarantee.  The search needs DC
     names on the matrix (fleet keys must resolve to fixed topology
-    sites; permuting a positional mapping would re-site the fleet) and
-    is exhaustive, so it caps at 6 DCs — pass ``search_orders=False``
-    with an explicit ``dc_order`` beyond that.
+    sites; permuting a positional mapping would re-site the fleet).
+    ``order_search`` picks the engine: "bnb" (default) prunes partial
+    orders with admissible lower bounds and handles up to 12 DCs;
+    "exhaustive" enumerates permutations (the differential-testing
+    reference, ≤ 8 DCs) — both return the same best plan.
     """
+    if order_search not in ("bnb", "exhaustive"):
+        raise ValueError(f"unknown order_search {order_search!r}")
     explicit_order = dc_order is not None
     if dc_order is None:  # default: decreasing GPU availability (§4.5)
         dc_order = sorted(num_gpu, key=lambda d: -num_gpu[d])
@@ -221,49 +447,83 @@ def algorithm1(
     if search_orders is None:
         # an explicitly supplied order (cost, distance, ... — §4.5) is a
         # caller decision; only auto-search the default availability order
-        search_orders = bool(named) and not explicit_order and len(dc_order) <= 6
+        search_orders = (
+            bool(named) and not explicit_order and len(dc_order) <= AUTO_SEARCH_DCS
+        )
     if search_orders:
         if not named:
             raise ValueError(
                 "search_orders needs a topology with dc_names covering every "
                 "fleet DC (a positional mapping cannot be permuted)"
             )
-        if len(dc_order) > 6:
+        cap_dcs = MAX_SEARCH_DCS if order_search == "bnb" else MAX_EXHAUSTIVE_DCS
+        if len(dc_order) > cap_dcs:
             raise ValueError(
-                f"search_orders is exhaustive and capped at 6 DCs "
+                f"{order_search} order search is capped at {cap_dcs} DCs "
                 f"(got {len(dc_order)}); pass an explicit dc_order instead"
             )
-        orders = [tuple(o) for o in itertools.permutations(dc_order)]
-    else:
-        orders = [tuple(dc_order)]
 
+    orders: Optional[List[Tuple[str, ...]]] = None
+    if not (search_orders and order_search == "bnb"):
+        if search_orders:
+            orders = [tuple(o) for o in itertools.permutations(dc_order)]
+        else:
+            orders = [tuple(dc_order)]
     plans: List[PlanEntry] = []
     for D in range(1, D_max + 1):
-        best: Optional[PlanEntry] = None
-        for order in orders:
-            partitions, part_left = _pack_partitions(num_gpu, order, P, D * C)
-            if part_left > 0:
-                pp_time = math.inf
-                ar = 0.0
-            else:
-                pp_time = get_latency_pp(job, partitions, order, C)
-                ar = get_latency_dp(job, D * C)
-            total = pp_time + ar
-            thr = (D * C * job.microbatches) / total if math.isfinite(total) else 0.0
-            entry = PlanEntry(
-                D=D,
-                partitions=dict(partitions),
-                pp_time_ms=pp_time,
-                allreduce_ms=ar,
-                total_ms=total,
-                throughput=thr,
-                gpus_used=D * C * sum(partitions.values()),
-                dc_order=order,
-            )
-            if best is None or entry.total_ms < best.total_ms:
-                best = entry
+        if orders is None:
+            best = _plan_for_order_bnb(job, num_gpu, P, C, D, dc_order)
+        else:
+            best = None
+            for order in orders:
+                entry = _plan_entry(job, num_gpu, P, C, D, order)
+                if best is None or entry.total_ms < best.total_ms:
+                    best = entry
         plans.append(best)
     return plans
+
+
+def _plan_entry(
+    job: JobModel,
+    num_gpu: Dict[str, int],
+    P: int,
+    C: int,
+    D: int,
+    order: Tuple[str, ...],
+) -> PlanEntry:
+    partitions, part_left = _pack_partitions(num_gpu, order, P, D * C)
+    if part_left > 0:
+        pp_time = math.inf
+        ar = 0.0
+    else:
+        pp_time = get_latency_pp(job, partitions, order, C)
+        ar = get_latency_dp(job, D * C)
+    total = pp_time + ar
+    thr = (D * C * job.microbatches) / total if math.isfinite(total) else 0.0
+    return PlanEntry(
+        D=D,
+        partitions=dict(partitions),
+        pp_time_ms=pp_time,
+        allreduce_ms=ar,
+        total_ms=total,
+        throughput=thr,
+        gpus_used=D * C * sum(partitions.values()),
+        dc_order=order,
+    )
+
+
+def _plan_for_order_bnb(
+    job: JobModel,
+    num_gpu: Dict[str, int],
+    P: int,
+    C: int,
+    D: int,
+    dc_order: Sequence[str],
+) -> PlanEntry:
+    order = _bnb_best_order(job, num_gpu, P, dc_order, C, D * C)
+    if order is None:  # infeasible: report the input order, like exhaustive
+        return _plan_entry(job, num_gpu, P, C, D, tuple(dc_order))
+    return _plan_entry(job, num_gpu, P, C, D, order)
 
 
 def best_plan(plans: List[PlanEntry]) -> PlanEntry:

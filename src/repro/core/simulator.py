@@ -18,6 +18,21 @@ Outputs per-GPU busy intervals (Fig 4 / Fig 13-style timelines), bubbles,
 utilization, and iteration time; the DP all-reduce is added analytically
 (intra-DC rings, §4.2).
 
+Engine notes (the fast path — see ``repro.core.reference`` for the
+original engine these results are differentially tested against):
+
+  * per-GPU ready queues and per-channel pending queues are heaps (the
+    original sorted a list per dispatch/pump);
+  * per-boundary transfer times are memoized;
+  * the baseline policies run their D pipelines with *zero* shared state
+    (per-pipeline channels, GPUs, barriers), so one pipeline is simulated
+    and replicated D× (each replica gets its own ``Interval`` objects);
+  * for large M, ``repro.core.fastforward`` detects the periodic steady
+    state from two short probe runs and emits the middle microbatches
+    analytically (interval-identical to full replay, else it falls back);
+  * bubble/utilization accounting is a single shared pass
+    (``_finalize``) over intervals that are already start-sorted.
+
 Event-driven, pure Python; deterministic.
 """
 from __future__ import annotations
@@ -91,19 +106,16 @@ class SimResult:
     bubbles: Dict[Tuple[int, int], List[Tuple[float, float]]]
     allreduce_ms: float
     n_pipelines: int
+    stats: Optional[Dict] = None  # engine accounting: events, fast_forward, ...
 
     def stage_bubbles(self, pipeline: int, stage: int) -> List[Tuple[float, float]]:
         return self.bubbles[(pipeline, stage)]
 
 
+POLICIES = ("gpipe", "megatron", "varuna", "atlas")
+
+
 # ---------------------------------------------------------------------------
-
-
-def _priority(kind: str, micro: int, pipeline: int) -> Tuple:
-    # backward (incl. its recompute) preempts queued forwards (paper §4.4
-    # rule 4); earlier microbatches first; lower rank first.
-    order = {"bwd": 0, "fwd": 1}
-    return (order[kind], micro, pipeline)
 
 
 def simulate(
@@ -114,6 +126,7 @@ def simulate(
     n_pipelines: int = 1,
     dp_replicas_for_allreduce: int = 1,
     validate: bool = False,
+    fast_forward: Optional[bool] = None,
 ) -> SimResult:
     """Simulate one minibatch (iteration) of ``n_pipelines`` DP pipelines.
 
@@ -126,100 +139,137 @@ def simulate(
     ``intra_bw_gbps`` — the uniform ``GeoTopology`` or a heterogeneous
     ``TopologyMatrix``.  ``validate=True`` runs the physical-invariant
     checker (``repro.core.validate``) on the result before returning.
+
+    ``fast_forward``: ``None`` engages the steady-state fast-forward
+    automatically once M is large enough to amortize its two probe runs;
+    ``True`` attempts it whenever the probes fit below M; ``False``
+    disables it (full event replay).  Whenever detection fails the engine
+    silently falls back to full replay — the result is bit-compatible
+    either way (``res.stats["fast_forward"]`` records what happened).
     """
-    assert policy in ("gpipe", "megatron", "varuna", "atlas")
-    if policy == "atlas":
-        res = _simulate_atlas(spec, topo, n_pipelines, dp_replicas_for_allreduce)
-        return _maybe_validate(res, spec, policy, validate)
+    assert policy in POLICIES
+    D = n_pipelines
+    # Baselines: the D pipelines share nothing (per-pipeline channels,
+    # GPUs, barriers) — simulate one and replicate.  Atlas pipelines pool
+    # WAN channels per cell and must be simulated together.
+    replicate = D if (policy != "atlas" and D > 1) else 1
+    engine_D = 1 if policy != "atlas" else D
+
+    def run_raw(s: PipelineSpec):
+        if policy == "atlas":
+            return _run_atlas(s, topo, D)
+        return _run_events(s, topo, policy, engine_D)
+
+    raw = None
+    if fast_forward is not False:
+        from repro.core import fastforward
+
+        raw = fastforward.try_fast_forward(
+            spec, run_raw, n_pipelines=engine_D, force=fast_forward is True
+        )
+    if raw is None:
+        busy, pp_end, stats = run_raw(spec)
+        stats["fast_forward"] = False
+    else:
+        busy, pp_end, stats = raw
+    stats["replicated_pipelines"] = replicate
+    if replicate > 1:
+        # fresh Interval objects per replica: SimResult consumers may
+        # mutate intervals (the validator's negative tests do), and
+        # aliased replicas would corrupt each other
+        busy = {
+            (p, s): (
+                ivs if p == 0 else
+                [Interval(iv.start, iv.end, iv.kind, iv.micro) for iv in ivs]
+            )
+            for p in range(replicate)
+            for (_, s), ivs in busy.items()
+        }
+    res = _finalize(spec, topo, busy, pp_end, D, dp_replicas_for_allreduce, stats)
+    return _maybe_validate(res, spec, policy, validate)
+
+
+# ---------------------------------------------------------------------------
+# heap-based event engine (gpipe / megatron / varuna)
+# ---------------------------------------------------------------------------
+
+
+def _run_events(
+    spec: PipelineSpec, topo, policy: str, D: int
+) -> Tuple[Dict, float, Dict]:
+    """Raw event replay: returns (busy, pipeline end time, engine stats)."""
     P, M = spec.num_stages, spec.microbatches
-    temporal = False
     recompute = spec.recompute and policy in ("gpipe", "varuna", "atlas")
     inflight_cap = spec.inflight_cap
     if inflight_cap is None:
         inflight_cap = M if policy == "gpipe" else P
+    gpipe = policy == "gpipe"
     t_f = spec.t_fwd_ms
     t_b = spec.bwd_mult * spec.t_fwd_ms
-
-    D = n_pipelines
     pipes = range(D)
 
-    # --- channels: (pipeline-or-cell, boundary, dir) ---
-    # temporal sharing pools the D per-pair allocations => D× bandwidth for
-    # a single transfer, one transfer at a time per cell (paper §4.3), plus
-    # the intra-DC scatter/gather hop.  A channel is a priority queue
-    # (paper §4.4 rule 3: transfers are *scheduled*, not FIFO): earliest
-    # microbatch first, gradients before activations (rule 4), then rank.
+    # --- memoized per-boundary transfer times --------------------------------
+    # (channel occupancy ms, extra delivery delay ms): occupancy is the
+    # serialization time (the bandwidth resource); propagation latency
+    # delays delivery but does not hold the link — back-to-back transfers
+    # pipeline through the WAN.  Computed once per (s_from, s_to) instead
+    # of per transfer.
+    ttimes: Dict[Tuple[int, int], Tuple[float, float]] = {}
+    for s in range(P - 1):
+        for s_from, s_to in ((s, s + 1), (s + 1, s)):
+            link = topo.link(spec.stage_dc[s_from], spec.stage_dc[s_to])
+            ser = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
+            ttimes[(s_from, s_to)] = (ser, link.latency_ms)
+
+    # --- channels: (pipeline, boundary, dir), a heap ordered by (micro,
+    # rank) — transfers are *scheduled*, not FIFO (paper §4.4 rule 3):
+    # earliest microbatch first (gradients and activations never share a
+    # channel — direction is part of the key).
     chan_free: Dict[Tuple, float] = {}
     chan_pending: Dict[Tuple, List[Tuple]] = {}
 
-    def transfer_times(s_from: int, s_to: int) -> Tuple[float, float]:
-        """(channel occupancy ms, extra delivery delay ms).
-
-        Occupancy = serialization time (the bandwidth resource); the
-        propagation latency delays delivery but does not hold the link —
-        back-to-back transfers pipeline through the WAN.
-        """
-        dc_a, dc_b = spec.stage_dc[s_from], spec.stage_dc[s_to]
-        link = topo.link(dc_a, dc_b)
-        ser = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
-        if dc_a == dc_b:  # intra-DC hop
-            return ser, link.latency_ms
-        if temporal:
-            ser = ser / D
-            # scatter to / gather from the D-1 peer nodes over intra-DC
-            # links (paper §4.3); the hops STREAM with the WAN send, so
-            # they add delivery latency but do not occupy the shared
-            # channel ((D-1)/D of the bytes make each hop).
-            hop = (spec.act_bytes * (D - 1) / D * 8.0) / (topo.intra_bw_gbps * 1e9) * 1e3
-            return ser, link.latency_ms + 2.0 * hop
-        return ser, link.latency_ms
-
-    def chan_key(p: int, boundary: int, direction: str) -> Tuple:
-        if temporal:
-            return ("cell", boundary, direction)
-        return (p, boundary, direction)
-
     # --- state ---
     gpu_free = {(p, s): 0.0 for p in pipes for s in range(P)}
-    ready: Dict[Tuple[int, int], List[Tuple]] = {g: [] for g in gpu_free}
+    ready_f: Dict[Tuple[int, int], List[int]] = {g: [] for g in gpu_free}
+    ready_b: Dict[Tuple[int, int], List[int]] = {g: [] for g in gpu_free}
     busy: Dict[Tuple[int, int], List[Interval]] = {g: [] for g in gpu_free}
-    fwd_done = {(p, s): 0 for p in pipes for s in range(P)}
-    bwd_done = {(p, s): 0 for p in pipes for s in range(P)}
+    fwd_done = {g: 0 for g in gpu_free}
+    bwd_done = {g: 0 for g in gpu_free}
     fwd_barrier_release: Dict[int, float] = {}  # gpipe: pipeline -> all-F time
 
     events: List[Tuple[float, int, str, Tuple]] = []
     seq = itertools.count()
+    n_events = 0
 
     def push(t: float, kind: str, payload: Tuple):
         heapq.heappush(events, (t, next(seq), kind, payload))
 
     # seed: microbatch m ready at stage 0 at t=0
     for p in pipes:
-        for m in range(M):
-            ready[(p, 0)].append(_priority("fwd", m, p) + ("fwd", m))
+        ready_f[(p, 0)] = list(range(M))  # already a valid heap
 
     def try_dispatch(g: Tuple[int, int], now: float):
+        # backward (incl. its recompute) preempts queued forwards (paper
+        # §4.4 rule 4); gpipe holds every backward until the pipeline's
+        # forward barrier; the in-flight cap holds every forward alike.
         p, s = g
-        if gpu_free[g] > now or not ready[g]:
+        if gpu_free[g] > now:
             return
-        ready[g].sort()
-        for i, item in enumerate(ready[g]):
-            kind, m = item[-2], item[-1]
-            if kind == "fwd":
-                if fwd_done[g] - bwd_done[g] >= inflight_cap:
-                    continue
-            if kind == "bwd" and policy == "gpipe":
-                if fwd_barrier_release.get(p) is None:
-                    continue  # wait until all forwards of this pipeline done
-            ready[g].pop(i)
-            if kind == "fwd":
-                dur = t_f
-            else:
-                dur = t_b + (t_f if (recompute and s != P - 1) else 0.0)
-            gpu_free[g] = now + dur
-            busy[g].append(Interval(now, now + dur, kind, m))
-            push(now + dur, "gpu_done", (p, s, kind, m))
-            return
+        rb = ready_b[g]
+        if rb and not (gpipe and fwd_barrier_release.get(p) is None):
+            m = heapq.heappop(rb)
+            kind = "bwd"
+            dur = t_b + (t_f if (recompute and s != P - 1) else 0.0)
+        else:
+            rf = ready_f[g]
+            if not rf or fwd_done[g] - bwd_done[g] >= inflight_cap:
+                return
+            m = heapq.heappop(rf)
+            kind = "fwd"
+            dur = t_f
+        gpu_free[g] = now + dur
+        busy[g].append(Interval(now, now + dur, kind, m))
+        push(now + dur, "gpu_done", (p, s, kind, m))
 
     def on_gpu_done(now: float, p: int, s: int, kind: str, m: int):
         g = (p, s)
@@ -229,8 +279,8 @@ def simulate(
                 request_transfer(now, p, s, s + 1, "act", m)
             else:
                 # last stage: backward immediately eligible
-                ready[g].append(_priority("bwd", m, p) + ("bwd", m))
-            if policy == "gpipe" and s == P - 1 and fwd_done[g] == M:
+                heapq.heappush(ready_b[g], m)
+            if gpipe and s == P - 1 and fwd_done[g] == M:
                 fwd_barrier_release[p] = now
                 try_dispatch((p, P - 1), now)
         else:  # bwd
@@ -241,26 +291,28 @@ def simulate(
 
     def request_transfer(now: float, p: int, s_from: int, s_to: int, direction: str, m: int):
         boundary = min(s_from, s_to)
-        key = chan_key(p, boundary, direction)
-        prio = (m, 0 if direction == "grad" else 1, p)
-        chan_pending.setdefault(key, []).append(prio + (p, s_from, s_to, direction, m))
+        key = (p, boundary, direction)
+        heapq.heappush(
+            chan_pending.setdefault(key, []), (m, p, s_from, s_to, direction)
+        )
         pump_channel(key, now)
 
     def pump_channel(key: Tuple, now: float):
         pend = chan_pending.get(key)
         if not pend or chan_free.get(key, 0.0) > now + 1e-12:
             return
-        pend.sort()
-        _, _, _, p, s_from, s_to, direction, m = pend.pop(0)
-        ser, delay = transfer_times(s_from, s_to)
+        m, p, s_from, s_to, direction = heapq.heappop(pend)
+        ser, delay = ttimes[(s_from, s_to)]
         chan_free[key] = now + ser
         push(now + ser + delay, "arrive", (p, s_to, direction, m))
         push(now + ser, "chan_free", (key,))
 
     def on_arrive(now: float, p: int, s: int, direction: str, m: int):
         g = (p, s)
-        kind = "fwd" if direction == "act" else "bwd"
-        ready[g].append(_priority(kind, m, p) + (kind, m))
+        if direction == "act":
+            heapq.heappush(ready_f[g], m)
+        else:
+            heapq.heappush(ready_b[g], m)
         try_dispatch(g, now)
 
     # kick off
@@ -269,89 +321,77 @@ def simulate(
 
     while events:
         now, _, ev, payload = heapq.heappop(events)
+        n_events += 1
         if ev == "gpu_done":
             on_gpu_done(now, *payload)
         elif ev == "arrive":
             on_arrive(now, *payload)
-        elif ev == "chan_free":
+        else:  # chan_free
             pump_channel(payload[0], now)
 
-    pp_end = max((iv.end for ivs in busy.values() for iv in ivs), default=0.0)
-
-    # --- DP all-reduce (intra-DC rings, paper §4.2) ---
-    ar = wan.allreduce_ms(
-        spec.stage_param_bytes, dp_replicas_for_allreduce, topo.intra_bw_gbps
-    )
-    total = pp_end + ar
-
-    # --- bubbles & utilization ---
-    bubbles: Dict[Tuple[int, int], List[Tuple[float, float]]] = {}
-    busy_sum = 0.0
-    for g, ivs in busy.items():
-        ivs.sort(key=lambda iv: iv.start)
-        gaps = []
-        cur = 0.0
-        for iv in ivs:
-            if iv.start > cur + 1e-9:
-                gaps.append((cur, iv.start))
-            cur = max(cur, iv.end)
-            busy_sum += iv.end - iv.start
-        if cur < total - 1e-9:
-            gaps.append((cur, total))
-        bubbles[g] = gaps
-    util = busy_sum / (total * len(gpu_free)) if total > 0 else 0.0
-
-    res = SimResult(
-        iteration_ms=total,
-        busy=busy,
-        utilization=util,
-        bubbles=bubbles,
-        allreduce_ms=ar,
-        n_pipelines=D,
-    )
-    return _maybe_validate(res, spec, policy, validate)
+    pp_end = max((ivs[-1].end for ivs in busy.values() if ivs), default=0.0)
+    stats = {"engine": "event-heap", "events": n_events}
+    return busy, pp_end, stats
 
 
-def _maybe_validate(res: SimResult, spec: PipelineSpec, policy: str, validate: bool) -> SimResult:
-    if validate:
-        from repro.core import validate as _validate
-
-        _validate.check_sim_result(res, spec, policy=policy)
-    return res
+# ---------------------------------------------------------------------------
+# Atlas (precomputed §4.4 schedule wrapped into the SimResult shape)
+# ---------------------------------------------------------------------------
 
 
-def _simulate_atlas(
-    spec: PipelineSpec,
-    topo,  # GeoTopology | TopologyMatrix
-    n_pipelines: int,
-    dp_replicas_for_allreduce: int,
-) -> SimResult:
-    """Atlas = precomputed §4.4 schedule (repro.core.temporal) wrapped into
-    the same SimResult shape as the reactive baselines."""
+def _run_atlas(spec: PipelineSpec, topo, n_pipelines: int) -> Tuple[Dict, float, Dict]:
     from repro.core import temporal
 
     sched = temporal.atlas_schedule(
         spec, topo, n_pipelines, inflight_cap=spec.inflight_cap
     )
-    ar = wan.allreduce_ms(
-        spec.stage_param_bytes, dp_replicas_for_allreduce, topo.intra_bw_gbps
-    )
-    total = sched.makespan + ar
     busy: Dict[Tuple[int, int], List[Interval]] = {
         (p, s): [] for p in range(n_pipelines) for s in range(spec.num_stages)
     }
     for t in sched.tasks:
         busy[(t.pipeline, t.stage)].append(Interval(t.start, t.end, t.kind, t.micro))
+    stats = {
+        "engine": "atlas-precomputed",
+        "events": len(sched.tasks) + len(sched.transfers),
+    }
+    return busy, sched.makespan, stats
+
+
+# ---------------------------------------------------------------------------
+# shared result assembly: all-reduce, bubbles, utilization
+# ---------------------------------------------------------------------------
+
+
+def _finalize(
+    spec: PipelineSpec,
+    topo,
+    busy: Dict[Tuple[int, int], List[Interval]],
+    pp_end: float,
+    n_pipelines: int,
+    dp_replicas: int,
+    stats: Optional[Dict] = None,
+) -> SimResult:
+    """Wrap raw busy intervals into a SimResult: add the analytic DP
+    all-reduce (intra-DC rings, §4.2) and run the single-pass bubble /
+    utilization accounting shared by every engine path."""
+    ar = wan.allreduce_ms(spec.stage_param_bytes, dp_replicas, topo.intra_bw_gbps)
+    total = pp_end + ar
     bubbles: Dict[Tuple[int, int], List[Tuple[float, float]]] = {}
     busy_sum = 0.0
     for g, ivs in busy.items():
-        ivs.sort(key=lambda iv: iv.start)
+        # the event engine appends in dispatch (= start) order; the atlas
+        # list-scheduler may interleave — sort only when actually needed
+        for i in range(1, len(ivs)):
+            if ivs[i].start < ivs[i - 1].start:
+                ivs.sort(key=lambda iv: iv.start)
+                break
         gaps = []
         cur = 0.0
         for iv in ivs:
             if iv.start > cur + 1e-9:
                 gaps.append((cur, iv.start))
-            cur = max(cur, iv.end)
+            if iv.end > cur:
+                cur = iv.end
             busy_sum += iv.end - iv.start
         if cur < total - 1e-9:
             gaps.append((cur, total))
@@ -364,7 +404,16 @@ def _simulate_atlas(
         bubbles=bubbles,
         allreduce_ms=ar,
         n_pipelines=n_pipelines,
+        stats=stats,
     )
+
+
+def _maybe_validate(res: SimResult, spec: PipelineSpec, policy: str, validate: bool) -> SimResult:
+    if validate:
+        from repro.core import validate as _validate
+
+        _validate.check_sim_result(res, spec, policy=policy)
+    return res
 
 
 # ---------------------------------------------------------------------------

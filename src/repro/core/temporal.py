@@ -18,6 +18,20 @@ implementing the paper's four rules:
   (4) when both forward and backward are ready at a stage, backward wins
       (it unlocks downstream stages).
 
+Scheduling core: the original implementation re-scanned every available
+task per pick (O(n·|avail|) — minutes at GPT-3 scale).  This one keeps
+the candidates in a *lazy* priority heap keyed by the same rank
+``(feasible_start, bwd-first, micro, rank)``.  Every component of a
+task's feasible start is nondecreasing over time (GPU frees, channel
+frees and the scheduled-task counters only move forward), so a popped
+entry is either still the true minimum (schedule it), stale (re-push
+with its recomputed rank), or cap-blocked (park it until the next
+backward on that stage is scheduled).  The emitted schedule is
+*identical* to the full-scan reference (``repro.core.reference``) —
+ranks are unique per task, so no tie depends on scan order — at
+O(n log n) instead of O(n²); ``tests/test_engine_equiv.py`` asserts the
+equivalence.
+
 The returned Schedule carries per-GPU busy intervals and transfer windows;
 ``repro.core.simulator.simulate(policy="atlas")`` wraps it into the same
 SimResult shape as the reactive baselines.
@@ -82,7 +96,7 @@ def atlas_schedule(
 
         Direction matters on asymmetric topologies: activations ride the
         b -> b+1 link, gradients the reverse b+1 -> b link (matching the
-        event simulator's transfer_times).  The intra-DC scatter/gather
+        event simulator's transfer times).  The intra-DC scatter/gather
         hops stream with the WAN send: they delay delivery but never
         hold the shared WAN channel."""
         dc_a, dc_b = spec.stage_dc[b], spec.stage_dc[b + 1]
@@ -94,6 +108,9 @@ def atlas_schedule(
         return ser / D, link.latency_ms + 2.0 * hop
 
     is_wan = [spec.stage_dc[b] != spec.stage_dc[b + 1] for b in range(P - 1)]
+    btimes = {
+        (b, d): boundary_times(b, d) for b in range(P - 1) for d in ("act", "grad")
+    }
 
     gpu_free = {(p, s): 0.0 for p in range(D) for s in range(P)}
     chan_free: Dict[Tuple[int, str], float] = {}
@@ -101,7 +118,7 @@ def atlas_schedule(
     # by one cell-transfer slot so transfer demands interleave instead of
     # bursting the shared channel (Fig 6(b): DP-2 starts at 1, DP-1 at 5).
     wan_sers = [
-        boundary_times(b, d)[0]
+        btimes[(b, d)][0]
         for b in range(P - 1)
         if is_wan_boundary(spec, topo, b)
         for d in ("act", "grad")
@@ -126,38 +143,82 @@ def atlas_schedule(
         rec = t_f if (spec.recompute and s != P - 1) else 0.0
         return t_b + rec
 
-    def feasible_start(kind: str, p: int, s: int, m: int) -> Optional[float]:
-        key = (kind, p, s, m)
-        if key not in avail:
-            return None
+    def rank_of(key) -> Optional[Tuple]:
+        """(feasible start, bwd-first, micro, rank) or None if cap-blocked.
+
+        Rule 3 folds in here: the start is delayed so compute-end meets
+        channel-free on the output boundary."""
+        kind, p, s, m = key
         if kind == "fwd" and fwd_sched[(p, s)] - bwd_sched[(p, s)] >= cap:
             return None
-        t0 = max(avail[key], gpu_free[(p, s)])
-        dur = task_dur(kind, s)
-        # rule 3: output transfer must start at compute end
-        out_b = s if kind == "fwd" else s - 1
+        t0 = avail[key]
+        gf = gpu_free[(p, s)]
+        if gf > t0:
+            t0 = gf
         has_out = (kind == "fwd" and s < P - 1) or (kind == "bwd" and s > 0)
-        if has_out and is_wan[out_b]:
-            direction = "act" if kind == "fwd" else "grad"
-            cf = chan_free.get((out_b, direction), 0.0)
-            t0 = max(t0, cf - dur)
-        return t0
+        if has_out:
+            out_b = s if kind == "fwd" else s - 1
+            if is_wan[out_b]:
+                direction = "act" if kind == "fwd" else "grad"
+                cf = chan_free.get((out_b, direction), 0.0) - task_dur(kind, s)
+                if cf > t0:
+                    t0 = cf
+        return (t0, 0 if kind == "bwd" else 1, m, p)
+
+    heap: List[Tuple[Tuple, Tuple]] = []
+    # cap-blocked forwards per (p, s), a min-heap of microbatch indices:
+    # within one (pipeline, stage) forwards arrive and schedule in micro
+    # order, so when a backward frees an in-flight slot only the
+    # smallest-m parked forward can be the next candidate
+    parked: Dict[Tuple[int, int], List[int]] = {}
+
+    def add(key):
+        r = rank_of(key)
+        if r is None:
+            kind, p, s, m = key
+            heapq.heappush(parked.setdefault((p, s), []), m)
+        else:
+            heap.append((r, key))
+
+    for key in avail:
+        add(key)
+    heapq.heapify(heap)
+
+    def emit_transfer(p, b, direction, m, ready):
+        ser, delay = btimes[(b, direction)]
+        if is_wan[b]:
+            start = max(ready, chan_free.get((b, direction), 0.0))
+            chan_free[(b, direction)] = start + ser
+        else:
+            start = ready  # intra-DC links are effectively uncontended
+        arrive = start + ser + delay
+        transfers.append(Transfer(p, b, direction, m, start, start + ser, arrive))
+        dst = b + 1 if direction == "act" else b
+        kind = "fwd" if direction == "act" else "bwd"
+        key = (kind, p, dst, m)
+        avail[key] = arrive
+        r = rank_of(key)
+        if r is None:
+            heapq.heappush(parked.setdefault((p, dst), []), m)
+        else:
+            heapq.heappush(heap, (r, key))
 
     while done < n_total:
-        # choose among ready tasks the earliest feasible start;
-        # ties: backward first (rule 4), then micro, then rank
-        best = None
-        for key in list(avail.keys()):
+        assert heap, "deadlock in atlas schedule (cap too small?)"
+        r, key = heapq.heappop(heap)
+        if key not in avail:
+            continue  # stale duplicate of an already-scheduled task
+        r2 = rank_of(key)
+        if r2 is None:  # became cap-blocked since it was pushed
             kind, p, s, m = key
-            t0 = feasible_start(kind, p, s, m)
-            if t0 is None:
-                continue
-            rank = (t0, 0 if kind == "bwd" else 1, m, p)
-            if best is None or rank < best[0]:
-                best = (rank, key, t0)
-        assert best is not None, "deadlock in atlas schedule (cap too small?)"
-        _, (kind, p, s, m), t0 = best
-        del avail[(kind, p, s, m)]
+            heapq.heappush(parked.setdefault((p, s), []), m)
+            continue
+        if heap and r2 > heap[0][0]:
+            heapq.heappush(heap, (r2, key))  # stale rank: requeue and retry
+            continue
+        kind, p, s, m = key
+        t0 = r2[0]
+        del avail[key]
         dur = task_dur(kind, s)
         end = t0 + dur
         gpu_free[(p, s)] = end
@@ -165,36 +226,29 @@ def atlas_schedule(
         if kind == "fwd":
             fwd_sched[(p, s)] += 1
             if s < P - 1:
-                _emit_transfer(
-                    transfers, chan_free, boundary_times, avail,
-                    p, s, "act", m, end, is_wan,
-                )
+                emit_transfer(p, s, "act", m, end)
             else:
-                avail[("bwd", p, s, m)] = end
+                bkey = ("bwd", p, s, m)
+                avail[bkey] = end
+                br = rank_of(bkey)
+                assert br is not None
+                heapq.heappush(heap, (br, bkey))
         else:
             bwd_sched[(p, s)] += 1
+            # rule 2: a scheduled backward frees exactly one in-flight
+            # slot — admit the smallest-m parked forward for it
+            pq = parked.get((p, s))
+            if pq:
+                pm = heapq.heappop(pq)
+                pkey = ("fwd", p, s, pm)
+                pr = rank_of(pkey)
+                assert pr is not None  # the slot just freed
+                heapq.heappush(heap, (pr, pkey))
             if s > 0:
-                _emit_transfer(
-                    transfers, chan_free, boundary_times, avail,
-                    p, s - 1, "grad", m, end, is_wan,
-                )
+                emit_transfer(p, s - 1, "grad", m, end)
         done += 1
 
     makespan = max(t.end for t in tasks)
     if transfers:
         makespan = max(makespan, max(tr.arrive for tr in transfers))
     return Schedule(tasks, transfers, makespan, P, D)
-
-
-def _emit_transfer(transfers, chan_free, boundary_times, avail, p, b, direction, m, ready, is_wan):
-    ser, delay = boundary_times(b, direction)
-    if is_wan[b]:
-        start = max(ready, chan_free.get((b, direction), 0.0))
-        chan_free[(b, direction)] = start + ser
-    else:
-        start = ready  # intra-DC links are effectively uncontended
-    arrive = start + ser + delay
-    transfers.append(Transfer(p, b, direction, m, start, start + ser, arrive))
-    dst = b + 1 if direction == "act" else b
-    kind = "fwd" if direction == "act" else "bwd"
-    avail[(kind, p, dst, m)] = arrive

@@ -27,6 +27,7 @@ the checker as an opt-in runtime assertion mode.
 """
 from __future__ import annotations
 
+from bisect import bisect_right
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import wan
@@ -117,11 +118,14 @@ def check_sim_result(
                 _fail("backward before its forward", g, iv)
 
         # memory cap: completed forwards minus completed backwards at any
-        # forward's start must leave room for it
+        # forward's start must leave room for it (sorted ends + bisect —
+        # the naive quadratic scan dominated validation at paper-scale M)
         if cap is not None:
+            f_ends = sorted(o.end for o in by_kind["fwd"])
+            b_ends = sorted(o.end for o in by_kind["bwd"])
             for iv in by_kind["fwd"]:
-                in_flight = sum(1 for o in by_kind["fwd"] if o.end <= iv.start + EPS) \
-                    - sum(1 for o in by_kind["bwd"] if o.end <= iv.start + EPS)
+                in_flight = bisect_right(f_ends, iv.start + EPS) \
+                    - bisect_right(b_ends, iv.start + EPS)
                 if in_flight >= cap:
                     _fail("in-flight cap exceeded", g, iv, in_flight, cap)
 
@@ -205,11 +209,13 @@ def check_schedule(sched, spec, topo, *, inflight_cap: Optional[int] = None) -> 
         spec.inflight_cap if spec.inflight_cap is not None else P
     )
     for g, ts in tasks_by_gpu.items():
-        fwds = [t for t in ts if t.kind == "fwd"]
-        bwds = [t for t in ts if t.kind == "bwd"]
-        for t in fwds:
-            in_flight = sum(1 for o in fwds if o.start <= t.start + EPS) \
-                - sum(1 for o in bwds if o.end <= t.start + EPS)
+        f_starts = sorted(t.start for t in ts if t.kind == "fwd")
+        b_ends = sorted(t.end for t in ts if t.kind == "bwd")
+        for t in ts:
+            if t.kind != "fwd":
+                continue
+            in_flight = bisect_right(f_starts, t.start + EPS) \
+                - bisect_right(b_ends, t.start + EPS)
             if in_flight > cap:
                 _fail("in-flight cap exceeded (schedule)", g, t, in_flight, cap)
 
@@ -290,3 +296,65 @@ def check_policy(spec, topo, policy: str, n_pipelines: int = 1):
     res = simulator.simulate(spec, topo, policy=policy, n_pipelines=n_pipelines)
     check_sim_result(res, spec, policy=policy)
     return res
+
+
+# ---------------------------------------------------------------------------
+# differential: two SimResults must be interval-identical
+# ---------------------------------------------------------------------------
+
+
+def check_equivalent(res_a, res_b, *, eps: float = EPS) -> None:
+    """Assert two ``SimResult``s describe the *same* schedule: identical
+    interval sets per GPU (start, end, kind, micro), iteration time,
+    utilization and bubbles.  The engine-equivalence net: optimized
+    engine vs ``repro.core.reference``, and steady-state fast-forward vs
+    full event replay."""
+    if res_a.n_pipelines != res_b.n_pipelines:
+        _fail("pipeline counts differ", res_a.n_pipelines, res_b.n_pipelines)
+    if set(res_a.busy) != set(res_b.busy):
+        _fail("busy maps cover different GPUs")
+    if abs(res_a.iteration_ms - res_b.iteration_ms) > eps:
+        _fail("iteration times differ", res_a.iteration_ms, res_b.iteration_ms)
+    if abs(res_a.allreduce_ms - res_b.allreduce_ms) > eps:
+        _fail("all-reduce times differ", res_a.allreduce_ms, res_b.allreduce_ms)
+    if abs(res_a.utilization - res_b.utilization) > 1e-9:
+        _fail("utilizations differ", res_a.utilization, res_b.utilization)
+    key = lambda iv: (iv.start, iv.kind, iv.micro)  # noqa: E731
+    for g in res_a.busy:
+        ivs_a = sorted(res_a.busy[g], key=key)
+        ivs_b = sorted(res_b.busy[g], key=key)
+        if len(ivs_a) != len(ivs_b):
+            _fail("interval counts differ", g, len(ivs_a), len(ivs_b))
+        for a, b in zip(ivs_a, ivs_b):
+            if (
+                abs(a.start - b.start) > eps
+                or abs(a.end - b.end) > eps
+                or a.kind != b.kind
+                or a.micro != b.micro
+            ):
+                _fail("intervals differ", g, a, b)
+        gaps_a, gaps_b = res_a.bubbles[g], res_b.bubbles[g]
+        if len(gaps_a) != len(gaps_b) or any(
+            abs(x0 - y0) > eps or abs(x1 - y1) > eps
+            for (x0, x1), (y0, y1) in zip(gaps_a, gaps_b)
+        ):
+            _fail("bubbles differ", g)
+
+
+def check_fast_forward(spec, topo, policy: str, n_pipelines: int = 1):
+    """Cross-check the steady-state fast-forward against full event
+    replay: both paths must produce interval-identical results (and both
+    must pass the physical invariants).  Returns (fast result, whether
+    the fast-forward actually engaged)."""
+    from repro.core import simulator
+
+    full = simulator.simulate(
+        spec, topo, policy=policy, n_pipelines=n_pipelines, fast_forward=False
+    )
+    fast = simulator.simulate(
+        spec, topo, policy=policy, n_pipelines=n_pipelines, fast_forward=True
+    )
+    check_sim_result(full, spec, policy=policy)
+    check_sim_result(fast, spec, policy=policy)
+    check_equivalent(full, fast)
+    return fast, bool(fast.stats and fast.stats.get("fast_forward"))

@@ -84,3 +84,123 @@ def test_algorithm1_fast():
     t0 = time.time()
     algorithm1(JOB, {f"dc{i}": 600 for i in range(5)}, P=60, C=2)
     assert time.time() - t0 < 5.0
+
+
+# --------------------------------------------------- placement-order search
+
+
+def _named_job(topo, M=24):
+    import dataclasses
+
+    return dataclasses.replace(JOB, microbatches=M, topology=topo)
+
+
+def _random_named_topo(n, seed):
+    import random
+
+    from repro.core import topology as tp
+
+    rng = random.Random(seed)
+    lat = [[0.0] * n for _ in range(n)]
+    for a in range(n):
+        for b in range(a + 1, n):
+            lat[a][b] = lat[b][a] = float(rng.choice([5, 10, 20, 40, 80, 150]))
+    return tp.TopologyMatrix.from_latency(
+        lat, multi_tcp=True, dc_names=tuple(f"dc{i}" for i in range(n))
+    )
+
+
+def test_bnb_matches_exhaustive_on_presets():
+    """The branch-and-bound order search must return the same best plan
+    as the exhaustive permutation scan on every named preset topology."""
+    from repro.core import topology as tp
+
+    cases = [
+        (tp.skewed_3dc(), {"dc0": 8, "dc1": 8, "dc2": 10}, 12),
+        (tp.azure_testbed(), {n: 8 for n in tp.azure_testbed().dc_names}, 12),
+        (tp.TopologyMatrix.uniform(3, 10.0, dc_names=("dc0", "dc1", "dc2")),
+         {"dc0": 8, "dc1": 8, "dc2": 10}, 12),
+    ]
+    for topo, fleet, P in cases:
+        job = _named_job(topo)
+        pb = algorithm1(job, fleet, P=P, C=2, search_orders=True, order_search="bnb")
+        pe = algorithm1(job, fleet, P=P, C=2, search_orders=True,
+                        order_search="exhaustive")
+        for b, e in zip(pb, pe):
+            if math.isinf(e.total_ms):
+                assert math.isinf(b.total_ms)
+                continue
+            assert b.total_ms == pytest.approx(e.total_ms, rel=1e-9)
+            nzb = {d: k for d, k in b.partitions.items() if k}
+            nze = {d: k for d, k in e.partitions.items() if k}
+            assert nzb == nze, (topo.name, b.dc_order, e.dc_order)
+
+
+def test_bnb_matches_exhaustive_on_random_wans():
+    """Negative-control sweep: random ≤6-DC WAN matrices with uneven
+    fleets — branch-and-bound and exhaustive must agree on cost and on
+    the (nonzero) partition placement."""
+    import random
+
+    rng = random.Random(7)
+    for trial in range(12):
+        n = rng.choice([3, 4, 5, 6])
+        topo = _random_named_topo(n, seed=100 + trial)
+        fleet = {f"dc{i}": rng.choice([0, 4, 8, 12]) for i in range(n)}
+        P = rng.choice([6, 9, 12])
+        job = _named_job(topo, M=rng.choice([16, 60]))
+        pb = algorithm1(job, fleet, P=P, C=2, search_orders=True, order_search="bnb")
+        pe = algorithm1(job, fleet, P=P, C=2, search_orders=True,
+                        order_search="exhaustive")
+        for b, e in zip(pb, pe):
+            if math.isinf(e.total_ms):
+                assert math.isinf(b.total_ms), trial
+                continue
+            assert b.total_ms == pytest.approx(e.total_ms, rel=1e-9), trial
+            nzb = {d: k for d, k in b.partitions.items() if k}
+            nze = {d: k for d, k in e.partitions.items() if k}
+            assert nzb == nze, (trial, b.dc_order, e.dc_order)
+
+
+def test_bnb_handles_8_dcs_under_a_second():
+    """Acceptance: 8 named DCs, every DC required, in < 1 s (the
+    exhaustive scan would evaluate 40320 permutations per D)."""
+    import time
+
+    topo = _random_named_topo(8, seed=1)
+    fleet = {f"dc{i}": 4 for i in range(8)}
+    job = _named_job(topo, M=60)
+    t0 = time.perf_counter()
+    plans = algorithm1(job, fleet, P=16, C=2, search_orders=True)
+    dt = time.perf_counter() - t0
+    assert dt < 1.0, dt
+    assert best_plan(plans).total_ms < float("inf")
+    used = [d for d in best_plan(plans).dc_order
+            if best_plan(plans).partitions.get(d, 0)]
+    assert len(used) == 8  # the fleet forces a full 8-DC span
+
+
+def test_order_search_caps_and_errors():
+    topo = _random_named_topo(6, seed=3)
+    job = _named_job(topo)
+    fleet = {f"dc{i}": 8 for i in range(6)}
+    with pytest.raises(ValueError):
+        algorithm1(job, fleet, P=12, C=2, search_orders=True, order_search="nope")
+    big = _random_named_topo(13, seed=4)
+    big_fleet = {f"dc{i}": 8 for i in range(13)}
+    with pytest.raises(ValueError):
+        algorithm1(_named_job(big), big_fleet, P=12, C=2, search_orders=True)
+
+
+def test_latency_pp_memoized():
+    from repro.core import dc_selection as dcs
+    from repro.core.dc_selection import get_latency_pp
+
+    topo = _random_named_topo(3, seed=9)
+    job = _named_job(topo)
+    part = {"dc0": 4, "dc1": 4, "dc2": 4}
+    v1 = get_latency_pp(job, part, ("dc0", "dc1", "dc2"), 2)
+    n = len(dcs._PP_MEMO)
+    v2 = get_latency_pp(job, dict(part), ["dc0", "dc1", "dc2"], 2)
+    assert v1 == v2
+    assert len(dcs._PP_MEMO) == n  # second call was a cache hit

@@ -1,0 +1,175 @@
+"""Differential tests for the fast-path schedule engine.
+
+Two nets, both via ``repro.core.validate.check_equivalent``:
+
+  * the heap-based event core + lazy-heap Atlas list-scheduler must be
+    *interval-identical* to the pre-refactor reference engine
+    (``repro.core.reference``) across a (policy × topology × M) grid;
+  * the steady-state fast-forward must be interval-identical to full
+    event replay wherever it engages, and must fall back (not corrupt
+    results) where the schedule has no detectable period.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import reference as ref
+from repro.core import topology as tp
+from repro.core import validate as V
+from repro.core import wan
+from repro.core.simulator import GeoTopology, PipelineSpec, simulate
+from repro.core.simulator import testbed_spec as make_spec
+
+GPT_A = dict(hidden=4096, seq_len=4096, micro_batch=1, layers_per_stage=1,
+             layer_params=412e6)
+GPT_B = dict(hidden=8192, seq_len=6144, micro_batch=1, layers_per_stage=1,
+             layer_params=1.2e9)
+
+POLICIES = ("gpipe", "megatron", "varuna", "atlas")
+TOPOS = {
+    "uniform": GeoTopology(wan_latency_ms=40.0, multi_tcp=True),
+    "uniform-single": GeoTopology(wan_latency_ms=40.0, multi_tcp=False),
+    "azure": tp.azure_testbed(),
+    "skewed": tp.skewed_3dc(),
+}
+
+
+def _spec(model, M, P=4, dcs=(0, 0, 1, 2)):
+    return make_spec(**model, num_stages=P, microbatches=M, stage_dc=list(dcs))
+
+
+# ---------------------------------------------------------------- reference
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("topo_name", list(TOPOS))
+def test_engine_matches_reference(policy, topo_name):
+    topo = TOPOS[topo_name]
+    for model in (GPT_A, GPT_B):
+        for M in (4, 9, 16):
+            spec = _spec(model, M)
+            D = 3 if policy == "atlas" else 2
+            r_ref = ref.simulate(spec, topo, policy=policy, n_pipelines=D,
+                                 dp_replicas_for_allreduce=2)
+            r_new = simulate(spec, topo, policy=policy, n_pipelines=D,
+                             dp_replicas_for_allreduce=2, fast_forward=False)
+            V.check_equivalent(r_ref, r_new)
+            V.check_sim_result(r_new, spec, policy=policy)
+
+
+def test_engine_matches_reference_tight_caps():
+    """Explicit in-flight caps exercise the parked-forward machinery of
+    both the event core and the lazy-heap list scheduler."""
+    topo = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
+    for policy in POLICIES:
+        for cap in (1, 2, 3):
+            spec = dataclasses.replace(_spec(GPT_B, 12), inflight_cap=cap)
+            D = 2
+            r_ref = ref.simulate(spec, topo, policy=policy, n_pipelines=D)
+            r_new = simulate(spec, topo, policy=policy, n_pipelines=D,
+                             fast_forward=False)
+            V.check_equivalent(r_ref, r_new)
+
+
+def test_replicated_pipelines_identical():
+    """Baseline policies simulate one pipeline and replicate: every
+    pipeline's schedule must be identical (they share no resources)."""
+    spec = _spec(GPT_B, 8)
+    res = simulate(spec, TOPOS["azure"], policy="varuna", n_pipelines=3)
+    for s in range(spec.num_stages):
+        base = [(iv.start, iv.end, iv.kind, iv.micro) for iv in res.busy[(0, s)]]
+        for p in (1, 2):
+            got = [(iv.start, iv.end, iv.kind, iv.micro) for iv in res.busy[(p, s)]]
+            assert got == base
+
+
+# ------------------------------------------------------------ fast-forward
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("topo_name", list(TOPOS))
+def test_fast_forward_interval_identical(policy, topo_name):
+    """Where the fast-forward engages it must reproduce full replay
+    exactly; on the paper-testbed shape it engages for every policy and
+    both M values (a period of 1, 3, 4 or 12 microbatches)."""
+    topo = TOPOS[topo_name]
+    for M in (200, 333):
+        spec = _spec(GPT_B, M)
+        D = 3 if policy == "atlas" else 2
+        fast, engaged = V.check_fast_forward(spec, topo, policy, n_pipelines=D)
+        assert engaged, (policy, topo_name, M)
+        assert fast.stats["period"] >= 1
+        assert fast.stats["extrapolated_microbatches"] > 0
+
+
+def test_fast_forward_cross_policy_ordering_preserved():
+    """Fig-9 ordering must survive fast-forward at large M."""
+    spec = _spec(GPT_B, 256)
+    tb = GeoTopology(wan_latency_ms=40.0, multi_tcp=False)
+    ta = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
+    at = simulate(spec, ta, policy="atlas", n_pipelines=3, validate=True).iteration_ms
+    va = simulate(spec, tb, policy="varuna", validate=True).iteration_ms
+    gp = simulate(spec, tb, policy="gpipe", validate=True).iteration_ms
+    assert at <= va <= gp
+
+
+def test_fast_forward_falls_back_on_aperiodic_schedule():
+    """P=16 at 40 ms WAN with C=2 has no period ≤ 32 (latency-delayed cap
+    feedback) — the engine must detect that and fall back to full replay,
+    bit-compatibly."""
+    spec = PipelineSpec(
+        num_stages=16, microbatches=224, t_fwd_ms=10.0,
+        act_bytes=2 * 10e-3 * wan.NODE_PAIR_CAP_GBPS * 1e9 / 8,
+        stage_dc=tuple(sum([[d] * 4 for d in range(4)], [])),
+    )
+    topo = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
+    fast, engaged = V.check_fast_forward(spec, topo, "varuna", n_pipelines=1)
+    assert not engaged
+    assert fast.stats["fast_forward"] is False
+
+
+def test_fast_forward_disabled_below_probe_size():
+    """M smaller than the probes: no fast-forward even when forced."""
+    spec = _spec(GPT_B, 16)
+    res = simulate(spec, TOPOS["uniform"], policy="varuna", fast_forward=True)
+    assert res.stats["fast_forward"] is False
+
+
+def test_fast_forward_respects_explicit_inflight_cap():
+    topo = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
+    spec = dataclasses.replace(_spec(GPT_B, 250), inflight_cap=2)
+    fast, engaged = V.check_fast_forward(spec, topo, "varuna", n_pipelines=1)
+    V.check_sim_result(fast, spec, policy="varuna", inflight_cap=2)
+
+
+def test_fast_forward_auto_mode_used_by_default():
+    """The default simulate() call must engage the fast-forward on a
+    large-M spec (and stay interval-identical — spot check)."""
+    spec = _spec(GPT_B, 512)
+    topo = TOPOS["uniform"]
+    res = simulate(spec, topo, policy="varuna", validate=True)
+    assert res.stats["fast_forward"] is True
+    full = simulate(spec, topo, policy="varuna", fast_forward=False)
+    V.check_equivalent(res, full)
+
+
+def test_engine_stats_recorded():
+    spec = _spec(GPT_A, 8)
+    res = simulate(spec, TOPOS["uniform"], policy="varuna", n_pipelines=2)
+    assert res.stats["events"] > 0
+    assert res.stats["replicated_pipelines"] == 2
+    at = simulate(spec, TOPOS["uniform"], policy="atlas", n_pipelines=2)
+    assert at.stats["engine"] == "atlas-precomputed"
+
+
+# ------------------------------------------------------- equivalence checker
+
+
+def test_check_equivalent_detects_differences():
+    spec = _spec(GPT_A, 6)
+    res_a = simulate(spec, TOPOS["uniform"], policy="varuna")
+    res_b = simulate(spec, TOPOS["uniform"], policy="varuna")
+    V.check_equivalent(res_a, res_b)  # sanity: identical runs agree
+    res_b.busy[(0, 1)][3].start += 0.5
+    with pytest.raises(V.InvariantViolation):
+        V.check_equivalent(res_a, res_b)
