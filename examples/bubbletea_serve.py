@@ -1,9 +1,15 @@
 """BubbleTea prefill-as-a-service demo:
 
 1. Simulate an Atlas training iteration (12 GPUs / 3 DCs) and collect its
-   consolidated bubbles.
+   consolidated bubbles.  ``res.bubbles`` stops at the pipeline end: the
+   trailing DP all-reduce span is busy communication, so no prefill can
+   be placed there (it used to be mis-recorded as one giant bubble per
+   GPU) — the utilization figures below are computed from the corrected
+   bubbles.
 2. Replay a synthetic inference trace through the BubbleTea controller:
-   admission, placement, TTFT, utilization 45% -> ~94% (paper Fig 13).
+   admission (including the §5 TTFT-SLO check — late placements are
+   rejected back to the dedicated fleet), placement, TTFT, utilization
+   45% -> ~94% (paper Fig 13).
 3. Run a REAL Splitwise-style prefill/decode split on a reduced model to
    show the KV-cache handoff.
 
@@ -32,14 +38,17 @@ def main():
         layer_params=1.2e9, num_stages=4, microbatches=16, stage_dc=[0, 0, 1, 2],
     )
     res = simulate(spec, GeoTopology(wan_latency_ms=40, multi_tcp=True),
-                   policy="atlas", n_pipelines=3)
+                   policy="atlas", n_pipelines=3, dp_replicas_for_allreduce=3)
+    pp_end = res.iteration_ms - res.allreduce_ms
     print(f"[atlas] iter={res.iteration_ms:.0f}ms util={res.utilization:.0%} "
-          f"(bubbles to fill)")
+          f"(bubbles to fill; all-reduce span "
+          f"[{pp_end:.0f}, {res.iteration_ms:.0f}]ms stays busy)")
 
     # ---- 2) prefill-as-a-service ----
     lm = PrefillLatencyModel(InferenceModelSpec("llama3-8b", 8e9))
     ctrl = BubbleTeaController(
-        [list(res.bubbles[g]) for g in sorted(res.bubbles)], lm, pp_degree=1
+        [list(res.bubbles[g]) for g in sorted(res.bubbles)], lm, pp_degree=1,
+        ttft_slo_ms=5000.0,
     )
     rng = np.random.default_rng(0)
     t, rid = 0.0, 0
@@ -53,7 +62,8 @@ def main():
     after = utilization_with_prefills(busy, total, ctrl)
     ttfts = [p.ttft_ms for p in ctrl.placements]
     print(f"[bubbletea] requests={rid} placed={len(ctrl.placements)} "
-          f"accept={ctrl.acceptance_rate():.0%}")
+          f"accept={ctrl.acceptance_rate():.0%} "
+          f"slo-rejects={len(ctrl.rejected_slo)}")
     print(f"[bubbletea] utilization {res.utilization:.0%} -> {after:.0%} "
           f"(paper: 45% -> 94%)")
     print(f"[bubbletea] TTFT ms p50={np.percentile(ttfts, 50):.0f} "

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -128,6 +129,17 @@ class BubbleTeaController:
     one DC (paper §5.1); its usable windows are the *intersection* of its
     member GPUs' training bubbles, which the caller computes (for PP=1 the
     member is a single GPU and windows are its raw bubbles).
+
+    Requests must arrive in nondecreasing ``arrival_ms`` order: windows
+    that ended before the current arrival are pruned (a per-pipeline live
+    cursor), so first-fit scans live windows only instead of degrading
+    linearly in dead windows over a long trace.
+
+    ``ttft_slo_ms`` (paper §5: prefills ride bubbles only if the TTFT SLO
+    still holds) enables admission control: a request whose *earliest*
+    feasible placement already blows the SLO — queue delay included — is
+    rejected back to the dedicated inference fleet instead of being
+    placed late.
     """
 
     def __init__(
@@ -136,6 +148,7 @@ class BubbleTeaController:
         latency_model: PrefillLatencyModel,
         pp_degree: int = 1,
         guard_ms: float = 1.0,
+        ttft_slo_ms: Optional[float] = None,
     ):
         self.windows: List[List[_Window]] = [
             sorted((_Window(a, b) for a, b in pipe), key=lambda w: w.start)
@@ -145,17 +158,34 @@ class BubbleTeaController:
         self.pp = pp_degree
         self.guard = guard_ms  # paper §6.5: small residual gap so training
         # resumes without delay
+        self.ttft_slo_ms = ttft_slo_ms
         self.placements: List[Placement] = []
         self.rejected: List[int] = []
+        self.rejected_slo: List[int] = []
         self.search_time_us: List[float] = []
+        # first window per pipeline that could still serve a request at
+        # the latest arrival seen (windows are disjoint and start-sorted,
+        # hence end-sorted — everything before the cursor is dead)
+        self._live: List[int] = [0] * len(self.windows)
+        self._last_arrival = -math.inf
 
     def submit(self, req: PrefillRequest) -> Optional[Placement]:
-        """Place a prefill (first-fit over pipelines' windows) or reject."""
+        """Place a prefill (first-fit over pipelines' live windows) or
+        reject (capacity or TTFT SLO)."""
+        assert req.arrival_ms >= self._last_arrival, (
+            "requests must be submitted in arrival order"
+        )
+        self._last_arrival = req.arrival_ms
         t0 = time.perf_counter()
         need = self.lat.prefill_ms(req.prompt_tokens, self.pp) + self.guard
         best: Optional[Tuple[float, int, int]] = None  # (start, pipe, idx)
         for pi, wins in enumerate(self.windows):
-            for wi, w in enumerate(wins):
+            lo = self._live[pi]
+            while lo < len(wins) and wins[lo].end <= req.arrival_ms + 1e-9:
+                lo += 1  # dead: ended before this (and every later) arrival
+            self._live[pi] = lo
+            for wi in range(lo, len(wins)):
+                w = wins[wi]
                 start = max(w.start, req.arrival_ms)
                 if w.end - start >= need:
                     if best is None or start < best[0]:
@@ -166,6 +196,14 @@ class BubbleTeaController:
             self.rejected.append(req.req_id)
             return None
         start, pi, wi = best
+        queue = start - req.arrival_ms
+        ttft = self.lat.ttft_ms(req.prompt_tokens, self.pp, queue_ms=queue)
+        if self.ttft_slo_ms is not None and ttft > self.ttft_slo_ms:
+            # first-fit minimizes the start time, so every other feasible
+            # placement has at least this queue delay: reject, don't place
+            self.rejected.append(req.req_id)
+            self.rejected_slo.append(req.req_id)
+            return None
         w = self.windows[pi][wi]
         dur = need - self.guard
         # split the window
@@ -175,8 +213,6 @@ class BubbleTeaController:
         if w.end - (start + need) > 1e-9:
             new.append(_Window(start + need, w.end))
         self.windows[pi][wi : wi + 1] = new
-        queue = start - req.arrival_ms
-        ttft = self.lat.ttft_ms(req.prompt_tokens, self.pp, queue_ms=queue)
         p = Placement(req.req_id, pi, start, dur, ttft, queue)
         self.placements.append(p)
         return p
@@ -186,6 +222,10 @@ class BubbleTeaController:
     def acceptance_rate(self) -> float:
         n = len(self.placements) + len(self.rejected)
         return len(self.placements) / n if n else 0.0
+
+    def slo_rejection_rate(self) -> float:
+        n = len(self.placements) + len(self.rejected)
+        return len(self.rejected_slo) / n if n else 0.0
 
     def prefill_busy_ms(self) -> float:
         return sum(p.duration_ms for p in self.placements)

@@ -71,18 +71,34 @@ class JobModel:
             return wan.Link(wan.INTRA_DC_LATENCY_MS, self.intra_bw_gbps)
         return wan.wan_link(self.wan_latency_ms, self.multi_tcp)
 
+    def pair_bw_gbps(self, idx_a: int, idx_b: int) -> float:
+        """Planning-time bandwidth of the *directed* pair: the worst
+        segment of its time-varying schedule when one is attached, else
+        the static link rate.  Algorithm 1 prices every boundary by what
+        the direction can guarantee across the whole iteration — this is
+        what makes placements bandwidth-asymmetric (a link degraded in
+        one direction repels only the schedules that would cross it that
+        way), not merely latency-aware."""
+        if self.topology is not None:
+            return self.topology.effective_bw_gbps(idx_a, idx_b)
+        return self.pair_link(idx_a, idx_b).bw_gbps
+
     @property
     def comm_compute_ratio(self) -> float:
         """C — WAN serialization time of one boundary transfer over t_fwd.
 
-        Heterogeneous topologies size C from the *best* WAN pair: the
+        Heterogeneous topologies size C from the *best* WAN pair (by
+        worst-segment bandwidth when schedules are attached): the
         placement-order search keeps the slow pairs off the stage
         boundaries, so the best link is what a cell actually crosses —
         sizing from the bottleneck would inflate C until no DC can hold
         a partition (every plan infeasible) on exactly the skewed WANs
         the search handles."""
         if self.topology is not None and self.topology.n_dcs > 1:
-            bw = self.topology.best_link().bw_gbps
+            bw = max(
+                self.topology.effective_bw_gbps(a, b)
+                for a, b in self.topology.wan_pairs()
+            )
         else:
             bw = (
                 wan.NODE_PAIR_CAP_GBPS
@@ -137,6 +153,9 @@ def _job_memo_key(job: JobModel) -> Tuple:
         tkey = (
             topo.n_dcs,
             tuple(sorted(topo.links.items())),
+            # schedules change planning-time bandwidth: topologies that
+            # differ only in bw_schedules must not share memo entries
+            tuple(sorted(topo.bw_schedules.items())),
             topo.intra_bw_gbps,
             topo.intra_latency_ms,
             topo.default_latency_ms,
@@ -196,13 +215,17 @@ def _pair_terms(
 ) -> Tuple[float, float, float]:
     """(fill term, drain term, channel occupancy) of one WAN boundary
     a -> b: activations ride the forward link, gradients the reverse one,
-    the scatter/gather hops stream with the WAN send.  The single pricing
-    point shared by the closed form and the branch-and-bound search —
-    change the model here and both stay in lock-step."""
+    the scatter/gather hops stream with the WAN send.  Each direction is
+    priced at its own *worst-segment* bandwidth (``pair_bw_gbps``) when a
+    time-varying schedule is attached — placements must survive the
+    slowest hour, and the two directions may degrade independently.  The
+    single pricing point shared by the closed form and the
+    branch-and-bound search — change the model here and both stay in
+    lock-step."""
     fwd = job.pair_link(idx_a, idx_b)
     rev = job.pair_link(idx_b, idx_a)
-    ser_f = job.act_bytes * 8.0 / (fwd.bw_gbps * 1e9) * 1e3
-    ser_r = job.act_bytes * 8.0 / (rev.bw_gbps * 1e9) * 1e3
+    ser_f = job.act_bytes * 8.0 / (job.pair_bw_gbps(idx_a, idx_b) * 1e9) * 1e3
+    ser_r = job.act_bytes * 8.0 / (job.pair_bw_gbps(idx_b, idx_a) * 1e9) * 1e3
     fill = ser_f / D + 2.0 * hop + fwd.latency_ms
     drain = ser_r / D + 2.0 * hop + rev.latency_ms
     return fill, drain, max(ser_f, ser_r)

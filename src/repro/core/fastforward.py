@@ -38,6 +38,14 @@ an aperiodic schedule, a period too long for the probes, M too small to
 amortize them — returns ``None`` and the caller falls back to full
 event replay.
 
+Time-varying bandwidth (``TopologyMatrix.bw_schedules``) invalidates
+the whole model: a segment boundary anywhere in the iteration breaks
+the constant-Λ steady state, and the short probes cannot observe
+changes beyond their own horizon — ``fast_forward_gate`` therefore
+refuses to probe at all when any WAN boundary carries a non-flat
+schedule (recorded by the caller in ``stats["fast_forward_gate"]``);
+flat schedules are interval-identical to the static engine and pass.
+
 Probing at M ≡ M1 (mod K) matters: the drain's shape depends on where
 the last microbatch lands in the period, so probes are phase-aligned
 with the target before the tail is compared.  Durations are taken
@@ -58,9 +66,31 @@ MIN_MID = 6  # minimum mid-window length (starts) per stream
 MIN_HEADROOM = 8  # auto mode: M must exceed the probes by at least this
 K_MAX = 32  # give up on periods longer than this
 
+GATE_TIME_VARYING = "time-varying-bandwidth"
+
 
 def _close(a: float, b: float) -> bool:
     return abs(a - b) <= 1e-7 + 1e-9 * max(abs(a), abs(b))
+
+
+def fast_forward_gate(spec: PipelineSpec, topo) -> Optional[str]:
+    """A reason the fast-forward must not even be *attempted* for this
+    (spec, topo), or ``None`` when probing is sound.
+
+    Time-varying bandwidth is a hard gate rather than a detection
+    failure: the probes are short-M replays whose events all land early
+    in the timeline, so a bandwidth change beyond the probe horizon
+    (e.g. an outage at hour 3 of a 6-hour iteration) would be invisible
+    to them — the probes would "detect" a period and extrapolate
+    through the change, silently diverging from full replay.  Flat
+    schedules (and schedule-free topologies) keep the static engine's
+    periodicity and pass.  The caller records the gate in
+    ``stats["fast_forward_gate"]``."""
+    from repro.core.simulator import has_time_varying_wan
+
+    if has_time_varying_wan(spec, topo):
+        return GATE_TIME_VARYING
+    return None
 
 
 def probe_sizes(spec: PipelineSpec, n_pipelines: int) -> Tuple[int, int]:

@@ -165,6 +165,10 @@ def simulate(
 
 
 def _finish(spec, topo, busy, pp_end, D, dp_replicas) -> SimResult:
+    # bubble semantics changed with the engines (see the module rule: if
+    # the modelled physics change, both engines and the checker move
+    # together): gaps are capped at pp_end — the trailing DP all-reduce
+    # span is busy communication, not schedulable idle time
     ar = wan.allreduce_ms(
         spec.stage_param_bytes, dp_replicas, topo.intra_bw_gbps
     )
@@ -180,8 +184,8 @@ def _finish(spec, topo, busy, pp_end, D, dp_replicas) -> SimResult:
                 gaps.append((cur, iv.start))
             cur = max(cur, iv.end)
             busy_sum += iv.end - iv.start
-        if cur < total - 1e-9:
-            gaps.append((cur, total))
+        if cur < pp_end - 1e-9:
+            gaps.append((cur, pp_end))
         bubbles[g] = gaps
     util = busy_sum / (total * len(busy)) if total > 0 else 0.0
     return SimResult(

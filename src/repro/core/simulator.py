@@ -79,6 +79,11 @@ class GeoTopology:
     def is_wan(self, dc_a: int, dc_b: int) -> bool:
         return dc_a != dc_b
 
+    def bandwidth_schedule(self, dc_a: int, dc_b: int) -> None:
+        """Uniform topologies are static; time-varying bandwidth lives on
+        ``TopologyMatrix.bw_schedules``."""
+        return None
+
     def matrix(self, n_dcs: int) -> "TopologyMatrix":
         """The equivalent (uniform) ``TopologyMatrix``."""
         return TopologyMatrix.uniform(
@@ -103,6 +108,9 @@ class SimResult:
     iteration_ms: float
     busy: Dict[Tuple[int, int], List[Interval]]  # (pipeline, stage) -> intervals
     utilization: float
+    # schedulable idle windows within the pipeline span [0, iteration_ms -
+    # allreduce_ms]; the trailing DP all-reduce is busy communication, not
+    # a bubble (BubbleTea must not place prefills there)
     bubbles: Dict[Tuple[int, int], List[Tuple[float, float]]]
     allreduce_ms: float
     n_pipelines: int
@@ -113,6 +121,31 @@ class SimResult:
 
 
 POLICIES = ("gpipe", "megatron", "varuna", "atlas")
+
+
+def boundary_schedule(topo, spec: PipelineSpec, s_from: int, s_to: int):
+    """The ``wan.BandwidthSchedule`` governing the ``s_from -> s_to``
+    transfer, or ``None`` when that directed DC pair is static (uniform
+    topologies, intra-DC hops, pairs without an attached schedule)."""
+    get = getattr(topo, "bandwidth_schedule", None)
+    if get is None:
+        return None
+    return get(spec.stage_dc[s_from], spec.stage_dc[s_to])
+
+
+def has_time_varying_wan(spec: PipelineSpec, topo) -> bool:
+    """Does any stage boundary of ``spec`` cross a WAN pair whose
+    bandwidth schedule is non-flat (in either direction)?  Gates the
+    steady-state fast-forward: a bandwidth change anywhere in the
+    iteration breaks the periodicity the extrapolation relies on, and
+    the probes (short-M replays) cannot see changes beyond their own
+    horizon — so the engine must fall back to full replay."""
+    for s in range(spec.num_stages - 1):
+        for a, b in ((s, s + 1), (s + 1, s)):
+            sched = boundary_schedule(topo, spec, a, b)
+            if sched is not None and not sched.is_flat():
+                return True
+    return False
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +179,10 @@ def simulate(
     disables it (full event replay).  Whenever detection fails the engine
     silently falls back to full replay — the result is bit-compatible
     either way (``res.stats["fast_forward"]`` records what happened).
+    Time-varying bandwidth (a non-flat ``TopologyMatrix`` schedule on a
+    WAN boundary) breaks steady-state periodicity, so the fast-forward
+    is gated off even under ``fast_forward=True``;
+    ``res.stats["fast_forward_gate"]`` records the reason.
     """
     assert policy in POLICIES
     D = n_pipelines
@@ -161,15 +198,20 @@ def simulate(
         return _run_events(s, topo, policy, engine_D)
 
     raw = None
+    ff_gate = None
     if fast_forward is not False:
         from repro.core import fastforward
 
-        raw = fastforward.try_fast_forward(
-            spec, run_raw, n_pipelines=engine_D, force=fast_forward is True
-        )
+        ff_gate = fastforward.fast_forward_gate(spec, topo)
+        if ff_gate is None:
+            raw = fastforward.try_fast_forward(
+                spec, run_raw, n_pipelines=engine_D, force=fast_forward is True
+            )
     if raw is None:
         busy, pp_end, stats = run_raw(spec)
         stats["fast_forward"] = False
+        if ff_gate is not None:
+            stats["fast_forward_gate"] = ff_gate
     else:
         busy, pp_end, stats = raw
     stats["replicated_pipelines"] = replicate
@@ -209,17 +251,26 @@ def _run_events(
     pipes = range(D)
 
     # --- memoized per-boundary transfer times --------------------------------
-    # (channel occupancy ms, extra delivery delay ms): occupancy is the
-    # serialization time (the bandwidth resource); propagation latency
-    # delays delivery but does not hold the link — back-to-back transfers
-    # pipeline through the WAN.  Computed once per (s_from, s_to) instead
-    # of per transfer.
-    ttimes: Dict[Tuple[int, int], Tuple[float, float]] = {}
+    # (channel occupancy ms, extra delivery delay ms, bandwidth schedule):
+    # occupancy is the serialization time (the bandwidth resource);
+    # propagation latency delays delivery but does not hold the link —
+    # back-to-back transfers pipeline through the WAN.  On a static pair
+    # the occupancy is a constant, computed once per (s_from, s_to); a
+    # time-varying pair carries its schedule instead and integrates the
+    # bytes across segment boundaries at each transfer's actual start.
+    ttimes: Dict[Tuple[int, int], Tuple[float, float, Optional[object]]] = {}
     for s in range(P - 1):
         for s_from, s_to in ((s, s + 1), (s + 1, s)):
             link = topo.link(spec.stage_dc[s_from], spec.stage_dc[s_to])
-            ser = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
-            ttimes[(s_from, s_to)] = (ser, link.latency_ms)
+            bw = link.bw_gbps
+            sched = boundary_schedule(topo, spec, s_from, s_to)
+            if sched is not None and sched.is_flat():
+                # a flat schedule is a constant rate: keep the memoized
+                # fast path (at the schedule's rate, which may override
+                # the static link's)
+                bw, sched = sched.bw_gbps[0], None
+            ser = (spec.act_bytes * 8.0) / (bw * 1e9) * 1e3
+            ttimes[(s_from, s_to)] = (ser, link.latency_ms, sched)
 
     # --- channels: (pipeline, boundary, dir), a heap ordered by (micro,
     # rank) — transfers are *scheduled*, not FIFO (paper §4.4 rule 3):
@@ -302,7 +353,9 @@ def _run_events(
         if not pend or chan_free.get(key, 0.0) > now + 1e-12:
             return
         m, p, s_from, s_to, direction = heapq.heappop(pend)
-        ser, delay = ttimes[(s_from, s_to)]
+        ser, delay, sched = ttimes[(s_from, s_to)]
+        if sched is not None:
+            ser = sched.transfer_ms(spec.act_bytes, now)
         chan_free[key] = now + ser
         push(now + ser + delay, "arrive", (p, s_to, direction, m))
         push(now + ser, "chan_free", (key,))
@@ -373,7 +426,14 @@ def _finalize(
 ) -> SimResult:
     """Wrap raw busy intervals into a SimResult: add the analytic DP
     all-reduce (intra-DC rings, §4.2) and run the single-pass bubble /
-    utilization accounting shared by every engine path."""
+    utilization accounting shared by every engine path.
+
+    Bubble extraction is capped at ``pp_end``: the trailing
+    ``[pp_end, pp_end + allreduce_ms]`` span is the DP all-reduce, during
+    which every GPU is busy communicating — it is *not* schedulable idle
+    time, and recording it as a bubble let BubbleTea place prefills on
+    GPUs mid-all-reduce.  Utilization stays busy-compute over the whole
+    iteration (including the all-reduce span in the denominator)."""
     ar = wan.allreduce_ms(spec.stage_param_bytes, dp_replicas, topo.intra_bw_gbps)
     total = pp_end + ar
     bubbles: Dict[Tuple[int, int], List[Tuple[float, float]]] = {}
@@ -393,8 +453,8 @@ def _finalize(
             if iv.end > cur:
                 cur = iv.end
             busy_sum += iv.end - iv.start
-        if cur < total - 1e-9:
-            gaps.append((cur, total))
+        if cur < pp_end - 1e-9:
+            gaps.append((cur, pp_end))
         bubbles[g] = gaps
     util = busy_sum / (total * len(busy)) if total > 0 else 0.0
     return SimResult(

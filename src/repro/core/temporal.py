@@ -91,26 +91,51 @@ def atlas_schedule(
     t_b = spec.bwd_mult * t_f
     cap = inflight_cap if inflight_cap is not None else P
 
-    def boundary_times(b: int, direction: str = "act") -> Tuple[float, float]:
-        """(channel occupancy, delivery delay) for boundary b.
+    def boundary_times(b: int, direction: str = "act") -> Tuple:
+        """(occupancy, delivery delay, schedule, rate multiplier) for
+        boundary b.
 
         Direction matters on asymmetric topologies: activations ride the
         b -> b+1 link, gradients the reverse b+1 -> b link (matching the
         event simulator's transfer times).  The intra-DC scatter/gather
         hops stream with the WAN send: they delay delivery but never
-        hold the shared WAN channel."""
+        hold the shared WAN channel.
+
+        On a static pair the occupancy is the returned constant; a pair
+        with a ``wan.BandwidthSchedule`` is priced per transfer at its
+        actual start time (``_occupancy``), the cell's temporal sharing
+        entering as a D× rate multiplier.  The returned constant is then
+        the *worst-segment* occupancy — used only for the DP-injection
+        stagger slot, where a conservative (largest) slot keeps the
+        transfer demands interleaved through the slowest segment."""
         dc_a, dc_b = spec.stage_dc[b], spec.stage_dc[b + 1]
         link = topo.link(dc_a, dc_b) if direction == "act" else topo.link(dc_b, dc_a)
-        ser = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
+        sched = None
+        get = getattr(topo, "bandwidth_schedule", None)
+        if get is not None:
+            sched = get(dc_a, dc_b) if direction == "act" else get(dc_b, dc_a)
+        bw = link.bw_gbps if sched is None else sched.min_bw_gbps()
+        if sched is not None and sched.is_flat():
+            sched = None  # constant rate (= min_bw): keep the fast path
+        ser = (spec.act_bytes * 8.0) / (bw * 1e9) * 1e3
         if dc_a == dc_b:
-            return ser, link.latency_ms
+            return ser, link.latency_ms, None, 1
         hop = (spec.act_bytes * (D - 1) / D * 8.0) / (topo.intra_bw_gbps * 1e9) * 1e3
-        return ser / D, link.latency_ms + 2.0 * hop
+        return ser / D, link.latency_ms + 2.0 * hop, sched, D
 
     is_wan = [spec.stage_dc[b] != spec.stage_dc[b + 1] for b in range(P - 1)]
     btimes = {
         (b, d): boundary_times(b, d) for b in range(P - 1) for d in ("act", "grad")
     }
+
+    def _occupancy(b: int, direction: str, start: float) -> float:
+        """Channel occupancy of one transfer on boundary b beginning at
+        ``start`` — integrates across bandwidth-schedule segments when
+        the pair is time-varying, else the memoized constant."""
+        ser, _delay, sched, mult = btimes[(b, direction)]
+        if sched is None:
+            return ser
+        return sched.transfer_ms(spec.act_bytes, start, rate_mult=mult)
 
     gpu_free = {(p, s): 0.0 for p in range(D) for s in range(P)}
     chan_free: Dict[Tuple[int, str], float] = {}
@@ -185,14 +210,16 @@ def atlas_schedule(
     heapq.heapify(heap)
 
     def emit_transfer(p, b, direction, m, ready):
-        ser, delay = btimes[(b, direction)]
+        delay = btimes[(b, direction)][1]
         if is_wan[b]:
             start = max(ready, chan_free.get((b, direction), 0.0))
-            chan_free[(b, direction)] = start + ser
+            occ = _occupancy(b, direction, start)
+            chan_free[(b, direction)] = start + occ
         else:
             start = ready  # intra-DC links are effectively uncontended
-        arrive = start + ser + delay
-        transfers.append(Transfer(p, b, direction, m, start, start + ser, arrive))
+            occ = _occupancy(b, direction, start)
+        arrive = start + occ + delay
+        transfers.append(Transfer(p, b, direction, m, start, start + occ, arrive))
         dst = b + 1 if direction == "act" else b
         kind = "fwd" if direction == "act" else "bwd"
         key = (kind, p, dst, m)

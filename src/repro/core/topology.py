@@ -31,6 +31,13 @@ class TopologyMatrix:
     a missing ``(a, b)`` falls back to ``(b, a)`` (symmetric networks need
     only one triangle), and pairs absent from both directions use the
     uniform default built from ``default_latency_ms``/``multi_tcp``.
+
+    ``bw_schedules`` optionally attaches a time-varying
+    ``wan.BandwidthSchedule`` to a directed WAN pair (same reverse-pair
+    fallback as ``links``; asymmetric conditions need both directions).
+    A pair without a schedule keeps its static ``Link.bw_gbps`` forever —
+    ``bandwidth_schedule`` then returns ``None`` so engines can keep the
+    memoized constant-transfer fast path.
     """
 
     n_dcs: int
@@ -41,12 +48,18 @@ class TopologyMatrix:
     multi_tcp: bool = True
     dc_names: Tuple[str, ...] = ()
     name: str = ""
+    bw_schedules: Mapping[Pair, wan.BandwidthSchedule] = dataclasses.field(
+        default_factory=dict
+    )
 
     def __post_init__(self):
         assert self.n_dcs >= 1
         for (a, b), l in self.links.items():
             assert 0 <= a < self.n_dcs and 0 <= b < self.n_dcs and a != b, (a, b)
             assert l.bw_gbps > 0 and l.latency_ms >= 0, l
+        for (a, b), sched in self.bw_schedules.items():
+            assert 0 <= a < self.n_dcs and 0 <= b < self.n_dcs and a != b, (a, b)
+            assert isinstance(sched, wan.BandwidthSchedule), sched
         if self.dc_names:
             assert len(self.dc_names) == self.n_dcs
 
@@ -67,6 +80,62 @@ class TopologyMatrix:
 
     def is_wan(self, dc_a: int, dc_b: int) -> bool:
         return dc_a != dc_b
+
+    def bandwidth_schedule(
+        self, dc_a: int, dc_b: int
+    ) -> Optional[wan.BandwidthSchedule]:
+        """Time-varying bandwidth of the directed ``dc_a -> dc_b`` link,
+        or ``None`` when the pair is static (intra-DC pairs always are)."""
+        if dc_a == dc_b:
+            return None
+        s = self.bw_schedules.get((dc_a, dc_b))
+        if s is None:
+            s = self.bw_schedules.get((dc_b, dc_a))
+        return s
+
+    def time_varying(self) -> bool:
+        """Does any WAN pair carry a non-flat bandwidth schedule?"""
+        return any(not s.is_flat() for s in self.bw_schedules.values())
+
+    def effective_bw_gbps(self, dc_a: int, dc_b: int) -> float:
+        """Planning-time bandwidth of the directed pair: the *worst
+        segment* of its schedule when one is attached, else the static
+        link rate.  Placement decisions price a link by what it can
+        guarantee, not by its best hour."""
+        sched = self.bandwidth_schedule(dc_a, dc_b)
+        if sched is not None:
+            return sched.min_bw_gbps()
+        return self.link(dc_a, dc_b).bw_gbps
+
+    # --- schedule attachment ---------------------------------------------
+    def with_bandwidth_schedules(
+        self, schedules: Mapping[Pair, wan.BandwidthSchedule]
+    ) -> "TopologyMatrix":
+        """A copy with ``schedules`` attached (replacing any existing)."""
+        return dataclasses.replace(self, bw_schedules=dict(schedules))
+
+    def with_trace_schedules(
+        self,
+        *,
+        hours: float = 24.0,
+        samples_per_hour: int = 60,
+        seed: int = 0,
+    ) -> "TopologyMatrix":
+        """Attach a Fig-7 measured-style trace schedule to every directed
+        WAN pair.  The seed folds in the pair (and, inside the trace
+        generator, the link's full-precision latency and bandwidth), so
+        distinct pairs fluctuate independently while a fixed topology
+        stays deterministic."""
+        scheds = {
+            (a, b): wan.BandwidthSchedule.from_trace(
+                self.link(a, b),
+                hours=hours,
+                samples_per_hour=samples_per_hour,
+                seed=seed * 10007 + a * self.n_dcs + b,
+            )
+            for a, b in self.wan_pairs()
+        }
+        return self.with_bandwidth_schedules(scheds)
 
     # --- helpers ---------------------------------------------------------
     def index_of(self, dc_name: str, fallback: Optional[int] = None) -> int:

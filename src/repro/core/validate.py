@@ -14,10 +14,12 @@ Any schedule the repo produces (a reactive ``SimResult`` from
   * the in-flight memory cap holds (forwards never run more than ``cap``
     ahead of backwards on a stage);
   * WAN transfers serialize per (boundary, direction) channel and occupy
-    it for exactly the bytes/bandwidth serialization time (temporal
-    sharing: 1/D of it);
+    it for at least the bytes/bandwidth serialization time (temporal
+    sharing: 1/D of it) — priced against the ``wan.BandwidthSchedule``
+    in force at the transfer's start when the pair is time-varying;
   * utilization ∈ [0, 1] and the reported bubbles exactly tile the
-    complement of busy time;
+    complement of busy time within the pipeline span (the trailing DP
+    all-reduce is busy communication, never a bubble);
   * the precomputed Atlas schedule and the event-driven simulator agree
     on iteration time.
 
@@ -142,7 +144,10 @@ def check_sim_result(
                 if ba[m].start < bb[m].end - EPS:
                     _fail("gradient consumed before produced", p, s, m)
 
-    # bubbles tile the complement of busy
+    # bubbles tile the complement of busy within the pipeline span
+    # [0, pp_end]: the trailing DP all-reduce is busy communication, so
+    # no reported bubble may overlap it
+    pp_end = total - res.allreduce_ms
     for g, ivs in res.busy.items():
         gaps = []
         cur = 0.0
@@ -150,9 +155,11 @@ def check_sim_result(
             if iv.start > cur + 1e-9:
                 gaps.append((cur, iv.start))
             cur = max(cur, iv.end)
-        if cur < total - 1e-9:
-            gaps.append((cur, total))
+        if cur < pp_end - 1e-9:
+            gaps.append((cur, pp_end))
         rec = res.bubbles.get(g)
+        # exact tiling against gaps capped at pp_end also guarantees no
+        # recorded bubble overlaps the all-reduce span
         if rec is None or len(rec) != len(gaps) or any(
             abs(a - c) > 1e-6 or abs(b - d) > 1e-6
             for (a, b), (c, d) in zip(gaps, rec)
@@ -220,16 +227,27 @@ def check_schedule(sched, spec, topo, *, inflight_cap: Optional[int] = None) -> 
                 _fail("in-flight cap exceeded (schedule)", g, t, in_flight, cap)
 
     # transfers: channel serialization, bandwidth, and dependency edges
+    get_sched = getattr(topo, "bandwidth_schedule", None)
     chan: Dict[Tuple[int, str], List] = {}
     for tr in sched.transfers:
         b = tr.boundary
         dc_a, dc_b = spec.stage_dc[b], spec.stage_dc[b + 1]
         # activations ride b -> b+1, gradients the reverse link (matters
         # on asymmetric topologies)
-        link = topo.link(dc_a, dc_b) if tr.direction == "act" else topo.link(dc_b, dc_a)
+        src, dst = (dc_a, dc_b) if tr.direction == "act" else (dc_b, dc_a)
+        link = topo.link(src, dst)
         is_wan_b = dc_a != dc_b
-        ser_one = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
-        ser = ser_one / D if is_wan_b else ser_one
+        # minimum physical occupancy, priced against the bandwidth
+        # schedule in force over [tr.start, tr.end) when the pair is
+        # time-varying (temporal sharing: the cell transfers at D×)
+        bw_sched = get_sched(src, dst) if get_sched is not None else None
+        if bw_sched is not None:
+            ser = bw_sched.transfer_ms(
+                spec.act_bytes, tr.start, rate_mult=D if is_wan_b else 1
+            )
+        else:
+            ser_one = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
+            ser = ser_one / D if is_wan_b else ser_one
         occupancy = tr.end - tr.start
         if occupancy < ser - EPS:
             _fail("transfer faster than link bandwidth allows", tr, ser)

@@ -12,7 +12,9 @@ Single-connection TCP throughput is inversely proportional to RTT
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import zlib
+from bisect import bisect_right
+from typing import Sequence, Tuple
 
 # calibration constants (paper Table 1 / Fig 5 / §4.1)
 TCP_K_GBIT_MS = 12.0  # single-connection bw ≈ K / latency_ms (Gbit/s·ms)
@@ -66,6 +68,156 @@ def intra_dc_link() -> Link:
 
 
 # ---------------------------------------------------------------------------
+# time-varying bandwidth (paper Fig 7: measured 24-h inter-DC traces)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthSchedule:
+    """Piecewise-constant bandwidth of one *directed* link over time.
+
+    ``bw_gbps[i]`` is in force on ``[times_ms[i], times_ms[i+1])``; the
+    last segment extends to infinity, and ``times_ms[0]`` must be 0.  A
+    transfer that spans a segment boundary integrates bytes across the
+    segments (``transfer_ms``) — there is no memoizable constant transfer
+    time on a time-varying link.
+
+    Built from a measured/synthetic sample trace (``from_samples`` /
+    ``from_trace``) or from analytic profiles (``flat`` / ``step`` /
+    ``outage`` / ``diurnal``).  Attach to ``TopologyMatrix.bw_schedules``
+    to drive the simulator, scheduler, validator and Algorithm 1.
+    """
+
+    times_ms: Tuple[float, ...]
+    bw_gbps: Tuple[float, ...]
+
+    def __post_init__(self):
+        assert len(self.times_ms) == len(self.bw_gbps) >= 1
+        assert self.times_ms[0] == 0.0, "first segment must start at t=0"
+        for a, b in zip(self.times_ms, self.times_ms[1:]):
+            assert b > a, "segment starts must be strictly increasing"
+        assert all(bw > 0 for bw in self.bw_gbps), "bandwidth must be positive"
+
+    # --- queries ----------------------------------------------------------
+    def is_flat(self) -> bool:
+        return all(bw == self.bw_gbps[0] for bw in self.bw_gbps)
+
+    def bw_at(self, t_ms: float) -> float:
+        """Bandwidth (Gbit/s) in force at time ``t_ms`` (clamped to 0)."""
+        i = bisect_right(self.times_ms, max(0.0, t_ms)) - 1
+        return self.bw_gbps[i]
+
+    def min_bw_gbps(self) -> float:
+        """Worst-segment bandwidth — the planning-time pessimistic rate."""
+        return min(self.bw_gbps)
+
+    def max_bw_gbps(self) -> float:
+        return max(self.bw_gbps)
+
+    def transfer_ms(self, nbytes: float, start_ms: float, rate_mult: float = 1.0) -> float:
+        """Serialization time of ``nbytes`` starting at ``start_ms``,
+        integrating the bits across segment boundaries.  ``rate_mult``
+        scales the rate (Atlas temporal sharing sends at D× node-pair
+        bandwidth).  On a flat schedule this reduces to the static
+        ``bytes·8 / bw`` formula exactly."""
+        rem = nbytes * 8.0  # bits
+        t = max(0.0, start_ms)
+        i = bisect_right(self.times_ms, t) - 1
+        n = len(self.times_ms)
+        while True:
+            bw = self.bw_gbps[i] * rate_mult
+            if i + 1 >= n:
+                return (t - start_ms) + rem / (bw * 1e9) * 1e3
+            seg_ms = self.times_ms[i + 1] - t
+            cap_bits = seg_ms * bw * 1e6  # Gbit/s = 1e6 bits per ms
+            if rem <= cap_bits:
+                return (t - start_ms) + rem / (bw * 1e9) * 1e3
+            rem -= cap_bits
+            t = self.times_ms[i + 1]
+            i += 1
+
+    # --- constructors -----------------------------------------------------
+    @classmethod
+    def flat(cls, bw_gbps: float) -> "BandwidthSchedule":
+        return cls((0.0,), (float(bw_gbps),))
+
+    @classmethod
+    def from_samples(
+        cls, samples_gbps: Sequence[float], sample_ms: float
+    ) -> "BandwidthSchedule":
+        """A measured trace, one sample per ``sample_ms`` — consecutive
+        equal samples are coalesced into one segment."""
+        assert samples_gbps and sample_ms > 0
+        times = [0.0]
+        bws = [float(samples_gbps[0])]
+        for k, s in enumerate(samples_gbps[1:], start=1):
+            if s != bws[-1]:
+                times.append(k * sample_ms)
+                bws.append(float(s))
+        return cls(tuple(times), tuple(bws))
+
+    @classmethod
+    def from_trace(
+        cls,
+        link: Link,
+        *,
+        hours: float = 24.0,
+        samples_per_hour: int = 60,
+        seed: int = 0,
+    ) -> "BandwidthSchedule":
+        """The Fig-7 AR(1) stability trace of ``link`` as a schedule."""
+        trace = bandwidth_trace_for_link(
+            link, hours=hours, samples_per_hour=samples_per_hour, seed=seed
+        )
+        return cls.from_samples(trace, 3.6e6 / samples_per_hour)
+
+    @classmethod
+    def step(cls, bw0_gbps: float, bw1_gbps: float, at_ms: float) -> "BandwidthSchedule":
+        """One step change at ``at_ms`` (e.g. a 2:1 degradation)."""
+        return cls((0.0, float(at_ms)), (float(bw0_gbps), float(bw1_gbps)))
+
+    @classmethod
+    def outage(
+        cls,
+        bw_gbps: float,
+        start_ms: float,
+        end_ms: float,
+        degraded_gbps: float,
+    ) -> "BandwidthSchedule":
+        """Nominal bandwidth with a degraded window [start, end) — link
+        failures reroute over slow paths rather than dropping to zero."""
+        assert 0.0 < start_ms < end_ms
+        return cls(
+            (0.0, float(start_ms), float(end_ms)),
+            (float(bw_gbps), float(degraded_gbps), float(bw_gbps)),
+        )
+
+    @classmethod
+    def diurnal(
+        cls,
+        peak_gbps: float,
+        trough_gbps: float,
+        period_ms: float = 24 * 3.6e6,
+        steps: int = 24,
+        cycles: int = 1,
+    ) -> "BandwidthSchedule":
+        """Piecewise-constant approximation of a diurnal cosine: capacity
+        peaks mid-cycle (off-peak hours) and bottoms at the cycle edges."""
+        import math
+
+        assert steps >= 2 and cycles >= 1
+        mid = (peak_gbps + trough_gbps) / 2.0
+        amp = (peak_gbps - trough_gbps) / 2.0
+        times, bws = [], []
+        for c in range(cycles):
+            for k in range(steps):
+                times.append(c * period_ms + k * period_ms / steps)
+                phase = 2.0 * math.pi * (k + 0.5) / steps
+                bws.append(mid - amp * math.cos(phase))
+        return cls(tuple(times), tuple(bws))
+
+
+# ---------------------------------------------------------------------------
 # analytic communication times (paper §3 footnotes)
 # ---------------------------------------------------------------------------
 
@@ -101,12 +253,19 @@ def bandwidth_trace_for_link(
 ) -> "list[float]":
     """Fig-7 stability trace for an arbitrary (heterogeneous) link: a
     deterministic AR(1) fluctuation around the link's bandwidth with CoV
-    decreasing in distance (~2.3% short-haul, ~0.8% long-haul)."""
+    decreasing in distance (~2.3% short-haul, ~0.8% long-haul).
+
+    The RNG seed folds in the link's full-precision latency AND its
+    bandwidth: two heterogeneous links that merely share an integer
+    latency (or a single-TCP vs multi-TCP pair at the same RTT) must not
+    emit correlated fluctuation patterns.  Deterministic for a fixed
+    (link, seed)."""
     import math
     import random
 
     cov = 0.023 * math.exp(-link.latency_ms / 80.0) + 0.008
-    rng = random.Random(seed * 100003 + int(link.latency_ms))
+    link_key = zlib.crc32(f"{link.latency_ms!r}|{link.bw_gbps!r}".encode())
+    rng = random.Random(seed * 100003 + link_key)
     n = int(hours * samples_per_hour)
     out = []
     x = 0.0

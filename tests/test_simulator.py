@@ -120,3 +120,25 @@ def test_intra_dc_fast_baseline():
     t = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
     r = simulate(spec, t, policy="varuna")
     assert r.utilization > 0.4
+
+
+@pytest.mark.parametrize("policy", ("gpipe", "megatron", "varuna", "atlas"))
+def test_bubbles_exclude_allreduce_span(policy):
+    """Regression (ISSUE 3): the DP all-reduce span [pp_end, iteration]
+    is busy communication on every GPU — it must never be reported as a
+    bubble (BubbleTea would place prefills on all-reducing GPUs)."""
+    spec = _spec(GPT_B, M=8)
+    assert spec.stage_param_bytes > 0
+    t = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
+    D = 3 if policy == "atlas" else 2
+    r = simulate(spec, t, policy=policy, n_pipelines=D,
+                 dp_replicas_for_allreduce=4, validate=True)
+    assert r.allreduce_ms > 0
+    pp_end = r.iteration_ms - r.allreduce_ms
+    for g, gaps in r.bubbles.items():
+        for a, b in gaps:
+            assert b <= pp_end + 1e-9, (g, (a, b), pp_end)
+    # the span still counts in the utilization denominator
+    busy = sum(iv.end - iv.start for ivs in r.busy.values() for iv in ivs)
+    assert r.utilization == pytest.approx(
+        busy / (r.iteration_ms * len(r.busy)))

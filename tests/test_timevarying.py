@@ -1,0 +1,360 @@
+"""Time-varying WAN bandwidth engine — differential and invariant tests.
+
+Three nets (ISSUE 3):
+  * a *flat* ``wan.BandwidthSchedule`` attached to every WAN pair must be
+    interval-identical to the static engine (and to the frozen
+    pre-refactor reference) across the PR-2 differential grid;
+  * a non-flat schedule (2:1 step, outage, measured-style trace) must
+    shift iteration time, pass the invariant checker, gate the
+    steady-state fast-forward (recorded in ``stats``), and price
+    Algorithm-1 placements by per-direction worst-segment bandwidth;
+  * the checker must reject a transfer whose occupancy beats the
+    bandwidth schedule in force at its start (even when it would pass
+    against the static link rate).
+"""
+import pytest
+
+from repro.core import reference as ref
+from repro.core import temporal
+from repro.core import topology as tp
+from repro.core import validate as V
+from repro.core import wan
+from repro.core.fastforward import GATE_TIME_VARYING
+from repro.core.simulator import (
+    GeoTopology,
+    PipelineSpec,
+    has_time_varying_wan,
+    simulate,
+)
+
+POLICIES = ("gpipe", "megatron", "varuna", "atlas")
+
+
+def _spec(M=12, stage_dc=(0, 0, 1, 2), **kw):
+    return PipelineSpec(
+        num_stages=len(stage_dc), microbatches=M, t_fwd_ms=10.0,
+        act_bytes=1.5e8, stage_dc=tuple(stage_dc), stage_param_bytes=8e8,
+        **kw,
+    )
+
+
+def _flat_schedules(topo):
+    return {
+        (a, b): wan.BandwidthSchedule.flat(topo.link(a, b).bw_gbps)
+        for a, b in topo.wan_pairs()
+    }
+
+
+def _step_topo(factor=2.0, at_ms=500.0):
+    """Azure testbed with a 1/factor bandwidth step on the 0<->1 pair."""
+    base = tp.azure_testbed()
+    bw = base.link(0, 1).bw_gbps
+    return base.with_bandwidth_schedules(
+        {(0, 1): wan.BandwidthSchedule.step(bw, bw / factor, at_ms)}
+    )
+
+
+# ------------------------------------------------------- BandwidthSchedule
+
+
+def test_schedule_bw_at_and_bounds():
+    s = wan.BandwidthSchedule((0.0, 10.0, 30.0), (1.0, 0.5, 2.0))
+    assert s.bw_at(0.0) == 1.0
+    assert s.bw_at(9.999) == 1.0
+    assert s.bw_at(10.0) == 0.5
+    assert s.bw_at(29.0) == 0.5
+    assert s.bw_at(1e9) == 2.0  # last segment extends forever
+    assert s.min_bw_gbps() == 0.5 and s.max_bw_gbps() == 2.0
+    assert not s.is_flat()
+    assert wan.BandwidthSchedule.flat(3.0).is_flat()
+
+
+def test_schedule_transfer_integrates_across_segments():
+    # 1 Gbps for 10 ms, then 0.5 Gbps: 15e6 bits = 10 ms @ 1e6 bits/ms
+    # + 5e6 bits @ 0.5e6 bits/ms = 20 ms total
+    s = wan.BandwidthSchedule.step(1.0, 0.5, 10.0)
+    nbytes = 15e6 / 8.0
+    assert s.transfer_ms(nbytes, 0.0) == pytest.approx(20.0)
+    # starting mid-segment: 5 ms @ 1 Gbps + 10e6 bits @ 0.5 Gbps = 25 ms
+    assert s.transfer_ms(nbytes, 5.0) == pytest.approx(25.0)
+    # fully inside the slow segment
+    assert s.transfer_ms(nbytes, 10.0) == pytest.approx(30.0)
+    # rate multiplier (Atlas temporal sharing): 2x rate inside segment 0
+    assert s.transfer_ms(nbytes, 0.0, rate_mult=2.0) == pytest.approx(7.5)
+
+
+def test_schedule_flat_matches_static_formula_exactly():
+    link = wan.wan_link(40.0, True)
+    s = wan.BandwidthSchedule.flat(link.bw_gbps)
+    nbytes = 1.5e8
+    static_ser = nbytes * 8.0 / (link.bw_gbps * 1e9) * 1e3
+    assert s.transfer_ms(nbytes, 0.0) == static_ser  # bit-identical
+    assert s.transfer_ms(nbytes, 1234.5) == static_ser
+
+
+def test_schedule_from_samples_coalesces():
+    s = wan.BandwidthSchedule.from_samples([5.0, 5.0, 4.0, 4.0, 5.0], 100.0)
+    assert s.times_ms == (0.0, 200.0, 400.0)
+    assert s.bw_gbps == (5.0, 4.0, 5.0)
+
+
+def test_schedule_constructor_validation():
+    with pytest.raises(AssertionError):
+        wan.BandwidthSchedule((1.0,), (5.0,))  # must start at 0
+    with pytest.raises(AssertionError):
+        wan.BandwidthSchedule((0.0, 5.0, 5.0), (1.0, 2.0, 3.0))  # not increasing
+    with pytest.raises(AssertionError):
+        wan.BandwidthSchedule((0.0,), (0.0,))  # bandwidth must be positive
+
+
+def test_outage_and_diurnal_profiles():
+    o = wan.BandwidthSchedule.outage(5.0, 1000.0, 2000.0, 0.5)
+    assert o.bw_at(500.0) == 5.0
+    assert o.bw_at(1500.0) == 0.5
+    assert o.bw_at(2500.0) == 5.0
+    d = wan.BandwidthSchedule.diurnal(5.0, 2.5, period_ms=24.0, steps=8)
+    assert 2.5 <= min(d.bw_gbps) and max(d.bw_gbps) <= 5.0
+    assert not d.is_flat()
+
+
+def test_trace_schedule_deterministic_and_near_mean():
+    link = wan.wan_link(34.0, True)
+    a = wan.BandwidthSchedule.from_trace(link, seed=7)
+    b = wan.BandwidthSchedule.from_trace(link, seed=7)
+    assert a == b
+    assert abs(a.bw_gbps[0] - link.bw_gbps) < 0.2 * link.bw_gbps
+
+
+# -------------------------------------------------- topology attachment
+
+
+def test_topology_schedule_lookup_and_fallback():
+    topo = _step_topo()
+    assert topo.bandwidth_schedule(0, 0) is None  # intra-DC always static
+    assert topo.bandwidth_schedule(0, 1) is not None
+    # reverse-pair fallback mirrors the links table
+    assert topo.bandwidth_schedule(1, 0) == topo.bandwidth_schedule(0, 1)
+    assert topo.bandwidth_schedule(2, 3) is None  # unscheduled pair: static
+    assert topo.time_varying()
+    flat = tp.azure_testbed().with_bandwidth_schedules(
+        _flat_schedules(tp.azure_testbed()))
+    assert not flat.time_varying()
+    assert GeoTopology().bandwidth_schedule(0, 1) is None
+
+
+def test_effective_bw_is_worst_segment():
+    topo = _step_topo(factor=4.0)
+    static = tp.azure_testbed()
+    assert topo.effective_bw_gbps(0, 1) == pytest.approx(
+        static.link(0, 1).bw_gbps / 4.0)
+    assert topo.effective_bw_gbps(2, 3) == static.link(2, 3).bw_gbps
+
+
+def test_has_time_varying_wan_respects_stage_placement():
+    topo = _step_topo()
+    assert has_time_varying_wan(_spec(stage_dc=(0, 0, 1, 2)), topo)
+    # a pipeline that never crosses the scheduled 0<->1 pair is static
+    assert not has_time_varying_wan(_spec(stage_dc=(2, 2, 3, 3)), topo)
+
+
+# ------------------------------------------- flat identity (differential)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("base_name", ["uniform", "azure", "skewed"])
+def test_flat_schedule_interval_identical_to_static(policy, base_name):
+    """A flat schedule exercises the segment-integration path but must
+    reproduce the static engine (and the frozen reference) exactly."""
+    base = {
+        "uniform": tp.TopologyMatrix.uniform(3, wan_latency_ms=40.0),
+        "azure": tp.azure_testbed(),
+        "skewed": tp.skewed_3dc(),
+    }[base_name]
+    flat = base.with_bandwidth_schedules(_flat_schedules(base))
+    for M in (4, 9, 16):
+        spec = _spec(M=M)
+        D = 3 if policy == "atlas" else 2
+        r_static = simulate(spec, base, policy=policy, n_pipelines=D,
+                            dp_replicas_for_allreduce=2, fast_forward=False)
+        r_flat = simulate(spec, flat, policy=policy, n_pipelines=D,
+                          dp_replicas_for_allreduce=2, fast_forward=False)
+        V.check_equivalent(r_static, r_flat)
+        r_ref = ref.simulate(spec, base, policy=policy, n_pipelines=D,
+                             dp_replicas_for_allreduce=2)
+        V.check_equivalent(r_ref, r_flat)
+        V.check_sim_result(r_flat, spec, policy=policy)
+
+
+# --------------------------------------------------- non-flat behaviour
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_step_trace_shifts_iteration_and_validates(policy):
+    """A 2:1 step on one boundary slows the iteration; all physical
+    invariants must still hold (validate=True)."""
+    spec = _spec(M=48)
+    base = tp.azure_testbed()
+    step = _step_topo(factor=2.0, at_ms=500.0)
+    D = 2
+    r0 = simulate(spec, base, policy=policy, n_pipelines=D, validate=True)
+    r1 = simulate(spec, step, policy=policy, n_pipelines=D, validate=True)
+    assert r1.iteration_ms > r0.iteration_ms
+    assert r1.stats["fast_forward"] is False
+
+
+def test_transfer_spans_step_boundary_exactly():
+    """An event-engine transfer that straddles the step must occupy the
+    channel for the integrated (two-segment) time, not either constant."""
+    act = 1.5e8
+    base = tp.azure_testbed()
+    bw = base.link(0, 1).bw_gbps
+    ser_fast = act * 8.0 / (bw * 1e9) * 1e3  # 240 ms at 5 Gbps
+    # place the step mid-way through the very first 0->1 transfer: the
+    # first forward on stage 1 (DC 0 -> DC 1 boundary is at stages 1|2)
+    spec = _spec(M=2, stage_dc=(0, 1, 1, 1))
+    r0 = simulate(spec, base, policy="varuna", fast_forward=False)
+    first_arrival = min(
+        iv.start for iv in r0.busy[(0, 1)] if iv.kind == "fwd")
+    send_start = spec.t_fwd_ms  # stage 0 forward ends, transfer starts
+    step_at = send_start + ser_fast / 2.0
+    stepped = base.with_bandwidth_schedules(
+        {(0, 1): wan.BandwidthSchedule.step(bw, bw / 2.0, step_at)})
+    r1 = simulate(spec, stepped, policy="varuna", fast_forward=False,
+                  validate=True)
+    got = min(iv.start for iv in r1.busy[(0, 1)] if iv.kind == "fwd")
+    # half the bytes at full rate, half at half rate -> 1.5x occupancy
+    want_shift = ser_fast / 2.0  # extra time vs the static run
+    assert got - first_arrival == pytest.approx(want_shift, rel=1e-9)
+
+
+def test_atlas_consistency_under_time_varying_bandwidth():
+    """Precomputed schedule, event wrapper and invariant checker must all
+    agree when transfers are priced by a non-flat schedule."""
+    spec = _spec(M=10)
+    V.check_atlas_consistency(_spec(M=10), _step_topo(), n_pipelines=2,
+                              dp_replicas=2)
+    sched = temporal.atlas_schedule(spec, _step_topo(), 2)
+    V.check_schedule(sched, spec, _step_topo())
+
+
+# ----------------------------------------------------- fast-forward gate
+
+
+def test_fast_forward_gated_off_by_time_varying_bandwidth():
+    """Even fast_forward=True must fall back (and record why): probes
+    cannot see bandwidth changes beyond their horizon."""
+    spec = _spec(M=200)
+    topo = _step_topo()
+    res = simulate(spec, topo, policy="varuna", fast_forward=True)
+    assert res.stats["fast_forward"] is False
+    assert res.stats["fast_forward_gate"] == GATE_TIME_VARYING
+    full = simulate(spec, topo, policy="varuna", fast_forward=False)
+    V.check_equivalent(res, full)
+
+
+def test_fast_forward_engages_on_flat_schedules():
+    """Flat schedules keep the static periodicity: no gate, fast-forward
+    engages and stays interval-identical to full replay."""
+    base = tp.azure_testbed()
+    flat = base.with_bandwidth_schedules(_flat_schedules(base))
+    spec = _spec(M=200)
+    res = simulate(spec, flat, policy="varuna", fast_forward=True)
+    assert res.stats["fast_forward"] is True
+    assert "fast_forward_gate" not in res.stats
+    full = simulate(spec, flat, policy="varuna", fast_forward=False)
+    V.check_equivalent(res, full)
+
+
+def test_late_step_beyond_probe_horizon_not_extrapolated():
+    """The dangerous case the gate exists for: a step far past the probe
+    horizon.  Without the gate the probes would detect a period and
+    extrapolate straight through the step."""
+    base = tp.azure_testbed()
+    bw = base.link(0, 1).bw_gbps
+    spec = _spec(M=256)
+    r_static = simulate(spec, base, policy="varuna", fast_forward=False)
+    late = base.with_bandwidth_schedules(
+        {(0, 1): wan.BandwidthSchedule.step(
+            bw, bw / 2.0, r_static.iteration_ms / 2.0)})
+    fast = simulate(spec, late, policy="varuna", fast_forward=True)
+    full = simulate(spec, late, policy="varuna", fast_forward=False)
+    V.check_equivalent(fast, full)
+    assert full.iteration_ms > r_static.iteration_ms
+
+
+# ------------------------------------------------- negative validate test
+
+
+def test_validate_rejects_over_bandwidth_segment_transfer():
+    """A transfer priced at the *nominal* link rate while the schedule is
+    degraded would pass the static check — the schedule-aware check must
+    reject it."""
+    spec = _spec(M=8)
+    base = tp.azure_testbed()
+    bw = base.link(0, 1).bw_gbps
+    # degraded 4:1 from t=0 onwards for a long window: every 0<->1
+    # transfer is in the slow segment
+    topo = base.with_bandwidth_schedules(
+        {(0, 1): wan.BandwidthSchedule.outage(bw, 1e-3, 1e9, bw / 4.0)})
+    D = 2
+    sched = temporal.atlas_schedule(spec, topo, D)
+    V.check_schedule(sched, spec, topo)  # honest schedule passes
+    ser_nominal = spec.act_bytes * 8.0 / (bw * 1e9) * 1e3 / D
+    wan_b = 1  # stages 1|2 cross DC 0 -> DC 1
+    tr = next(t for t in sched.transfers
+              if t.boundary == wan_b and t.start > 1e-3)
+    # claim the transfer ran at nominal rate: legal statically, but 4x
+    # faster than the degraded segment allows
+    tr.end = tr.start + ser_nominal
+    with pytest.raises(V.InvariantViolation):
+        V.check_schedule(sched, spec, topo)
+
+
+# --------------------------------------- Algorithm 1: bandwidth asymmetry
+
+
+def test_algorithm1_routes_around_degraded_pair():
+    """Equal latencies everywhere: only the bandwidth schedule
+    distinguishes the pairs, so the placement search must keep the
+    degraded pair off the stage boundaries — bandwidth-asymmetric, not
+    latency-aware."""
+    from repro.core.dc_selection import JobModel, algorithm1, best_plan
+
+    lat = [[0.0, 20.0, 20.0], [20.0, 0.0, 20.0], [20.0, 20.0, 0.0]]
+    base = tp.TopologyMatrix.from_latency(
+        lat, multi_tcp=True, dc_names=("dc0", "dc1", "dc2"))
+    bw = base.link(0, 2).bw_gbps
+    degraded = base.with_bandwidth_schedules(
+        {(0, 2): wan.BandwidthSchedule.outage(bw, 3.6e6, 4 * 3.6e6, bw / 10.0)})
+    job = JobModel(
+        t_fwd_ms=10.0,
+        act_bytes=2 * 10e-3 * wan.NODE_PAIR_CAP_GBPS * 1e9 / 8,
+        partition_param_bytes=8e8,
+        microbatches=60,
+        topology=degraded,
+    )
+    fleet = {"dc0": 8, "dc1": 8, "dc2": 8}
+    best = best_plan(algorithm1(job, fleet, P=12, C=2))
+    used = [d for d in best.dc_order if best.partitions.get(d, 0)]
+    assert len(used) == 3
+    assert used.index("dc1") == 1, used  # dc0<->dc2 never adjacent
+
+
+def test_algorithm1_memo_not_aliased_across_schedules():
+    """Two topologies differing only in bw_schedules must not share
+    memoized pipeline latencies."""
+    from repro.core.dc_selection import JobModel, get_latency_pp
+
+    lat = [[0.0, 20.0], [20.0, 0.0]]
+    base = tp.TopologyMatrix.from_latency(
+        lat, multi_tcp=True, dc_names=("a", "b"))
+    bw = base.link(0, 1).bw_gbps
+    slow = base.with_bandwidth_schedules(
+        {(0, 1): wan.BandwidthSchedule.step(bw, bw / 8.0, 1.0)})
+    kw = dict(t_fwd_ms=10.0, act_bytes=1.5e8, partition_param_bytes=8e8,
+              microbatches=32)
+    t_base = get_latency_pp(JobModel(topology=base, **kw),
+                            {"a": 2, "b": 2}, ("a", "b"), 1)
+    t_slow = get_latency_pp(JobModel(topology=slow, **kw),
+                            {"a": 2, "b": 2}, ("a", "b"), 1)
+    assert t_slow > t_base * 2

@@ -30,6 +30,32 @@ def test_fig7_trace_deterministic():
     assert a != c
 
 
+def test_trace_seed_folds_in_bandwidth():
+    """Regression (ISSUE 3): two links with the same *integer* latency
+    but different bandwidth (multi- vs single-TCP at one RTT) must not
+    emit perfectly correlated fluctuation patterns."""
+    multi = wan.wan_link(34.0, True)   # 5 Gbps
+    single = wan.wan_link(34.0, False)  # cwnd-limited
+    assert multi.bw_gbps != single.bw_gbps
+    a = wan.bandwidth_trace_for_link(multi, seed=1)
+    b = wan.bandwidth_trace_for_link(single, seed=1)
+    # normalize out the mean: compare the fluctuation *patterns*
+    na = [x / multi.bw_gbps for x in a]
+    nb = [x / single.bw_gbps for x in b]
+    assert na != nb
+
+
+def test_trace_seed_uses_full_precision_latency():
+    """Latencies 34.2 vs 34.9 ms truncate to the same int — their traces
+    must still decorrelate."""
+    a = wan.bandwidth_trace_for_link(wan.Link(34.2, 5.0), seed=1)
+    b = wan.bandwidth_trace_for_link(wan.Link(34.9, 5.0), seed=1)
+    assert a != b
+    # and a fixed link stays deterministic
+    again = wan.bandwidth_trace_for_link(wan.Link(34.2, 5.0), seed=1)
+    assert a == again
+
+
 def test_sec67_compression_is_net_loss():
     """§6.7: 4× activation compression at 2× same-loss compute is slower
     than Atlas's semantics-preserving transport."""
