@@ -8,7 +8,10 @@ spec scales × all four policies, and the placement-order search
 style 24-h bandwidth traces to every WAN pair — it exercises the
 time-varying segment-integration path (fast-forward gated, transfers
 integrated across bandwidth segments) and sits under the same
-``--ceiling-s`` regression guard as the large config.  Writes
+``--ceiling-s`` regression guard as the large config.  The "replan"
+config runs the reactive control plane (``repro.core.control``) over a
+256-iteration outage horizon — same ceiling guard; records ``replans``,
+``migration_ms`` and the static-vs-reactive end-to-end totals.  Writes
 ``BENCH_sim.json`` so CI and future PRs can diff perf artifacts
 (fields documented in ROADMAP.md).
 
@@ -45,8 +48,10 @@ SPEEDUP_TARGET = 10.0  # large config, new engine vs pre-refactor reference
 # wall-clock ceiling configs: --ceiling-s fails the run if any of these
 # configs' new-engine sweep exceeds it.  "trace" guards the time-varying
 # segment-integration path — it must price transfers by integrating a
-# handful of segments, not degrade into per-sample event spam
-CEILING_CONFIGS = ("large", "trace")
+# handful of segments, not degrade into per-sample event spam; "replan"
+# guards the control-plane horizon — its iteration-reuse cache must keep
+# a multi-hundred-iteration horizon at O(segments + re-plans) full sims
+CEILING_CONFIGS = ("large", "trace", "replan")
 
 GPT_B = dict(hidden=8192, seq_len=6144, micro_batch=1, layers_per_stage=1,
              layer_params=1.2e9)
@@ -174,6 +179,57 @@ def _run_cell(engine: str, spec, topo, policy: str, D: int,
     return cell
 
 
+def _bench_replan() -> Dict:
+    """Reactive control plane vs static plan over an outage horizon.
+
+    A 4-DC named WAN where one direction drops 10x for a sustained
+    mid-horizon window the planner did not know about.  Times
+    ``control.simulate_horizon`` with and without the control plane and
+    records the decision trail — ``replans``, ``migration_ms``, the
+    static-vs-reactive end-to-end totals, and how many iterations the
+    horizon-level reuse cache simulated vs replayed."""
+    import time as _time
+
+    from repro.core import control
+    from repro.core import topology as tp2
+    from repro.core.dc_selection import JobModel
+
+    lat = [[0.0, 16.0, 34.0, 95.0], [16.0, 0.0, 20.0, 105.0],
+           [34.0, 20.0, 0.0, 85.0], [95.0, 105.0, 85.0, 0.0]]
+    world = tp2.TopologyMatrix.from_latency(
+        lat, multi_tcp=True,
+        dc_names=("use", "ussc", "usw", "asia"), name="azure-replan")
+    bw = world.link(0, 1).bw_gbps
+    live = world.with_bandwidth_schedules({
+        (0, 1): wan.BandwidthSchedule.outage(bw, 60_000.0, 2_000_000.0, bw / 10.0),
+        (1, 0): wan.BandwidthSchedule.flat(bw),
+    })
+    job = JobModel(t_fwd_ms=10.0, act_bytes=1e7, partition_param_bytes=4e8,
+                   microbatches=64)
+    fleet = {"use": 8, "ussc": 8, "usw": 8, "asia": 8}
+    kw = dict(P=12, live_topo=live, planned_topo=world, n_iterations=256, C=2)
+
+    t0 = _time.perf_counter()
+    static = control.simulate_horizon(job, fleet, **kw)
+    static_wall = (_time.perf_counter() - t0) * 1e3
+    t0 = _time.perf_counter()
+    reactive = control.simulate_horizon(
+        job, fleet, control=control.ControlConfig(), **kw)
+    reactive_wall = (_time.perf_counter() - t0) * 1e3
+    return {
+        "n_iterations": kw["n_iterations"],
+        "wall_ms": round(static_wall + reactive_wall, 3),
+        "static_total_ms": round(static.total_ms, 3),
+        "reactive_total_ms": round(reactive.total_ms, 3),
+        "reactive_gain_ms": round(static.total_ms - reactive.total_ms, 3),
+        "replans": reactive.replans,
+        "migration_ms": round(reactive.migration_ms, 3),
+        "iter_sims": reactive.stats["iter_sims"],
+        "iter_reused": reactive.stats["iter_reused"],
+        "drift_fires": reactive.stats["drift_fires"],
+    }
+
+
 def _bench_placement_search() -> Dict:
     """Branch-and-bound vs exhaustive Algorithm-1 order search."""
     import random
@@ -258,6 +314,14 @@ def run_bench(quick: bool = False, budget_s: Optional[float] = 180.0,
             )
         speedups[name] = entry
 
+    replan = _bench_replan()
+    speedups["replan"] = {"new_total_ms": replan["wall_ms"]}
+    print(f"  replan horizon: wall={replan['wall_ms']:.0f}ms "
+          f"replans={replan['replans']} "
+          f"reactive_gain={replan['reactive_gain_ms']/1e3:.1f}s "
+          f"sims={replan['iter_sims']}/{replan['n_iterations']}",
+          file=sys.stderr, flush=True)
+
     validate_ok = None
     if validate_large:
         cfg = configs["large"]
@@ -284,6 +348,7 @@ def run_bench(quick: bool = False, budget_s: Optional[float] = 180.0,
         "cells": cells,
         "speedups": speedups,
         "placement_search": _bench_placement_search(),
+        "replan": replan,
         "large_validate_ok": validate_ok,
         "quick": quick,
     }
@@ -298,10 +363,12 @@ def main(argv=None) -> int:
     ap.add_argument("--budget-s", type=float, default=180.0,
                     help="per-cell wall budget for the reference engine")
     ap.add_argument("--ceiling-s", type=float, default=None,
-                    help="fail (exit 1) if the new engine's large- or "
-                         "trace-config sweep exceeds this many seconds — "
+                    help="fail (exit 1) if the new engine's large-, trace- "
+                         "or replan-config sweep exceeds this many seconds — "
                          "regression guard (trace: the segment-integration "
-                         "path must not regress to per-sample event spam)")
+                         "path must not regress to per-sample event spam; "
+                         "replan: the horizon reuse cache must keep full "
+                         "sims at O(segments + re-plans))")
     args = ap.parse_args(argv)
 
     out = run_bench(quick=args.quick, budget_s=args.budget_s)

@@ -3,3 +3,10 @@
 # host framework. Add sibling subpackages for substrates.
 
 from repro.core.topology import TopologyMatrix, preset as topology_preset  # noqa: F401
+from repro.core.control import (  # noqa: F401
+    ControlConfig,
+    DriftDetector,
+    HorizonResult,
+    MigrationModel,
+    simulate_horizon,
+)

@@ -169,6 +169,25 @@ class BubbleTeaController:
         self._live: List[int] = [0] * len(self.windows)
         self._last_arrival = -math.inf
 
+    def reset_windows(
+        self, bubbles_by_pipeline: Sequence[Sequence[Tuple[float, float]]]
+    ) -> None:
+        """Replace the bubble windows wholesale — the control-plane hook.
+
+        After a re-plan epoch (``repro.core.control``) the training
+        schedule, and therefore every bubble, is different: stale
+        windows would let prefills land inside migration stalls or the
+        new schedule's compute.  The caller recomputes the intersected
+        bubbles from the new epoch's ``SimResult`` and swaps them in;
+        live cursors restart at the new windows' heads.  Accounting
+        (placements, rejections, the arrival-order clock) carries over —
+        the controller is one continuous service across epochs."""
+        self.windows = [
+            sorted((_Window(a, b) for a, b in pipe), key=lambda w: w.start)
+            for pipe in bubbles_by_pipeline
+        ]
+        self._live = [0] * len(self.windows)
+
     def submit(self, req: PrefillRequest) -> Optional[Placement]:
         """Place a prefill (first-fit over pipelines' live windows) or
         reject (capacity or TTFT SLO)."""
@@ -237,6 +256,9 @@ def utilization_with_prefills(
     controller: BubbleTeaController,
 ) -> float:
     """GPU utilization after BubbleTea fills bubbles (paper Fig 13)."""
+    if total_gpu_ms <= 0.0:
+        return 0.0  # zero-length window (e.g. a horizon epoch closed
+        # before its first iteration) — no time to be utilized in
     pp_factor = controller.pp  # a placement occupies all pp stages
     extra = controller.prefill_busy_ms() * pp_factor
     return min(1.0, (sim_busy_ms + extra) / total_gpu_ms)

@@ -1,0 +1,531 @@
+"""Reactive control plane — mid-training re-planning under live WAN drift.
+
+Atlas (paper §4) plans a placement *once*, pricing every link at its
+worst-segment bandwidth — but the paper's own Fig 7 premise is that WAN
+bandwidth drifts over 24 h, and a static plan holds exactly as long as
+the WAN resembles what the planner assumed.  This module closes the
+loop: it co-simulates training over a long multi-iteration horizon
+against the *live* WAN (``TopologyMatrix.bw_schedules``) and reacts when
+delivery deviates from the plan:
+
+  * ``DriftDetector`` — after each iteration, compares the bandwidth
+    each monitored link actually delivered (``BandwidthSchedule
+    .mean_bw_gbps`` over the iteration's wall-clock span) against what
+    the incumbent plan assumed for that link.  It fires only on
+    *sustained* deviation: ``hysteresis`` consecutive drifted iterations
+    arm it, and a post-fire ``cooldown`` stops thrash — planned diurnal
+    wiggle (live trace == planned trace) produces zero deviation and
+    never fires.
+
+  * re-planner — on a fire, snapshots the WAN as currently observed
+    (``TopologyMatrix.snapshot``), re-runs Algorithm 1 on the snapshot
+    (re-picking D; the branch-and-bound order search is warm-started
+    from the incumbent order so ties resolve to "stay put"), and prices
+    the **migration**: moving every relocated stage's weights plus
+    optimizer shards over the live WAN (per directed pair the moves
+    serialize on the channel and integrate across bandwidth segments;
+    DP replica fan-out rides the intra-DC fabric).  The switch happens
+    only when ``remaining_samples × per-sample gain > migration cost +
+    margin`` — a re-plan that cannot amortize its own migration is
+    declined.
+
+  * ``simulate_horizon`` — the horizon co-simulator: every iteration is
+    priced by the event engines at its absolute wall-clock offset
+    (``simulate(..., start_ms=t)``), so a transfer in flight when a
+    bandwidth segment flips keeps its sent bits and re-integrates the
+    remainder at the new rate.  Within an epoch, an iteration whose
+    full span sits inside constant-bandwidth segments (for every pair
+    the placement crosses) reuses the previous simulation of the same
+    rates — the horizon-level steady-state fast-forward.  The reuse is
+    gated off across segment boundaries and across re-plan epoch
+    boundaries (``fastforward.GATE_REPLAN_EPOCH``), so complexity is
+    O((bandwidth segments + re-plans) · sim + iterations), not
+    O(iterations · sim).
+
+Progress is tracked in *samples* (one iteration of a D-cell plan
+consumes ``D·C·M`` microbatches), so plans with different D remain
+comparable and the horizon ends when the static plan's sample budget is
+exhausted — reactive and static totals are end-to-end comparable,
+migration stalls included.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import fastforward
+from repro.core.dc_selection import JobModel, PlanEntry, algorithm1, best_plan
+from repro.core.simulator import PipelineSpec, simulate
+from repro.core.topology import TopologyMatrix
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlConfig:
+    """Knobs of the reactive control plane (defaults are deliberately
+    conservative: fire on a sustained ≥20% delivery miss, wait three
+    iterations, and require the projected gain to cover the migration)."""
+
+    drift_threshold: float = 0.2  # relative |delivered − assumed| that arms
+    hysteresis: int = 3  # consecutive drifted iterations before a fire
+    cooldown_iterations: int = 8  # min iterations between re-plan attempts
+    min_gain_ms: float = 0.0  # extra margin the switch must clear
+    snapshot_window_ms: Optional[float] = None  # None: the last iteration's span
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationModel:
+    """What moving one pipeline stage costs.
+
+    A stage relocation ships its weights plus the optimizer shards —
+    ``opt_state_mult`` bytes of optimizer state per parameter byte
+    (Adam's two moments at parameter precision by default) — over the
+    live WAN via the existing transfer pricing.  Replica fan-out
+    (``dp_replicas`` copies of a stage live in its DC, §4.2) streams
+    over the intra-DC fabric after the WAN copy lands.
+    """
+
+    opt_state_mult: float = 2.0
+
+    def stage_bytes(self, param_bytes: float) -> float:
+        return param_bytes * (1.0 + self.opt_state_mult)
+
+
+@dataclasses.dataclass
+class MigrationEvent:
+    """One executed re-plan: the stall window and what moved."""
+
+    at_ms: float  # wall time training paused
+    duration_ms: float  # stall: max over links of WAN serialization + fan-out
+    bytes_per_stage: float
+    moves: List[Tuple[int, int, int]]  # (stage, src_dc, dst_dc)
+    transfers: List[Tuple[int, int, float, float]]  # (src, dst, start, end)
+    projected_gain_ms: float
+    remaining_samples: float
+    from_D: int
+    to_D: int
+
+    @property
+    def wan_bytes(self) -> float:
+        return self.bytes_per_stage * len(self.moves)
+
+
+@dataclasses.dataclass
+class EpochRecord:
+    """One span of the horizon governed by a single plan."""
+
+    index: int
+    start_ms: float
+    start_sample: float
+    plan: PlanEntry
+    spec: PipelineSpec
+    n_pipelines: int  # pipelines per DP-cell (the Atlas temporal-sharing D)
+    dp_replicas: int  # total DP replicas (cells × pipelines per cell)
+    assumed: TopologyMatrix  # the WAN the plan priced (drift reference)
+    iterations: int = 0
+    end_ms: float = math.nan
+
+    @property
+    def samples_per_iteration(self) -> float:
+        return float(self.dp_replicas * self.spec.microbatches)
+
+
+@dataclasses.dataclass
+class HorizonResult:
+    total_ms: float
+    samples: float
+    policy: str
+    epochs: List[EpochRecord]
+    migrations: List[MigrationEvent]
+    iteration_times: List[float]
+    stats: Dict
+
+    @property
+    def replans(self) -> int:
+        return len(self.migrations)
+
+    @property
+    def migration_ms(self) -> float:
+        return sum(m.duration_ms for m in self.migrations)
+
+
+# ---------------------------------------------------------------------------
+# drift detection
+# ---------------------------------------------------------------------------
+
+
+class DriftDetector:
+    """Sustained-deviation trigger with hysteresis.
+
+    Feed it the worst per-link relative deviation of each completed
+    iteration; it returns True once ``hysteresis`` consecutive
+    observations exceeded ``drift_threshold`` (then resets, so the next
+    fire needs a fresh streak).  One calm iteration clears the streak —
+    a transient trace spike shorter than the hysteresis never fires.
+    """
+
+    def __init__(self, cfg: ControlConfig):
+        self.cfg = cfg
+        self.streak = 0
+        self.fires = 0
+
+    def observe(self, deviation: float) -> bool:
+        if deviation > self.cfg.drift_threshold:
+            self.streak += 1
+        else:
+            self.streak = 0
+        if self.streak >= self.cfg.hysteresis:
+            self.streak = 0
+            self.fires += 1
+            return True
+        return False
+
+    def reset(self) -> None:
+        self.streak = 0
+
+
+def link_deviation(
+    live: TopologyMatrix, assumed, t0_ms: float, t1_ms: float
+) -> float:
+    """Worst relative |delivered − assumed| bandwidth across all WAN
+    pairs over ``[t0_ms, t1_ms)``.  Delivery is the live schedule's
+    window mean; the reference is what the incumbent plan's topology
+    assumed for the same window (its own schedule's mean when the plan
+    *knew* a trace — so a planned diurnal cycle deviates by exactly 0 —
+    else its static link rate)."""
+    worst = 0.0
+    for a, b in live.wan_pairs():
+        sched = live.bandwidth_schedule(a, b)
+        obs = sched.mean_bw_gbps(t0_ms, t1_ms) if sched else live.link(a, b).bw_gbps
+        asm_sched = assumed.bandwidth_schedule(a, b)
+        asm = (
+            asm_sched.mean_bw_gbps(t0_ms, t1_ms)
+            if asm_sched
+            else assumed.link(a, b).bw_gbps
+        )
+        worst = max(worst, abs(obs - asm) / asm)
+    return worst
+
+
+# ---------------------------------------------------------------------------
+# plan -> spec, migration pricing
+# ---------------------------------------------------------------------------
+
+
+def plan_spec(job: JobModel, plan: PlanEntry, topo: TopologyMatrix) -> PipelineSpec:
+    """The ``PipelineSpec`` a ``PlanEntry`` deploys: stages laid out in
+    the plan's DC order, mapped to *topology* indices (the control plane
+    requires a named topology — fleet keys are fixed WAN sites)."""
+    assert topo.dc_names, "control plane needs a named topology"
+    stage_dc: List[int] = []
+    for dc in plan.dc_order:
+        stage_dc.extend([topo.index_of(dc)] * plan.partitions.get(dc, 0))
+    return PipelineSpec(
+        num_stages=len(stage_dc),
+        microbatches=job.microbatches,
+        t_fwd_ms=job.t_fwd_ms,
+        act_bytes=job.act_bytes,
+        stage_dc=tuple(stage_dc),
+        stage_param_bytes=job.partition_param_bytes,
+        recompute=job.recompute,
+        bwd_mult=job.bwd_mult,
+    )
+
+
+def plan_migration(
+    old_stage_dc: Sequence[int],
+    new_stage_dc: Sequence[int],
+    *,
+    param_bytes: float,
+    dp_replicas_old: int,
+    dp_replicas_new: int,
+    topo: TopologyMatrix,
+    at_ms: float,
+    model: MigrationModel,
+) -> MigrationEvent:
+    """Price moving from one placement to another at wall time ``at_ms``.
+
+    Every relocated stage ships ``stage_bytes`` (weights + optimizer
+    shards) over its ``src → dst`` link; moves sharing a directed pair
+    serialize on that channel, each priced by the bandwidth schedule in
+    force at its own start (segments integrate — migrating *during* an
+    outage is expensive, which is exactly the trade-off the re-planner
+    weighs).  Distinct pairs run in parallel.  After the WAN copy, the
+    destination DC fans the stage out to its ``dp_replicas_new``
+    replicas over the intra-DC fabric; a pure D change (no relocation)
+    pays only the fan-out for the extra replicas.  The stall is the
+    slowest link's completion plus the slowest DC's fan-out — training
+    is paused for the whole window (GPUs and links are occupied;
+    ``validate.check_horizon`` asserts nothing overlaps it)."""
+    stage_bytes = model.stage_bytes(param_bytes)
+    moves = [
+        (i, src, dst)
+        for i, (src, dst) in enumerate(zip(old_stage_dc, new_stage_dc))
+        if src != dst
+    ]
+    by_pair: Dict[Tuple[int, int], List[int]] = {}
+    for i, src, dst in moves:
+        by_pair.setdefault((src, dst), []).append(i)
+
+    transfers: List[Tuple[int, int, float, float]] = []
+    wan_done = 0.0
+    for (src, dst), stages in sorted(by_pair.items()):
+        link = topo.link(src, dst)
+        sched = topo.bandwidth_schedule(src, dst)
+        cur = at_ms
+        for _ in stages:
+            if sched is not None:
+                occ = sched.transfer_ms(stage_bytes, cur)
+            else:
+                occ = stage_bytes * 8.0 / (link.bw_gbps * 1e9) * 1e3
+            transfers.append((src, dst, cur, cur + occ))
+            cur += occ
+        wan_done = max(wan_done, (cur - at_ms) + link.latency_ms)
+
+    intra_ms_one = stage_bytes * 8.0 / (topo.intra_bw_gbps * 1e9) * 1e3
+    fan: Dict[int, float] = {}
+    for _i, _src, dst in moves:
+        fan[dst] = fan.get(dst, 0.0) + (dp_replicas_new - 1) * intra_ms_one
+    if dp_replicas_new > dp_replicas_old:
+        extra = dp_replicas_new - dp_replicas_old
+        for i, (src, dst) in enumerate(zip(old_stage_dc, new_stage_dc)):
+            if src == dst:  # unmoved stages still need the new replicas
+                fan[dst] = fan.get(dst, 0.0) + extra * intra_ms_one
+    fan_ms = max(fan.values(), default=0.0)
+
+    return MigrationEvent(
+        at_ms=at_ms,
+        duration_ms=wan_done + fan_ms,
+        bytes_per_stage=stage_bytes,
+        moves=moves,
+        transfers=transfers,
+        projected_gain_ms=0.0,
+        remaining_samples=0.0,
+        from_D=dp_replicas_old,
+        to_D=dp_replicas_new,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the horizon co-simulator
+# ---------------------------------------------------------------------------
+
+
+def _crossing_schedules(spec: PipelineSpec, topo: TopologyMatrix):
+    """Bandwidth schedules governing any directed pair this placement's
+    boundaries cross (deduped, deterministic order) — the set whose
+    segment boundaries invalidate iteration reuse."""
+    out = []
+    seen = set()
+    for s in range(spec.num_stages - 1):
+        for a, b in ((spec.stage_dc[s], spec.stage_dc[s + 1]),
+                     (spec.stage_dc[s + 1], spec.stage_dc[s])):
+            if a == b:
+                continue
+            sched = topo.bandwidth_schedule(a, b)
+            # dedup by schedule identity, not directed pair: the
+            # reverse-pair fallback hands both directions one object
+            if sched is None or sched.is_flat() or id(sched) in seen:
+                continue
+            seen.add(id(sched))
+            out.append(sched)
+    return out
+
+
+def simulate_horizon(
+    job: JobModel,
+    fleet: Dict[str, int],
+    P: int,
+    live_topo: TopologyMatrix,
+    *,
+    n_iterations: int,
+    planned_topo: Optional[TopologyMatrix] = None,
+    control: Optional[ControlConfig] = None,
+    migration: Optional[MigrationModel] = None,
+    C: Optional[int] = None,
+    policy: str = "atlas",
+    validate: bool = False,
+) -> HorizonResult:
+    """Co-simulate ``n_iterations`` (of the initial plan's global batch)
+    against the live WAN, optionally with the reactive control plane.
+
+    ``planned_topo`` is what Algorithm 1 believed at t=0 (default: the
+    live topology — the planner knew the whole trace); the live/planned
+    split is how an *unplanned* outage is modelled.  ``control=None``
+    runs the static PR-3 behaviour — plan once, never react — so the
+    same call is both arms of the reactive-vs-static comparison.  ``C``
+    (pipelines per DP-cell) is pinned across re-plans: re-sizing a cell
+    is a full re-shard, not a migration; D is re-picked freely.
+    """
+    assert live_topo.dc_names, "control plane needs a named topology"
+    planned = planned_topo if planned_topo is not None else live_topo
+    mig_model = migration if migration is not None else MigrationModel()
+
+    job0 = dataclasses.replace(job, topology=planned)
+    if C is None:
+        C = max(1, round(job0.comm_compute_ratio))
+    plan0 = best_plan(algorithm1(job0, fleet, P, C=C))
+    if not math.isfinite(plan0.total_ms):
+        raise ValueError("initial plan infeasible for this fleet/P/C")
+
+    def open_epoch(index, t, samples, plan, assumed):
+        spec = plan_spec(job, plan, live_topo)
+        return EpochRecord(
+            index=index,
+            start_ms=t,
+            start_sample=samples,
+            plan=plan,
+            spec=spec,
+            n_pipelines=C,
+            dp_replicas=plan.D * C,
+            assumed=assumed,
+        )
+
+    epoch = open_epoch(0, 0.0, 0.0, plan0, planned)
+    epochs = [epoch]
+    migrations: List[MigrationEvent] = []
+    iteration_times: List[float] = []
+    detector = DriftDetector(control) if control is not None else None
+    stats = {
+        "iter_sims": 0,
+        "iter_reused": 0,
+        "drift_iterations": 0,
+        "drift_fires": 0,
+        "replans_declined": 0,
+        "replans_noop": 0,
+        "fast_forward_gates": {},
+    }
+
+    samples_total = float(n_iterations) * epoch.samples_per_iteration
+    t = 0.0
+    samples = 0.0
+    k = 0  # completed full iterations (cooldown clock)
+    last_replan_k = -(10 ** 9)
+    cache: Dict[Tuple, float] = {}
+    crossing = _crossing_schedules(epoch.spec, live_topo)
+
+    def run_iteration() -> float:
+        key = tuple(s.bw_at(t) for s in crossing)
+        hit = cache.get(key)
+        if hit is not None and all(s.constant_over(t, t + hit) for s in crossing):
+            stats["iter_reused"] += 1
+            return hit
+        # first iteration after a re-plan never extrapolates across the
+        # migration (the epoch-boundary gate); otherwise the single-
+        # iteration fast-forward engages whenever its own gates allow
+        boundary = epoch.index > 0 and epoch.iterations == 0
+        gate = fastforward.fast_forward_gate(
+            epoch.spec, live_topo, epoch_boundary=boundary
+        )
+        res = simulate(
+            epoch.spec,
+            live_topo,
+            policy=policy,
+            n_pipelines=epoch.n_pipelines,
+            dp_replicas_for_allreduce=epoch.dp_replicas,
+            start_ms=t,
+            fast_forward=False if gate is not None else None,
+            validate=validate,
+        )
+        stats["iter_sims"] += 1
+        if gate is not None:
+            stats["fast_forward_gates"][gate] = (
+                stats["fast_forward_gates"].get(gate, 0) + 1
+            )
+        if all(s.constant_over(t, t + res.iteration_ms) for s in crossing):
+            cache[key] = res.iteration_ms
+        return res.iteration_ms
+
+    while samples < samples_total - 1e-9:
+        iter_ms = run_iteration()
+        spi = epoch.samples_per_iteration
+        if samples + spi >= samples_total - 1e-9:
+            frac = (samples_total - samples) / spi
+            t += iter_ms * frac
+            samples = samples_total
+            epoch.iterations += 1
+            iteration_times.append(iter_ms)
+            break
+        t += iter_ms
+        samples += spi
+        k += 1
+        epoch.iterations += 1
+        iteration_times.append(iter_ms)
+        if detector is None:
+            continue
+
+        dev = link_deviation(live_topo, epoch.assumed, t - iter_ms, t)
+        drifted = dev > control.drift_threshold
+        stats["drift_iterations"] += int(drifted)
+        if not detector.observe(dev):
+            continue
+        stats["drift_fires"] += 1
+        if k - last_replan_k < control.cooldown_iterations:
+            continue
+        last_replan_k = k
+
+        window = control.snapshot_window_ms
+        snap = live_topo.snapshot(t, window_ms=iter_ms if window is None else window)
+        job_s = dataclasses.replace(job, topology=snap)
+        cand = best_plan(
+            algorithm1(job_s, fleet, P, C=C, incumbent_order=epoch.plan.dc_order)
+        )
+        if not math.isfinite(cand.total_ms):
+            stats["replans_declined"] += 1
+            continue
+        cand_spec = plan_spec(job, cand, live_topo)
+        if cand_spec.stage_dc == epoch.spec.stage_dc and cand.D == epoch.plan.D:
+            # same deployment under current conditions: re-anchor the
+            # drift reference so the detector stops firing on a change
+            # the plan already tolerates best
+            epoch.assumed = snap
+            stats["replans_noop"] += 1
+            continue
+
+        mig = plan_migration(
+            epoch.spec.stage_dc,
+            cand_spec.stage_dc,
+            param_bytes=job.partition_param_bytes,
+            dp_replicas_old=epoch.dp_replicas,
+            dp_replicas_new=cand.D * C,
+            topo=live_topo,
+            at_ms=t,
+            model=mig_model,
+        )
+        cand_res = simulate(
+            cand_spec,
+            live_topo,
+            policy=policy,
+            n_pipelines=C,
+            dp_replicas_for_allreduce=cand.D * C,
+            start_ms=t + mig.duration_ms,
+        )
+        inc_per_sample = iter_ms / spi
+        cand_per_sample = cand_res.iteration_ms / (cand.D * C * job.microbatches)
+        remaining = samples_total - samples
+        gain = remaining * (inc_per_sample - cand_per_sample)
+        if gain <= mig.duration_ms + control.min_gain_ms:
+            stats["replans_declined"] += 1
+            continue
+
+        mig.projected_gain_ms = gain
+        mig.remaining_samples = remaining
+        migrations.append(mig)
+        epoch.end_ms = t
+        t += mig.duration_ms
+        epoch = open_epoch(epoch.index + 1, t, samples, cand, snap)
+        epochs.append(epoch)
+        detector.reset()
+        cache = {}
+        crossing = _crossing_schedules(epoch.spec, live_topo)
+
+    epoch.end_ms = t
+    return HorizonResult(
+        total_ms=t,
+        samples=samples,
+        policy=policy,
+        epochs=epochs,
+        migrations=migrations,
+        iteration_times=iteration_times,
+        stats=stats,
+    )

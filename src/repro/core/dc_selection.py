@@ -319,6 +319,7 @@ def _bnb_best_order(
     dc_order: Sequence[str],
     cell: int,
     gpus_per_partition: int,
+    incumbent: Optional[Sequence[str]] = None,
 ) -> Optional[Tuple[str, ...]]:
     """Best placement order for one D (None = infeasible for this D).
 
@@ -332,7 +333,14 @@ def _bnb_best_order(
     term of the boundaries placed so far — cannot beat the incumbent.
     Children are expanded in ``dc_order`` sequence and the incumbent only
     replaced on strict improvement, so ties resolve to the same
-    (lexicographically first) order the exhaustive reference returns."""
+    (lexicographically first) order the exhaustive reference returns.
+
+    ``incumbent`` warm-starts the search with a known-good order (the
+    control plane's currently-deployed placement): its cost becomes the
+    initial bound, so partial orders dominated by the deployed plan are
+    pruned immediately, and — because replacement requires *strict*
+    improvement — a tie returns the incumbent itself, keeping the
+    re-planner from proposing a cost-equal migration."""
     topo = job.topology
     assert topo is not None and topo.dc_names, "order search needs a named topology"
     caps = {dc: num_gpu.get(dc, 0) // gpus_per_partition for dc in dc_order}
@@ -365,6 +373,28 @@ def _bnb_best_order(
 
     best_cost = math.inf
     best_order: Optional[Tuple[str, ...]] = None
+
+    if incumbent is not None:
+        # evaluate the deployed order through the same packing/cost walk
+        # the dfs uses; an infeasible incumbent (fleet shrank) seeds nothing
+        prefix: List[str] = []
+        placed = 0
+        acc = acc_ser = 0.0
+        for dc in incumbent:
+            if placed >= P:
+                break
+            if dc not in idx or dc in prefix:
+                continue
+            k = min(caps[dc], P - placed)
+            acc += (k - 1) * intra_cost
+            if prefix:
+                acc += pair_cost[(prefix[-1], dc)]
+                acc_ser = max(acc_ser, pair_ser[(prefix[-1], dc)])
+            prefix.append(dc)
+            placed += k
+        if placed >= P:
+            best_cost = const + acc + (M - 1) * max(comp_slot, acc_ser)
+            best_order = tuple(prefix)
 
     def boundary_lb(left: int, remaining: List[str]) -> float:
         """Cheapest possible cost of the `left` boundaries still to come:
@@ -438,6 +468,7 @@ def algorithm1(
     dc_order: Optional[Sequence[str]] = None,
     search_orders: Optional[bool] = None,
     order_search: str = "bnb",
+    incumbent_order: Optional[Sequence[str]] = None,
 ) -> List[PlanEntry]:
     """Paper Algorithm 1. Returns one PlanEntry per DP-cell count D.
 
@@ -451,6 +482,11 @@ def algorithm1(
     orders with admissible lower bounds and handles up to 12 DCs;
     "exhaustive" enumerates permutations (the differential-testing
     reference, ≤ 8 DCs) — both return the same best plan.
+
+    ``incumbent_order`` (bnb only) warm-starts every per-D search with
+    the currently-deployed placement: the re-planner
+    (``repro.core.control``) passes the live plan's order so the search
+    starts from a tight bound and ties resolve to "stay put".
     """
     if order_search not in ("bnb", "exhaustive"):
         raise ValueError(f"unknown order_search {order_search!r}")
@@ -495,7 +531,8 @@ def algorithm1(
     plans: List[PlanEntry] = []
     for D in range(1, D_max + 1):
         if orders is None:
-            best = _plan_for_order_bnb(job, num_gpu, P, C, D, dc_order)
+            best = _plan_for_order_bnb(job, num_gpu, P, C, D, dc_order,
+                                       incumbent=incumbent_order)
         else:
             best = None
             for order in orders:
@@ -542,8 +579,10 @@ def _plan_for_order_bnb(
     C: int,
     D: int,
     dc_order: Sequence[str],
+    incumbent: Optional[Sequence[str]] = None,
 ) -> PlanEntry:
-    order = _bnb_best_order(job, num_gpu, P, dc_order, C, D * C)
+    order = _bnb_best_order(job, num_gpu, P, dc_order, C, D * C,
+                            incumbent=incumbent)
     if order is None:  # infeasible: report the input order, like exhaustive
         return _plan_entry(job, num_gpu, P, C, D, tuple(dc_order))
     return _plan_entry(job, num_gpu, P, C, D, order)

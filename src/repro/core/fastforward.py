@@ -67,13 +67,16 @@ MIN_HEADROOM = 8  # auto mode: M must exceed the probes by at least this
 K_MAX = 32  # give up on periods longer than this
 
 GATE_TIME_VARYING = "time-varying-bandwidth"
+GATE_REPLAN_EPOCH = "replan-epoch-boundary"
 
 
 def _close(a: float, b: float) -> bool:
     return abs(a - b) <= 1e-7 + 1e-9 * max(abs(a), abs(b))
 
 
-def fast_forward_gate(spec: PipelineSpec, topo) -> Optional[str]:
+def fast_forward_gate(
+    spec: PipelineSpec, topo, *, epoch_boundary: bool = False
+) -> Optional[str]:
     """A reason the fast-forward must not even be *attempted* for this
     (spec, topo), or ``None`` when probing is sound.
 
@@ -85,9 +88,17 @@ def fast_forward_gate(spec: PipelineSpec, topo) -> Optional[str]:
     through the change, silently diverging from full replay.  Flat
     schedules (and schedule-free topologies) keep the static engine's
     periodicity and pass.  The caller records the gate in
-    ``stats["fast_forward_gate"]``."""
+    ``stats["fast_forward_gate"]``.
+
+    ``epoch_boundary`` gates the first iteration after a control-plane
+    re-plan (``repro.core.control``): the placement, D, and channel
+    state just changed under the job, so no steady state measured before
+    the migration may be extrapolated across it — the horizon simulator
+    full-replays that iteration and records ``GATE_REPLAN_EPOCH``."""
     from repro.core.simulator import has_time_varying_wan
 
+    if epoch_boundary:
+        return GATE_REPLAN_EPOCH
     if has_time_varying_wan(spec, topo):
         return GATE_TIME_VARYING
     return None

@@ -160,6 +160,7 @@ def simulate(
     dp_replicas_for_allreduce: int = 1,
     validate: bool = False,
     fast_forward: Optional[bool] = None,
+    start_ms: float = 0.0,
 ) -> SimResult:
     """Simulate one minibatch (iteration) of ``n_pipelines`` DP pipelines.
 
@@ -183,6 +184,14 @@ def simulate(
     WAN boundary) breaks steady-state periodicity, so the fast-forward
     is gated off even under ``fast_forward=True``;
     ``res.stats["fast_forward_gate"]`` records the reason.
+
+    ``start_ms`` places the iteration at an absolute wall-clock offset:
+    every time-varying transfer is priced against the bandwidth segments
+    in force at ``start_ms + (local start)``, so an in-flight transfer
+    straddling a segment boundary keeps the bits already sent and
+    re-integrates the remainder at the new rate.  Intervals stay in
+    iteration-local time; static and flat pairs are offset-invariant.
+    The horizon co-simulator (``repro.core.control``) drives this.
     """
     assert policy in POLICIES
     D = n_pipelines
@@ -194,8 +203,8 @@ def simulate(
 
     def run_raw(s: PipelineSpec):
         if policy == "atlas":
-            return _run_atlas(s, topo, D)
-        return _run_events(s, topo, policy, engine_D)
+            return _run_atlas(s, topo, D, start_ms)
+        return _run_events(s, topo, policy, engine_D, start_ms)
 
     raw = None
     ff_gate = None
@@ -237,7 +246,7 @@ def simulate(
 
 
 def _run_events(
-    spec: PipelineSpec, topo, policy: str, D: int
+    spec: PipelineSpec, topo, policy: str, D: int, start_ms: float = 0.0
 ) -> Tuple[Dict, float, Dict]:
     """Raw event replay: returns (busy, pipeline end time, engine stats)."""
     P, M = spec.num_stages, spec.microbatches
@@ -355,7 +364,7 @@ def _run_events(
         m, p, s_from, s_to, direction = heapq.heappop(pend)
         ser, delay, sched = ttimes[(s_from, s_to)]
         if sched is not None:
-            ser = sched.transfer_ms(spec.act_bytes, now)
+            ser = sched.transfer_ms(spec.act_bytes, start_ms + now)
         chan_free[key] = now + ser
         push(now + ser + delay, "arrive", (p, s_to, direction, m))
         push(now + ser, "chan_free", (key,))
@@ -392,11 +401,13 @@ def _run_events(
 # ---------------------------------------------------------------------------
 
 
-def _run_atlas(spec: PipelineSpec, topo, n_pipelines: int) -> Tuple[Dict, float, Dict]:
+def _run_atlas(
+    spec: PipelineSpec, topo, n_pipelines: int, start_ms: float = 0.0
+) -> Tuple[Dict, float, Dict]:
     from repro.core import temporal
 
     sched = temporal.atlas_schedule(
-        spec, topo, n_pipelines, inflight_cap=spec.inflight_cap
+        spec, topo, n_pipelines, inflight_cap=spec.inflight_cap, start_ms=start_ms
     )
     busy: Dict[Tuple[int, int], List[Interval]] = {
         (p, s): [] for p in range(n_pipelines) for s in range(spec.num_stages)

@@ -85,7 +85,14 @@ def atlas_schedule(
     n_pipelines: int,
     *,
     inflight_cap: Optional[int] = None,
+    start_ms: float = 0.0,
 ) -> Schedule:
+    """Precompute one iteration's schedule.  ``start_ms`` anchors the
+    iteration at an absolute wall-clock offset: time-varying transfers
+    are priced against the bandwidth segments in force at
+    ``start_ms + (local start)`` — a transfer straddling a segment
+    boundary keeps its sent bits and re-integrates the remainder at the
+    new rate.  Task/transfer times stay iteration-local."""
     P, M, D = spec.num_stages, spec.microbatches, n_pipelines
     t_f = spec.t_fwd_ms
     t_b = spec.bwd_mult * t_f
@@ -135,7 +142,7 @@ def atlas_schedule(
         ser, _delay, sched, mult = btimes[(b, direction)]
         if sched is None:
             return ser
-        return sched.transfer_ms(spec.act_bytes, start, rate_mult=mult)
+        return sched.transfer_ms(spec.act_bytes, start_ms + start, rate_mult=mult)
 
     gpu_free = {(p, s): 0.0 for p in range(D) for s in range(P)}
     chan_free: Dict[Tuple[int, str], float] = {}

@@ -137,6 +137,32 @@ class TopologyMatrix:
         }
         return self.with_bandwidth_schedules(scheds)
 
+    def snapshot(self, t_ms: float, window_ms: float = 0.0) -> "TopologyMatrix":
+        """The WAN as *observed* at wall time ``t_ms``: a static matrix
+        whose link bandwidths are what each schedule actually delivers —
+        the rate in force at ``t_ms``, or the mean over the trailing
+        ``[t_ms - window_ms, t_ms)`` window when ``window_ms > 0`` (a
+        short window smooths trace jitter without hiding an outage).
+        Schedules are dropped: the re-planner (``repro.core.control``)
+        plans on current conditions, not on a trace it has no forecast
+        for.  Latencies and unscheduled pairs are unchanged."""
+        links: Dict[Pair, wan.Link] = dict(self.links)
+        for a, b in self.wan_pairs():
+            sched = self.bandwidth_schedule(a, b)
+            if sched is None:
+                continue
+            if window_ms > 0.0 and t_ms > 0.0:
+                bw = sched.mean_bw_gbps(max(0.0, t_ms - window_ms), t_ms)
+            else:
+                bw = sched.bw_at(t_ms)
+            links[(a, b)] = wan.Link(self.link(a, b).latency_ms, bw)
+        return dataclasses.replace(
+            self,
+            links=links,
+            bw_schedules={},
+            name=(self.name or "topology") + f"@{t_ms:g}ms",
+        )
+
     # --- helpers ---------------------------------------------------------
     def index_of(self, dc_name: str, fallback: Optional[int] = None) -> int:
         if self.dc_names and dc_name in self.dc_names:

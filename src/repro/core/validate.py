@@ -179,8 +179,16 @@ def check_sim_result(
 # ---------------------------------------------------------------------------
 
 
-def check_schedule(sched, spec, topo, *, inflight_cap: Optional[int] = None) -> None:
-    """Assert the §4.4 invariants on a precomputed ``temporal.Schedule``."""
+def check_schedule(
+    sched, spec, topo, *, inflight_cap: Optional[int] = None, start_ms: float = 0.0
+) -> None:
+    """Assert the §4.4 invariants on a precomputed ``temporal.Schedule``.
+
+    ``start_ms`` anchors the schedule at an absolute wall-clock offset
+    (matching ``temporal.atlas_schedule(..., start_ms=...)``): transfer
+    occupancies are priced against the bandwidth segments in force at
+    ``start_ms + tr.start``, so a per-epoch plan inside a re-planning
+    horizon is checked against the WAN it actually ran on."""
     P, M = spec.num_stages, spec.microbatches
     D = sched.num_pipelines
     t_f = spec.t_fwd_ms
@@ -243,7 +251,7 @@ def check_schedule(sched, spec, topo, *, inflight_cap: Optional[int] = None) -> 
         bw_sched = get_sched(src, dst) if get_sched is not None else None
         if bw_sched is not None:
             ser = bw_sched.transfer_ms(
-                spec.act_bytes, tr.start, rate_mult=D if is_wan_b else 1
+                spec.act_bytes, start_ms + tr.start, rate_mult=D if is_wan_b else 1
             )
         else:
             ser_one = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
@@ -284,19 +292,21 @@ def check_schedule(sched, spec, topo, *, inflight_cap: Optional[int] = None) -> 
 # ---------------------------------------------------------------------------
 
 
-def check_atlas_consistency(spec, topo, n_pipelines: int = 1, dp_replicas: int = 1) -> None:
+def check_atlas_consistency(
+    spec, topo, n_pipelines: int = 1, dp_replicas: int = 1, start_ms: float = 0.0
+) -> None:
     """The precomputed §4.4 schedule and the event-driven simulator must
     report the same iteration time (the simulator's atlas policy wraps the
     schedule; this guards the wrapper AND re-validates both artifacts)."""
     from repro.core import simulator, temporal
 
     sched = temporal.atlas_schedule(
-        spec, topo, n_pipelines, inflight_cap=spec.inflight_cap
+        spec, topo, n_pipelines, inflight_cap=spec.inflight_cap, start_ms=start_ms
     )
-    check_schedule(sched, spec, topo)
+    check_schedule(sched, spec, topo, start_ms=start_ms)
     res = simulator.simulate(
         spec, topo, policy="atlas", n_pipelines=n_pipelines,
-        dp_replicas_for_allreduce=dp_replicas,
+        dp_replicas_for_allreduce=dp_replicas, start_ms=start_ms,
     )
     check_sim_result(res, spec, policy="atlas")
     ar = wan.allreduce_ms(
@@ -305,6 +315,79 @@ def check_atlas_consistency(spec, topo, n_pipelines: int = 1, dp_replicas: int =
     if abs((sched.makespan + ar) - res.iteration_ms) > EPS:
         _fail("precomputed schedule and simulator disagree on iteration time",
               sched.makespan + ar, res.iteration_ms)
+
+
+def check_horizon(hr, live_topo, *, check_epoch_schedules: bool = True) -> None:
+    """Assert the control-plane invariants on a ``control.HorizonResult``.
+
+      * epochs and migration windows tile ``[0, total_ms]`` exactly —
+        training never overlaps a migration (the stall occupies the
+        GPUs), and every migration sits between the epoch it closed and
+        the epoch it opened;
+      * each per-epoch plan passes ``check_schedule`` *independently*,
+        anchored at its own wall-clock offset (transfers priced against
+        the live bandwidth segments in force during that epoch);
+      * migration transfers serialize per directed WAN pair, stay inside
+        their stall window, and occupy the channel for at least the
+        physical (schedule-integrated) serialization of the moved bytes.
+    """
+    import math
+
+    migs = list(hr.migrations)
+    if len(hr.epochs) != len(migs) + 1:
+        _fail("epoch/migration counts inconsistent", len(hr.epochs), len(migs))
+    prev_end = 0.0
+    for i, ep in enumerate(hr.epochs):
+        if abs(ep.start_ms - prev_end) > EPS:
+            _fail("epoch does not start where the previous span ended",
+                  i, ep.start_ms, prev_end)
+        if math.isnan(ep.end_ms) or ep.end_ms < ep.start_ms - EPS:
+            _fail("epoch end missing or before its start", i, ep.end_ms)
+        if i < len(migs):
+            m = migs[i]
+            if abs(m.at_ms - ep.end_ms) > EPS:
+                _fail("migration does not begin when its epoch ends",
+                      i, m.at_ms, ep.end_ms)
+            prev_end = m.at_ms + m.duration_ms
+        else:
+            prev_end = ep.end_ms
+    if abs(prev_end - hr.total_ms) > EPS:
+        _fail("epoch/migration spans do not tile the horizon",
+              prev_end, hr.total_ms)
+
+    if check_epoch_schedules and hr.policy == "atlas":
+        from repro.core import temporal
+
+        for ep in hr.epochs:
+            sched = temporal.atlas_schedule(
+                ep.spec, live_topo, ep.n_pipelines,
+                inflight_cap=ep.spec.inflight_cap, start_ms=ep.start_ms,
+            )
+            check_schedule(sched, ep.spec, live_topo, start_ms=ep.start_ms)
+
+    get_sched = getattr(live_topo, "bandwidth_schedule", None)
+    for m in migs:
+        window_end = m.at_ms + m.duration_ms
+        by_pair: Dict[Tuple[int, int], List[Tuple[float, float]]] = {}
+        for src, dst, s, e in m.transfers:
+            if s < m.at_ms - EPS or e > window_end + EPS:
+                _fail("migration transfer outside its stall window", m.at_ms, (s, e))
+            link = live_topo.link(src, dst)
+            bw_sched = get_sched(src, dst) if get_sched is not None else None
+            if bw_sched is not None:
+                ser = bw_sched.transfer_ms(m.bytes_per_stage, s)
+            else:
+                ser = m.bytes_per_stage * 8.0 / (link.bw_gbps * 1e9) * 1e3
+            if (e - s) < ser - EPS:
+                _fail("migration transfer faster than the live link allows",
+                      (src, dst), (s, e), ser)
+            by_pair.setdefault((src, dst), []).append((s, e))
+        for pair, ws in by_pair.items():
+            ws.sort()
+            for (s0, e0), (s1, e1) in zip(ws, ws[1:]):
+                if s1 < e0 - EPS:
+                    _fail("two migration transfers share a WAN channel at once",
+                          pair, (s0, e0), (s1, e1))
 
 
 def check_policy(spec, topo, policy: str, n_pipelines: int = 1):

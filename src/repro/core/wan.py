@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import zlib
 from bisect import bisect_right
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 # calibration constants (paper Table 1 / Fig 5 / §4.1)
 TCP_K_GBIT_MS = 12.0  # single-connection bw ≈ K / latency_ms (Gbit/s·ms)
@@ -82,6 +82,12 @@ class BandwidthSchedule:
     segments (``transfer_ms``) — there is no memoizable constant transfer
     time on a time-varying link.
 
+    ``period_ms`` makes the profile wrap around: the pattern on
+    ``[0, period_ms)`` repeats forever (day 2 of a 24-h diurnal trace
+    looks like day 1, not like its last sample frozen in time).
+    ``diurnal``/``from_trace`` set it to their natural cycle; ``flat``/
+    ``step``/``outage`` model one-shot events and do not.
+
     Built from a measured/synthetic sample trace (``from_samples`` /
     ``from_trace``) or from analytic profiles (``flat`` / ``step`` /
     ``outage`` / ``diurnal``).  Attach to ``TopologyMatrix.bw_schedules``
@@ -90,6 +96,7 @@ class BandwidthSchedule:
 
     times_ms: Tuple[float, ...]
     bw_gbps: Tuple[float, ...]
+    period_ms: Optional[float] = None
 
     def __post_init__(self):
         assert len(self.times_ms) == len(self.bw_gbps) >= 1
@@ -97,6 +104,25 @@ class BandwidthSchedule:
         for a, b in zip(self.times_ms, self.times_ms[1:]):
             assert b > a, "segment starts must be strictly increasing"
         assert all(bw > 0 for bw in self.bw_gbps), "bandwidth must be positive"
+        if self.period_ms is not None:
+            assert self.period_ms > self.times_ms[-1], (
+                "period must exceed the last segment start"
+            )
+            # whole-cycle capacity at rate_mult=1, precomputed once: the
+            # periodic transfer loop must not re-sum every segment of a
+            # 1440-sample trace per priced transfer (object.__setattr__
+            # because the dataclass is frozen; not a field, so eq/hash
+            # semantics are untouched)
+            n = len(self.times_ms)
+            object.__setattr__(
+                self,
+                "_cycle_bits",
+                sum(
+                    ((self.times_ms[j + 1] if j + 1 < n else self.period_ms)
+                     - self.times_ms[j]) * self.bw_gbps[j] * 1e6
+                    for j in range(n)
+                ),
+            )
 
     # --- queries ----------------------------------------------------------
     def is_flat(self) -> bool:
@@ -104,7 +130,10 @@ class BandwidthSchedule:
 
     def bw_at(self, t_ms: float) -> float:
         """Bandwidth (Gbit/s) in force at time ``t_ms`` (clamped to 0)."""
-        i = bisect_right(self.times_ms, max(0.0, t_ms)) - 1
+        t = max(0.0, t_ms)
+        if self.period_ms is not None:
+            t = t % self.period_ms
+        i = bisect_right(self.times_ms, t) - 1
         return self.bw_gbps[i]
 
     def min_bw_gbps(self) -> float:
@@ -122,19 +151,131 @@ class BandwidthSchedule:
         ``bytes·8 / bw`` formula exactly."""
         rem = nbytes * 8.0  # bits
         t = max(0.0, start_ms)
-        i = bisect_right(self.times_ms, t) - 1
+        if self.period_ms is None:
+            i = bisect_right(self.times_ms, t) - 1
+            n = len(self.times_ms)
+            while True:
+                bw = self.bw_gbps[i] * rate_mult
+                if i + 1 >= n:
+                    return (t - start_ms) + rem / (bw * 1e9) * 1e3
+                seg_ms = self.times_ms[i + 1] - t
+                cap_bits = seg_ms * bw * 1e6  # Gbit/s = 1e6 bits per ms
+                if rem <= cap_bits:
+                    return (t - start_ms) + rem / (bw * 1e9) * 1e3
+                rem -= cap_bits
+                t = self.times_ms[i + 1]
+                i += 1
+        # periodic profile: walk segments cyclically, skipping whole
+        # cycles in O(1) so a transfer many cycles long stays cheap
+        period = self.period_ms
         n = len(self.times_ms)
+        base = (t // period) * period
+        tau = t - base
+        i = bisect_right(self.times_ms, tau) - 1
+        cycle_bits = self._cycle_bits * rate_mult
         while True:
             bw = self.bw_gbps[i] * rate_mult
-            if i + 1 >= n:
-                return (t - start_ms) + rem / (bw * 1e9) * 1e3
-            seg_ms = self.times_ms[i + 1] - t
-            cap_bits = seg_ms * bw * 1e6  # Gbit/s = 1e6 bits per ms
+            nxt = self.times_ms[i + 1] if i + 1 < n else period
+            cap_bits = (nxt - tau) * bw * 1e6
             if rem <= cap_bits:
-                return (t - start_ms) + rem / (bw * 1e9) * 1e3
+                return (base + tau - start_ms) + rem / (bw * 1e9) * 1e3
             rem -= cap_bits
-            t = self.times_ms[i + 1]
+            tau = nxt
             i += 1
+            if i >= n:
+                base += period
+                tau = 0.0
+                i = 0
+                if rem > cycle_bits:
+                    k = int(rem // cycle_bits)
+                    rem -= k * cycle_bits
+                    base += k * period
+
+    def _segments_from(self, t_ms: float):
+        """Yield ``(bw_gbps, seg_start_abs, seg_end_abs)`` from ``t_ms``
+        on (the caller breaks out; the last segment of an aperiodic
+        schedule ends at +inf, a periodic one yields forever)."""
+        import math
+
+        t = max(0.0, t_ms)
+        n = len(self.times_ms)
+        if self.period_ms is None:
+            i = bisect_right(self.times_ms, t) - 1
+            while True:
+                end = self.times_ms[i + 1] if i + 1 < n else math.inf
+                yield self.bw_gbps[i], t, end
+                t = end
+                i += 1
+        else:
+            period = self.period_ms
+            base = (t // period) * period
+            tau = t - base
+            i = bisect_right(self.times_ms, tau) - 1
+            while True:
+                nxt = self.times_ms[i + 1] if i + 1 < n else period
+                yield self.bw_gbps[i], base + tau, base + nxt
+                tau = nxt
+                i += 1
+                if i >= n:
+                    base += period
+                    tau = 0.0
+                    i = 0
+
+    def bits_sent(
+        self, nbytes: float, start_ms: float, until_ms: float, rate_mult: float = 1.0
+    ) -> float:
+        """Bits of an ``nbytes`` transfer begun at ``start_ms`` that are
+        on the wire by ``until_ms`` (capped at the transfer size) — the
+        preemption primitive: integrate the rate over the elapsed window
+        instead of assuming any single segment's bandwidth."""
+        total = nbytes * 8.0
+        t0 = max(0.0, start_ms)
+        if until_ms <= t0:
+            return 0.0
+        sent = 0.0
+        for bw, s0, s1 in self._segments_from(t0):
+            hi = min(s1, until_ms)
+            sent += (hi - max(s0, t0)) * bw * rate_mult * 1e6
+            if sent >= total:
+                return total
+            if s1 >= until_ms:
+                break
+        return sent
+
+    def preempt(
+        self, nbytes: float, start_ms: float, at_ms: float, rate_mult: float = 1.0
+    ) -> Tuple[float, float]:
+        """Cut an in-flight transfer at ``at_ms``: the bits already sent
+        are kept, the remainder re-integrates at whatever rate rules
+        from ``at_ms`` on (``transfer_ms(remaining, at_ms)``).  Returns
+        ``(sent_bytes, remaining_bytes)``.  Splitting at any point and
+        resuming immediately reproduces the unsplit ``transfer_ms``
+        exactly — the differential identity the tests pin down."""
+        sent = self.bits_sent(nbytes, start_ms, at_ms, rate_mult) / 8.0
+        return sent, nbytes - sent
+
+    def mean_bw_gbps(self, t0_ms: float, t1_ms: float) -> float:
+        """Average bandwidth actually delivered over ``[t0_ms, t1_ms)`` —
+        what the drift detector compares against the plan's assumption."""
+        t0 = max(0.0, t0_ms)
+        assert t1_ms > t0, (t0_ms, t1_ms)
+        acc = 0.0
+        for bw, s0, s1 in self._segments_from(t0):
+            hi = min(s1, t1_ms)
+            acc += (hi - max(s0, t0)) * bw
+            if s1 >= t1_ms:
+                break
+        return acc / (t1_ms - t0)
+
+    def constant_over(self, t0_ms: float, t1_ms: float) -> bool:
+        """Is the rate constant over ``[t0_ms, t1_ms)``?  (The horizon
+        simulator may reuse an iteration result only inside such a
+        window.)"""
+        if self.is_flat():
+            return True
+        for _bw, _s0, s1 in self._segments_from(max(0.0, t0_ms)):
+            return s1 >= t1_ms
+        return False
 
     # --- constructors -----------------------------------------------------
     @classmethod
@@ -143,10 +284,16 @@ class BandwidthSchedule:
 
     @classmethod
     def from_samples(
-        cls, samples_gbps: Sequence[float], sample_ms: float
+        cls,
+        samples_gbps: Sequence[float],
+        sample_ms: float,
+        *,
+        period_ms: Optional[float] = None,
     ) -> "BandwidthSchedule":
         """A measured trace, one sample per ``sample_ms`` — consecutive
-        equal samples are coalesced into one segment."""
+        equal samples are coalesced into one segment.  ``period_ms``
+        (typically ``len(samples) * sample_ms``) wraps the trace so
+        horizons longer than the measurement replay it cyclically."""
         assert samples_gbps and sample_ms > 0
         times = [0.0]
         bws = [float(samples_gbps[0])]
@@ -154,7 +301,7 @@ class BandwidthSchedule:
             if s != bws[-1]:
                 times.append(k * sample_ms)
                 bws.append(float(s))
-        return cls(tuple(times), tuple(bws))
+        return cls(tuple(times), tuple(bws), period_ms)
 
     @classmethod
     def from_trace(
@@ -165,11 +312,15 @@ class BandwidthSchedule:
         samples_per_hour: int = 60,
         seed: int = 0,
     ) -> "BandwidthSchedule":
-        """The Fig-7 AR(1) stability trace of ``link`` as a schedule."""
+        """The Fig-7 AR(1) stability trace of ``link`` as a schedule,
+        wrapping at the trace length (day 2 replays day 1 instead of
+        holding the last sample forever)."""
         trace = bandwidth_trace_for_link(
             link, hours=hours, samples_per_hour=samples_per_hour, seed=seed
         )
-        return cls.from_samples(trace, 3.6e6 / samples_per_hour)
+        return cls.from_samples(
+            trace, 3.6e6 / samples_per_hour, period_ms=hours * 3.6e6
+        )
 
     @classmethod
     def step(cls, bw0_gbps: float, bw1_gbps: float, at_ms: float) -> "BandwidthSchedule":
@@ -202,7 +353,9 @@ class BandwidthSchedule:
         cycles: int = 1,
     ) -> "BandwidthSchedule":
         """Piecewise-constant approximation of a diurnal cosine: capacity
-        peaks mid-cycle (off-peak hours) and bottoms at the cycle edges."""
+        peaks mid-cycle (off-peak hours) and bottoms at the cycle edges.
+        The schedule wraps at ``cycles * period_ms`` — diurnal congestion
+        repeats every day, it does not freeze at the last step."""
         import math
 
         assert steps >= 2 and cycles >= 1
@@ -214,7 +367,7 @@ class BandwidthSchedule:
                 times.append(c * period_ms + k * period_ms / steps)
                 phase = 2.0 * math.pi * (k + 0.5) / steps
                 bws.append(mid - amp * math.cos(phase))
-        return cls(tuple(times), tuple(bws))
+        return cls(tuple(times), tuple(bws), cycles * period_ms)
 
 
 # ---------------------------------------------------------------------------

@@ -206,12 +206,20 @@ def build_lowerable(arch: str, shape: str, multi_pod: bool, boundary: str = "str
         return mesh, fn, args, cfg
 
 
-def wan_projection(dcn_bytes: float, topo) -> Dict[str, Any]:
+def wan_projection(dcn_bytes: float, topo,
+                   drift: Optional[str] = None) -> Dict[str, Any]:
     """Project the measured inter-pod DCN bytes onto a WAN topology: the
     per-iteration transfer time if the pod boundary ran over the given
     (possibly heterogeneous) WAN instead of the datacenter DCN.  Uses the
     bottleneck pair — the paper's placement rule puts the cut on the best
-    pair, but capacity planning must survive the worst."""
+    pair, but capacity planning must survive the worst.
+
+    ``drift="outage"`` adds the reactive-control-plane projection: the
+    boundary transfer priced through a sustained 10x degradation of the
+    pair it rides (what a static plan keeps paying) vs. re-routed onto
+    the best alternative pair (what ``repro.core.control`` migrates to
+    once the drift detector fires)."""
+    from repro.core import wan as _wan
     from repro.core.topology import TopologyMatrix
 
     if isinstance(topo, str):
@@ -220,18 +228,45 @@ def wan_projection(dcn_bytes: float, topo) -> Dict[str, Any]:
         topo = preset(topo)
     worst = topo.bottleneck()
     best = topo.best_link()
-    return {
+    out = {
         "topology": topo.name,
         "worst_pair_s": worst.transfer_ms(dcn_bytes) / 1e3,
         "best_pair_s": best.transfer_ms(dcn_bytes) / 1e3,
         "worst_pair_gbps": worst.bw_gbps,
         "best_pair_gbps": best.bw_gbps,
     }
+    if drift == "outage":
+        deg = _wan.BandwidthSchedule.outage(
+            best.bw_gbps, 1e-3, 1e15, best.bw_gbps / 10.0)
+        static_s = (deg.transfer_ms(dcn_bytes, 1.0)
+                    + best.latency_ms) / 1e3
+        # the re-plan routes the cut onto the best *alternative* pair —
+        # a different physical pair, not the reverse direction of the
+        # degraded one (wan_pairs() yields both directions)
+        by_pair = {}
+        for a, b in topo.wan_pairs():
+            by_pair.setdefault(frozenset((a, b)), []).append(topo.link(a, b))
+        ranked = sorted(
+            ((max(ls, key=lambda l: (l.bw_gbps, -l.latency_ms)), key)
+             for key, ls in by_pair.items()),
+            key=lambda kl: (-kl[0].bw_gbps, kl[0].latency_ms))
+        if len(ranked) > 1:
+            reactive_s = ranked[1][0].transfer_ms(dcn_bytes) / 1e3
+        else:
+            reactive_s = static_s  # single-pair WAN: nowhere to migrate
+        out["drift"] = {
+            "scenario": "10x outage on the boundary pair",
+            "static_s": static_s,  # the plan keeps riding the degraded pair
+            "reactive_s": reactive_s,  # re-planned onto the best alternative
+            "reactive_speedup": static_s / reactive_s if reactive_s else None,
+        }
+    return out
 
 
 def run_one(arch: str, shape: str, mesh_name: str, boundary: str = "striped",
             fsdp: Optional[bool] = None, relayout: bool = False,
-            wan_preset: Optional[str] = None) -> Dict[str, Any]:
+            wan_preset: Optional[str] = None,
+            wan_drift: Optional[str] = None) -> Dict[str, Any]:
     multi_pod = mesh_name == "multi"
     ok, why = shp.shape_supported(arch, shape)
     if not ok:
@@ -302,7 +337,7 @@ def run_one(arch: str, shape: str, mesh_name: str, boundary: str = "striped",
         "active_params": n_active,
     }
     if wan_preset:
-        result["wan"] = wan_projection(coll["dcn"], wan_preset)
+        result["wan"] = wan_projection(coll["dcn"], wan_preset, drift=wan_drift)
     return result
 
 
@@ -320,6 +355,11 @@ def main():
                     choices=["azure", "skewed", "star", "chain"],
                     help="also project the inter-pod DCN bytes onto this "
                          "WAN topology (repro.core.topology presets)")
+    ap.add_argument("--wan-drift", default=None, choices=["outage"],
+                    help="with --wan-preset: add the reactive control-plane "
+                         "projection (static plan riding a 10x-degraded "
+                         "boundary pair vs re-planned onto the best "
+                         "alternative — repro.core.control)")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--out", default=OUT_DIR)
     args = ap.parse_args()
@@ -342,7 +382,8 @@ def main():
                     res = run_one(arch, shape, mesh_name, args.boundary,
                                   fsdp=False if args.no_fsdp else None,
                                   relayout=args.relayout,
-                                  wan_preset=args.wan_preset)
+                                  wan_preset=args.wan_preset,
+                                  wan_drift=args.wan_drift)
                 except Exception as e:
                     res = {"arch": arch, "shape": shape, "mesh": mesh_name,
                            "boundary": args.boundary, "status": "error",

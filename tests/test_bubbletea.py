@@ -130,6 +130,54 @@ def test_intersect_bubbles():
     assert intersect_bubbles([a, [(50, 60)]]) == []
 
 
+def test_intersect_bubbles_edge_cases():
+    # touching-but-not-overlapping windows share only a zero-length
+    # point: no usable window may be emitted
+    assert intersect_bubbles([[(0, 10)], [(10, 20)]]) == []
+    assert intersect_bubbles([[(0, 10), (10, 20)], [(5, 15)]]) == [(5, 10), (10, 15)]
+    # unequal list lengths: the shorter list simply bounds the result
+    a = [(0, 100)]
+    b = [(10, 20), (30, 40), (50, 60)]
+    assert intersect_bubbles([a, b]) == b
+    assert intersect_bubbles([b, a]) == b
+    # an empty GPU list anywhere means the pipeline has no common idle
+    assert intersect_bubbles([a, []]) == []
+    assert intersect_bubbles([[], a]) == []
+    # no GPUs at all: no windows
+    assert intersect_bubbles([]) == []
+    # three-way with a middle list that splits both neighbours
+    c = [(0, 12), (14, 100)]
+    assert intersect_bubbles([a, c, b]) == [
+        (10, 12), (14, 20), (30, 40), (50, 60)]
+
+
+def test_reset_windows_after_replan_epoch():
+    """The control-plane hook (ISSUE 4): after a re-plan the bubble
+    geometry changes wholesale — stale windows must not serve, new
+    ones must, and accounting carries across the epoch boundary."""
+    ctrl = BubbleTeaController([[(0.0, 500.0)]], LM, pp_degree=1)
+    p0 = ctrl.submit(PrefillRequest(0, 0.0, 128))
+    assert p0 is not None
+    # re-plan at t=600: the new epoch's bubbles live elsewhere — the old
+    # window must not serve; the earliest feasible start is the new one
+    ctrl.reset_windows([[(1_000.0, 1_500.0)]])
+    p1 = ctrl.submit(PrefillRequest(1, 600.0, 128))
+    assert p1 is not None and p1.start_ms == 1_000.0
+    p2 = ctrl.submit(PrefillRequest(2, 1_050.0, 128))
+    assert p2 is not None and p2.start_ms >= 1_050.0
+    assert len(ctrl.placements) == 3  # accounting survived the reset
+    # cursors restarted: a later reset with earlier windows still works
+    ctrl.reset_windows([[(2_000.0, 2_400.0)], [(1_900.0, 2_300.0)]])
+    p3 = ctrl.submit(PrefillRequest(3, 1_950.0, 128))
+    assert p3 is not None and p3.pipeline == 1  # earliest-start pipeline wins
+
+
+def test_utilization_with_prefills_guards_zero_span():
+    ctrl = BubbleTeaController([[(0.0, 10.0)]], LM)
+    assert utilization_with_prefills(0.0, 0.0, ctrl) == 0.0
+    assert utilization_with_prefills(5.0, -1.0, ctrl) == 0.0
+
+
 # -------------------------------------------- pruning + SLO (ISSUE 3)
 
 

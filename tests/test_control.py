@@ -1,0 +1,440 @@
+"""Reactive control plane (ISSUE 4) — drift detection, re-planning,
+migration pricing, transfer preemption, and the horizon co-simulator.
+
+Nets:
+  * ``BandwidthSchedule`` preemption primitives: a transfer split at any
+    point (bits kept, remainder re-integrated) reproduces the unsplit
+    integration exactly — differential against single-segment pricing;
+    ``period_ms`` wraparound replays a trace cyclically instead of
+    freezing its last sample.
+  * ``simulate(..., start_ms=...)``: flat/static topologies are
+    offset-invariant (interval-identical), time-varying transfers are
+    priced by the segments in force at the absolute offset, and the
+    schedule checker rejects an honest schedule validated at the wrong
+    offset.
+  * The control plane: on a sustained one-direction 10× outage the
+    reactive horizon beats the static plan end-to-end *including* the
+    migration stall; a pure-diurnal trace the planner knew about never
+    re-plans (hysteresis); every per-epoch plan passes
+    ``validate.check_schedule`` via ``check_horizon``; the horizon-level
+    iteration reuse is differentially identical to simulating every
+    iteration.
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core import control, temporal
+from repro.core import topology as tp
+from repro.core import validate as V
+from repro.core import wan
+from repro.core.dc_selection import JobModel, algorithm1, best_plan
+from repro.core.fastforward import GATE_REPLAN_EPOCH, fast_forward_gate
+from repro.core.simulator import PipelineSpec, simulate
+
+
+def _world():
+    lat = [[0.0, 20.0, 20.0], [20.0, 0.0, 20.0], [20.0, 20.0, 0.0]]
+    return tp.TopologyMatrix.from_latency(
+        lat, multi_tcp=True, dc_names=("a", "b", "c"))
+
+
+def _job(**kw):
+    kw.setdefault("t_fwd_ms", 10.0)
+    kw.setdefault("act_bytes", 1e7)
+    kw.setdefault("partition_param_bytes", 2e8)
+    kw.setdefault("microbatches", 24)
+    return JobModel(**kw)
+
+
+def _outage_live(world, start_ms=10_000.0, end_ms=200_000.0, factor=10.0):
+    """One direction a->b drops ``factor``x for a sustained window; the
+    reverse direction is pinned flat (single-direction outage)."""
+    bw = world.link(0, 1).bw_gbps
+    return world.with_bandwidth_schedules({
+        (0, 1): wan.BandwidthSchedule.outage(bw, start_ms, end_ms, bw / factor),
+        (1, 0): wan.BandwidthSchedule.flat(bw),
+    })
+
+
+# ---------------------------------------------------- preemption primitives
+
+
+def test_preempt_differential_against_single_segment_pricing():
+    """Splitting a transfer at any cut — bits already sent kept, the
+    remainder re-integrated from the cut — must reproduce the unsplit
+    integration exactly, including cuts exactly on a segment boundary."""
+    s = wan.BandwidthSchedule((0.0, 10.0, 30.0), (1.0, 0.25, 2.0))
+    nbytes = 40e6 / 8.0
+    whole = s.transfer_ms(nbytes, 0.0)
+    for cut in (1.0, 10.0, 15.0, 30.0, 42.0):
+        sent, rem = s.preempt(nbytes, 0.0, cut)
+        assert sent + rem == pytest.approx(nbytes, rel=1e-12)
+        if rem <= 0:
+            continue
+        resumed = cut + s.transfer_ms(rem, cut)
+        assert resumed == pytest.approx(whole, rel=1e-12), cut
+    # each leg individually matches single-segment pricing: 10 ms at
+    # 1 Gbps sends 10e6 bits; the remaining 30e6 bits take the whole
+    # 0.25 Gbps segment (5e6 bits over 20 ms) + 25e6 bits at 2 Gbps
+    sent, rem = s.preempt(nbytes, 0.0, 10.0)
+    assert sent == pytest.approx(10e6 / 8.0)
+    assert s.transfer_ms(rem, 10.0) == pytest.approx(20.0 + 25e6 / 2e6)
+
+
+def test_preempt_with_rate_mult_and_bits_cap():
+    s = wan.BandwidthSchedule.step(1.0, 0.5, 10.0)
+    nbytes = 15e6 / 8.0
+    # at 2x rate the whole transfer fits the first segment
+    assert s.bits_sent(nbytes, 0.0, 10.0, rate_mult=2.0) == nbytes * 8.0
+    sent, rem = s.preempt(nbytes, 0.0, 1e9)
+    assert sent == nbytes and rem == 0.0
+    assert s.bits_sent(nbytes, 5.0, 5.0) == 0.0  # empty window
+
+
+def test_transfer_ms_start_exactly_at_segment_boundary():
+    """start_ms == times_ms[i]: the transfer prices entirely in the new
+    segment (segments are [t_i, t_i+1))."""
+    s = wan.BandwidthSchedule.step(1.0, 0.5, 10.0)
+    nbytes = 5e6 / 8.0  # 5e6 bits
+    assert s.transfer_ms(nbytes, 10.0) == pytest.approx(10.0)  # 0.5 Gbps
+    # one epsilon earlier still rides the fast segment for that epsilon
+    eps = 1e-3
+    assert s.transfer_ms(nbytes, 10.0 - eps) == pytest.approx(
+        eps + (5e6 - eps * 1e6) / 0.5e6, rel=1e-9)
+    assert s.bw_at(10.0) == 0.5 and s.bw_at(10.0 - 1e-6) == 1.0
+
+
+def test_period_wraparound():
+    d = wan.BandwidthSchedule.diurnal(5.0, 2.5, period_ms=24.0, steps=8)
+    assert d.period_ms == 24.0
+    assert d.bw_at(24.0 + 3.0) == d.bw_at(3.0)
+    assert d.bw_at(24.0 * 7 + 3.0) == d.bw_at(3.0)
+    # a transfer spanning many cycles moves at the cycle-mean rate
+    mean = (5.0 + 2.5) / 2.0
+    ten_cycles_bytes = mean * 1e6 * 24.0 * 10 / 8.0
+    assert d.transfer_ms(ten_cycles_bytes, 0.0) == pytest.approx(240.0, rel=1e-6)
+    assert d.mean_bw_gbps(0.0, 24.0) == pytest.approx(mean)
+    assert d.mean_bw_gbps(24.0, 48.0) == pytest.approx(mean)
+    assert d.constant_over(24.5, 26.9) and not d.constant_over(24.5, 27.5)
+
+
+def test_period_set_by_trace_and_diurnal_not_by_oneshot_profiles():
+    link = wan.wan_link(34.0, True)
+    tr = wan.BandwidthSchedule.from_trace(link, hours=2.0, samples_per_hour=4)
+    assert tr.period_ms == 2 * 3.6e6
+    assert tr.bw_at(2 * 3.6e6 + 50.0) == tr.bw_at(50.0)  # day 2 == day 1
+    assert wan.BandwidthSchedule.flat(5.0).period_ms is None
+    assert wan.BandwidthSchedule.step(5.0, 1.0, 10.0).period_ms is None
+    o = wan.BandwidthSchedule.outage(5.0, 10.0, 20.0, 0.5)
+    assert o.period_ms is None
+    assert o.bw_at(1e12) == 5.0  # one-shot: holds the last segment forever
+    with pytest.raises(AssertionError):
+        wan.BandwidthSchedule((0.0, 10.0), (1.0, 2.0), period_ms=10.0)
+
+
+# ----------------------------------------------------- start_ms threading
+
+
+def test_simulate_start_ms_offset_invariant_on_flat_and_static():
+    spec = PipelineSpec(num_stages=4, microbatches=12, t_fwd_ms=10.0,
+                        act_bytes=1.5e8, stage_dc=(0, 0, 1, 2),
+                        stage_param_bytes=8e8)
+    base = tp.azure_testbed()
+    flat = base.with_bandwidth_schedules({
+        (a, b): wan.BandwidthSchedule.flat(base.link(a, b).bw_gbps)
+        for a, b in base.wan_pairs()})
+    for topo in (base, flat):
+        for policy in ("varuna", "atlas"):
+            r0 = simulate(spec, topo, policy=policy, n_pipelines=2,
+                          start_ms=0.0)
+            r1 = simulate(spec, topo, policy=policy, n_pipelines=2,
+                          start_ms=9.9e8)
+            V.check_equivalent(r0, r1)
+
+
+def test_simulate_start_ms_prices_segment_in_force():
+    spec = PipelineSpec(num_stages=4, microbatches=12, t_fwd_ms=10.0,
+                        act_bytes=1.5e8, stage_dc=(0, 0, 1, 2),
+                        stage_param_bytes=8e8)
+    base = tp.azure_testbed()
+    bw = base.link(0, 1).bw_gbps
+    step = base.with_bandwidth_schedules(
+        {(0, 1): wan.BandwidthSchedule.step(bw, bw / 4.0, 5_000.0)})
+    for policy in ("varuna", "atlas"):
+        fast = simulate(spec, step, policy=policy, n_pipelines=2,
+                        start_ms=0.0, validate=True)
+        slow = simulate(spec, step, policy=policy, n_pipelines=2,
+                        start_ms=1e6, validate=True)
+        assert slow.iteration_ms > fast.iteration_ms
+
+
+def test_check_schedule_rejects_wrong_offset():
+    """An honest schedule computed in the degraded segment claims
+    occupancies 4x longer than the nominal rate needs; the same
+    schedule validated as if it ran pre-step (or vice versa) must
+    fail — offsets are part of the physics."""
+    spec = PipelineSpec(num_stages=4, microbatches=10, t_fwd_ms=10.0,
+                        act_bytes=1.5e8, stage_dc=(0, 0, 1, 2),
+                        stage_param_bytes=8e8)
+    base = tp.azure_testbed()
+    bw = base.link(0, 1).bw_gbps
+    step = base.with_bandwidth_schedules(
+        {(0, 1): wan.BandwidthSchedule.step(bw, bw / 4.0, 5_000.0)})
+    sched0 = temporal.atlas_schedule(spec, step, 2, start_ms=0.0)
+    V.check_schedule(sched0, spec, step, start_ms=0.0)
+    with pytest.raises(V.InvariantViolation):
+        V.check_schedule(sched0, spec, step, start_ms=1e6)
+    V.check_atlas_consistency(spec, step, n_pipelines=2, dp_replicas=2,
+                              start_ms=123_456.0)
+
+
+def test_replan_epoch_gate():
+    spec = PipelineSpec(num_stages=2, microbatches=4, t_fwd_ms=1.0,
+                        act_bytes=1e6, stage_dc=(0, 1))
+    topo = _world()
+    assert fast_forward_gate(spec, topo) is None
+    assert fast_forward_gate(spec, topo, epoch_boundary=True) == GATE_REPLAN_EPOCH
+
+
+# -------------------------------------------------------- drift detection
+
+
+def test_drift_detector_hysteresis_and_reset():
+    det = control.DriftDetector(control.ControlConfig(
+        drift_threshold=0.2, hysteresis=3))
+    assert not det.observe(0.5)
+    assert not det.observe(0.5)
+    assert det.observe(0.5)  # third consecutive fires
+    assert not det.observe(0.5)  # streak reset after a fire
+    assert not det.observe(0.5)
+    assert not det.observe(0.1)  # one calm iteration clears the streak
+    assert not det.observe(0.5)
+    assert not det.observe(0.5)
+    assert not det.observe(0.1)
+    assert det.fires == 1
+
+
+def test_link_deviation_zero_when_plan_knew_the_trace():
+    world = _world()
+    di = world.with_bandwidth_schedules({
+        (a, b): wan.BandwidthSchedule.diurnal(
+            world.link(a, b).bw_gbps, 0.6 * world.link(a, b).bw_gbps,
+            period_ms=20_000.0)
+        for a, b in world.wan_pairs()})
+    assert control.link_deviation(di, di, 3_000.0, 8_000.0) == 0.0
+    # ... but large vs the static nominal assumption at the trough
+    # (diurnal capacity bottoms at the cycle edges)
+    dev = control.link_deviation(di, world, 0.0, 2_500.0)
+    assert dev > 0.2
+
+
+# ------------------------------------------------------- migration pricing
+
+
+def test_plan_migration_serializes_per_pair_and_prices_live_schedule():
+    world = _world()
+    bw = world.link(1, 2).bw_gbps
+    live = world.with_bandwidth_schedules(
+        {(1, 2): wan.BandwidthSchedule.flat(bw / 2.0),  # b->c delivers bw/2
+         (2, 1): wan.BandwidthSchedule.flat(bw)})  # reverse stays nominal
+    pb = 2e8
+    model = control.MigrationModel(opt_state_mult=2.0)
+    sb = model.stage_bytes(pb)
+    assert sb == pytest.approx(3 * pb)
+    ev = control.plan_migration(
+        (0, 1, 1, 2), (0, 2, 2, 1),
+        param_bytes=pb, dp_replicas_old=2, dp_replicas_new=2,
+        topo=live, at_ms=1_000.0, model=model)
+    # stages 1, 2 move b->c (serialize at bw/2), stage 3 moves c->b (parallel)
+    assert ev.moves == [(1, 1, 2), (2, 1, 2), (3, 2, 1)]
+    ser_bc = sb * 8.0 / (bw / 2.0 * 1e9) * 1e3
+    ser_cb = sb * 8.0 / (bw * 1e9) * 1e3
+    bc = sorted(t for t in ev.transfers if (t[0], t[1]) == (1, 2))
+    assert len(bc) == 2
+    assert bc[0][2] == pytest.approx(1_000.0)
+    assert bc[1][2] == pytest.approx(bc[0][3])  # serialized back-to-back
+    assert bc[0][3] - bc[0][2] == pytest.approx(ser_bc)
+    lat = live.link(1, 2).latency_ms
+    intra_one = sb * 8.0 / (live.intra_bw_gbps * 1e9) * 1e3
+    # slowest pair (2 serialized b->c moves) + latency + fan-out of the
+    # two stages landing in DC c to the second replica
+    want = 2 * ser_bc + lat + 2 * intra_one
+    assert ev.duration_ms == pytest.approx(want)
+    assert ev.wan_bytes == pytest.approx(3 * sb)
+    assert ser_cb < ser_bc  # the parallel pair is not the critical path
+
+
+def test_plan_migration_pure_D_change_pays_fanout_only():
+    world = _world()
+    ev = control.plan_migration(
+        (0, 1, 2), (0, 1, 2),
+        param_bytes=2e8, dp_replicas_old=2, dp_replicas_new=4,
+        topo=world, at_ms=0.0, model=control.MigrationModel())
+    assert ev.moves == [] and ev.transfers == []
+    intra_one = ev.bytes_per_stage * 8.0 / (world.intra_bw_gbps * 1e9) * 1e3
+    assert ev.duration_ms == pytest.approx(2 * intra_one)  # 2 extra replicas
+
+
+# ------------------------------------------------------ warm-started bnb
+
+
+def test_warm_started_bnb_matches_cold_and_keeps_incumbent_on_ties():
+    world = _world()  # fully symmetric: every order is cost-equal
+    job = _job(topology=world)
+    fleet = {"a": 4, "b": 4, "c": 4}
+    cold = best_plan(algorithm1(job, fleet, P=10, C=1))
+    warm_same = best_plan(algorithm1(job, fleet, P=10, C=1,
+                                     incumbent_order=cold.dc_order))
+    assert warm_same.dc_order == cold.dc_order
+    assert warm_same.total_ms == pytest.approx(cold.total_ms)
+    # a cost-equal non-lex-first incumbent is kept (no gratuitous move)
+    warm = best_plan(algorithm1(job, fleet, P=10, C=1,
+                                incumbent_order=("b", "a", "c")))
+    assert warm.dc_order[:3] == ("b", "a", "c")
+    assert warm.total_ms == pytest.approx(cold.total_ms)
+    # on a skewed WAN the warm start must not mask a strictly better order
+    skew = tp.skewed_3dc()
+    job_s = _job(topology=skew)
+    fleet_s = {"dc0": 16, "dc1": 16, "dc2": 20}
+    cold_s = best_plan(algorithm1(job_s, fleet_s, P=40, C=1))
+    warm_s = best_plan(algorithm1(job_s, fleet_s, P=40, C=1,
+                                  incumbent_order=("dc0", "dc2", "dc1")))
+    assert warm_s.total_ms == pytest.approx(cold_s.total_ms)
+    assert warm_s.dc_order == cold_s.dc_order
+
+
+# --------------------------------------------------- the horizon simulator
+
+
+def _horizon_pair(n_iterations=80, **ctrl_kw):
+    world = _world()
+    live = _outage_live(world)
+    job = _job()
+    fleet = {"a": 4, "b": 4, "c": 4}
+    static = control.simulate_horizon(
+        job, fleet, P=10, live_topo=live, planned_topo=world,
+        n_iterations=n_iterations, C=1)
+    reactive = control.simulate_horizon(
+        job, fleet, P=10, live_topo=live, planned_topo=world,
+        n_iterations=n_iterations, C=1,
+        control=control.ControlConfig(**ctrl_kw))
+    return world, live, job, static, reactive
+
+
+def test_reactive_beats_static_on_sustained_outage():
+    """The acceptance scenario: one direction drops 10x mid-horizon for
+    a sustained window.  The control plane detects the drift, re-plans
+    around the degraded pair, pays the migration, and still finishes
+    the same sample budget sooner than the static plan."""
+    world, live, job, static, reactive = _horizon_pair()
+    assert static.replans == 0
+    assert reactive.replans >= 1
+    assert reactive.migration_ms > 0
+    assert reactive.total_ms < static.total_ms
+    assert reactive.samples == static.samples  # same work, end-to-end
+    # the re-planned epoch routes around the degraded a->b pair
+    ep = reactive.epochs[1]
+    boundaries = set(zip(ep.spec.stage_dc, ep.spec.stage_dc[1:]))
+    assert (0, 1) not in boundaries
+    # drift was sustained, detection respected the hysteresis
+    assert reactive.stats["drift_fires"] >= 1
+
+
+def test_horizon_passes_check_horizon_and_negative():
+    world, live, job, static, reactive = _horizon_pair()
+    V.check_horizon(static, live)
+    V.check_horizon(reactive, live)
+    # corrupt one migration transfer to run faster than the live link
+    m = reactive.migrations[0]
+    src, dst, s, e = m.transfers[0]
+    m.transfers[0] = (src, dst, s, s + (e - s) * 0.2)
+    with pytest.raises(V.InvariantViolation):
+        V.check_horizon(reactive, live)
+
+
+def test_horizon_never_replans_on_planned_diurnal():
+    """Hysteresis acceptance: the planner knew the diurnal trace, so
+    delivery never deviates from the plan's assumption and the control
+    plane must not thrash."""
+    world = _world()
+    di = world.with_bandwidth_schedules({
+        (a, b): wan.BandwidthSchedule.diurnal(
+            world.link(a, b).bw_gbps, 0.6 * world.link(a, b).bw_gbps,
+            period_ms=20_000.0)
+        for a, b in world.wan_pairs()})
+    r = control.simulate_horizon(
+        _job(), {"a": 4, "b": 4, "c": 4}, P=10, live_topo=di,
+        n_iterations=30, C=1,
+        control=control.ControlConfig(drift_threshold=0.15, hysteresis=2))
+    assert r.replans == 0
+    assert r.stats["drift_fires"] == 0
+    assert r.stats["drift_iterations"] == 0
+
+
+def test_horizon_reuse_differential_against_per_iteration_simulation():
+    """The horizon-level iteration reuse must be invisible: the total is
+    identical to simulating every iteration at its own offset."""
+    world = _world()
+    live = _outage_live(world, start_ms=8_000.0, end_ms=60_000.0)
+    job = _job()
+    fleet = {"a": 4, "b": 4, "c": 4}
+    n = 24
+    static = control.simulate_horizon(
+        job, fleet, P=10, live_topo=live, planned_topo=world,
+        n_iterations=n, C=1)
+    assert static.stats["iter_reused"] > 0  # the cache did engage
+    assert static.stats["iter_sims"] + static.stats["iter_reused"] == n
+    ep = static.epochs[0]
+    t = 0.0
+    for _ in range(n):
+        res = simulate(ep.spec, live, policy="atlas",
+                       n_pipelines=ep.n_pipelines,
+                       dp_replicas_for_allreduce=ep.dp_replicas, start_ms=t)
+        t += res.iteration_ms
+    assert static.total_ms == pytest.approx(t, rel=1e-12)
+    assert len(static.iteration_times) == n
+
+
+def test_horizon_epoch_gates_recorded():
+    _world_, live, job, static, reactive = _horizon_pair()
+    gates = reactive.stats["fast_forward_gates"]
+    assert GATE_REPLAN_EPOCH in gates  # first post-migration iteration
+    assert static.stats["fast_forward_gates"].get(GATE_REPLAN_EPOCH) is None
+
+
+def test_migration_cost_can_veto_a_switch():
+    """With an enormous migration margin the re-planner must decline:
+    no migration happens and the horizon equals the static arm."""
+    world = _world()
+    live = _outage_live(world)
+    job = _job()
+    fleet = {"a": 4, "b": 4, "c": 4}
+    r = control.simulate_horizon(
+        job, fleet, P=10, live_topo=live, planned_topo=world,
+        n_iterations=40, C=1,
+        control=control.ControlConfig(min_gain_ms=1e12))
+    assert r.replans == 0
+    assert r.stats["replans_declined"] >= 1
+    s = control.simulate_horizon(
+        job, fleet, P=10, live_topo=live, planned_topo=world,
+        n_iterations=40, C=1)
+    assert r.total_ms == pytest.approx(s.total_ms, rel=1e-12)
+
+
+def test_snapshot_observes_live_rates():
+    world = _world()
+    live = _outage_live(world, start_ms=1_000.0, end_ms=5_000.0)
+    bw = world.link(0, 1).bw_gbps
+    during = live.snapshot(2_000.0)
+    after = live.snapshot(6_000.0)
+    assert during.link(0, 1).bw_gbps == pytest.approx(bw / 10.0)
+    assert during.link(1, 0).bw_gbps == pytest.approx(bw)  # pinned flat
+    assert after.link(0, 1).bw_gbps == pytest.approx(bw)
+    assert not during.bw_schedules  # static snapshot
+    # trailing-window mean smooths across the outage edge
+    win = live.snapshot(6_000.0, window_ms=2_000.0)
+    mid = (bw / 10.0 + bw) / 2.0
+    assert win.link(0, 1).bw_gbps == pytest.approx(mid)
+    assert during.link(0, 2).latency_ms == world.link(0, 2).latency_ms

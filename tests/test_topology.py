@@ -256,6 +256,14 @@ def test_wan_projection_helper():
     out = wan_projection(1e9, "skewed")
     assert out["topology"] == "skewed-3dc"
     assert out["worst_pair_s"] > out["best_pair_s"] > 0
+    assert "drift" not in out
+    # the reactive control-plane projection: a static plan riding a
+    # 10x-degraded boundary pair vs re-planned onto the best alternative
+    out = wan_projection(1e9, "azure", drift="outage")
+    d = out["drift"]
+    assert d["static_s"] > out["best_pair_s"]
+    assert d["reactive_s"] < d["static_s"]
+    assert d["reactive_speedup"] > 1.0
 
 
 def test_bandwidth_trace_for_link():
