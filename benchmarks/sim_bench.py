@@ -11,9 +11,12 @@ integrated across bandwidth segments) and sits under the same
 ``--ceiling-s`` regression guard as the large config.  The "replan"
 config runs the reactive control plane (``repro.core.control``) over a
 256-iteration outage horizon — same ceiling guard; records ``replans``,
-``migration_ms`` and the static-vs-reactive end-to-end totals.  Writes
-``BENCH_sim.json`` so CI and future PRs can diff perf artifacts
-(fields documented in ROADMAP.md).
+``migration_ms`` and the static-vs-reactive end-to-end totals.  The
+"fleet" config co-simulates two jobs sharing one WAN
+(``repro.core.fleet``) — contention-aware temporal sharing vs the naive
+always-fair-share strawman, plus the cross-job re-plan cascade, all
+under ``validate.check_fleet``.  Writes ``BENCH_sim.json`` so CI and
+future PRs can diff perf artifacts (fields documented in ROADMAP.md).
 
   PYTHONPATH=src python -m benchmarks.sim_bench                 # full sweep
   PYTHONPATH=src python -m benchmarks.sim_bench --quick         # CI smoke
@@ -50,8 +53,11 @@ SPEEDUP_TARGET = 10.0  # large config, new engine vs pre-refactor reference
 # segment-integration path — it must price transfers by integrating a
 # handful of segments, not degrade into per-sample event spam; "replan"
 # guards the control-plane horizon — its iteration-reuse cache must keep
-# a multi-hundred-iteration horizon at O(segments + re-plans) full sims
-CEILING_CONFIGS = ("large", "trace", "replan")
+# a multi-hundred-iteration horizon at O(segments + re-plans) full sims;
+# "fleet" guards the multi-job co-simulator — the per-window channel
+# allocator and reservation ledger must stay O(jobs · pairs), and the
+# per-job iteration-reuse caches must survive contended topology views
+CEILING_CONFIGS = ("large", "trace", "replan", "fleet")
 
 GPT_B = dict(hidden=8192, seq_len=6144, micro_batch=1, layers_per_stage=1,
              layer_params=1.2e9)
@@ -230,6 +236,94 @@ def _bench_replan() -> Dict:
     }
 
 
+def _bench_fleet() -> Dict:
+    """Multi-job fleet sharing one WAN (``repro.core.fleet``).
+
+    Two sections, both invariant-checked (``validate.check_fleet``):
+
+      * **sharing** — two static jobs whose channel demands *fit* one
+        shared pair together: contention-aware temporal sharing keeps
+        both at solo speed, the naive always-fair-share strawman halves
+        both jobs' transfer rates anyway and loses end-to-end.
+      * **cascade** — the 4-DC scenario: an unplanned outage pushes job
+        A's re-plan onto the pair job B crosses, the contention pushes B
+        over its drift threshold and B re-plans away; records per-job
+        totals, contention stalls, and the cascade/convergence-guard
+        trail.
+    """
+    import time as _time
+
+    from repro.core import control
+    from repro.core import fleet as fl
+    from repro.core import topology as tp3
+    from repro.core.dc_selection import JobModel
+
+    t0 = _time.perf_counter()
+
+    def tri(n, names):
+        lat = [[0.0 if i == j else 20.0 for j in range(n)] for i in range(n)]
+        return tp3.TopologyMatrix.from_latency(lat, multi_tcp=True, dc_names=names)
+
+    # -- sharing: demands fit together (d ~ 0.4 each on the one pair)
+    duo = tri(2, ("a", "b"))
+    gpus2 = {"a": 2, "b": 2}
+    job_fit = JobModel(t_fwd_ms=10.0, act_bytes=2e7, partition_param_bytes=2e8,
+                      microbatches=24)
+    mk = lambda n: fl.FleetJob(n, job_fit, gpus2, P=4, n_iterations=48, C=1)  # noqa: E731
+    temporal = fl.simulate_fleet([mk("A"), mk("B")], duo, validate=True)
+    fair = fl.simulate_fleet(
+        [mk("A"), mk("B")], duo, config=fl.FleetConfig(sharing="fair"),
+        validate=True)
+
+    # -- cascade: A(a,b,c) hit by an a->b outage migrates onto (a,c),
+    #    which B(a,c,d) crosses — B drifts on the contention and re-plans
+    world = tri(4, ("a", "b", "c", "d"))
+    bw = world.link(0, 1).bw_gbps
+    live = world.with_bandwidth_schedules({
+        (0, 1): wan.BandwidthSchedule.outage(bw, 20_000.0, 1e9, bw / 10.0)})
+    job_c = JobModel(t_fwd_ms=10.0, act_bytes=1.2e8, partition_param_bytes=2e8,
+                     microbatches=24)
+    fjA = fl.FleetJob("A", job_c, {"a": 2, "b": 2, "c": 2}, P=6,
+                      n_iterations=60, C=1, planned_topo=world,
+                      control=control.ControlConfig())
+    fjB = fl.FleetJob("B", job_c, {"a": 2, "c": 2, "d": 2}, P=6,
+                      n_iterations=60, C=1, planned_topo=world,
+                      control=control.ControlConfig())
+    cascade = fl.simulate_fleet([fjA, fjB], live, validate=True)
+
+    wall = (_time.perf_counter() - t0) * 1e3
+    per_job = {
+        n: {
+            "total_ms": round(v["total_ms"], 3),
+            "replans": v["replans"],
+            "migration_ms": round(v["migration_ms"], 3),
+            "throttled_iterations": v["throttled_iterations"],
+            "throttled_ms": round(v["throttled_ms"], 3),
+        }
+        for n, v in cascade.stats["per_job"].items()
+    }
+    return {
+        "wall_ms": round(wall, 3),
+        "sharing": {
+            "temporal_total_ms": round(temporal.total_ms, 3),
+            "fair_total_ms": round(fair.total_ms, 3),
+            "temporal_gain_ms": round(fair.total_ms - temporal.total_ms, 3),
+            "temporal_throttled_iterations": sum(
+                v["throttled_iterations"]
+                for v in temporal.stats["per_job"].values()),
+        },
+        "cascade": {
+            "replans_total": cascade.stats["replans_total"],
+            "cascade_suppressed": cascade.stats["cascade_suppressed"],
+            "cascade_epochs": cascade.stats["cascade_epochs"],
+            "admission_wait_ms": round(cascade.stats["admission_wait_ms"], 3),
+            "reservations": len(cascade.reservations),
+            "per_job": per_job,
+        },
+        "fleet_validate_ok": True,  # every run above passed check_fleet
+    }
+
+
 def _bench_placement_search() -> Dict:
     """Branch-and-bound vs exhaustive Algorithm-1 order search."""
     import random
@@ -322,6 +416,14 @@ def run_bench(quick: bool = False, budget_s: Optional[float] = 180.0,
           f"sims={replan['iter_sims']}/{replan['n_iterations']}",
           file=sys.stderr, flush=True)
 
+    fleet = _bench_fleet()
+    speedups["fleet"] = {"new_total_ms": fleet["wall_ms"]}
+    print(f"  fleet: wall={fleet['wall_ms']:.0f}ms "
+          f"temporal_gain={fleet['sharing']['temporal_gain_ms']/1e3:.1f}s "
+          f"cascade_replans={fleet['cascade']['replans_total']} "
+          f"invariant_ok={fleet['fleet_validate_ok']}",
+          file=sys.stderr, flush=True)
+
     validate_ok = None
     if validate_large:
         cfg = configs["large"]
@@ -349,6 +451,7 @@ def run_bench(quick: bool = False, budget_s: Optional[float] = 180.0,
         "speedups": speedups,
         "placement_search": _bench_placement_search(),
         "replan": replan,
+        "fleet": fleet,
         "large_validate_ok": validate_ok,
         "quick": quick,
     }
@@ -363,12 +466,14 @@ def main(argv=None) -> int:
     ap.add_argument("--budget-s", type=float, default=180.0,
                     help="per-cell wall budget for the reference engine")
     ap.add_argument("--ceiling-s", type=float, default=None,
-                    help="fail (exit 1) if the new engine's large-, trace- "
-                         "or replan-config sweep exceeds this many seconds — "
-                         "regression guard (trace: the segment-integration "
-                         "path must not regress to per-sample event spam; "
-                         "replan: the horizon reuse cache must keep full "
-                         "sims at O(segments + re-plans))")
+                    help="fail (exit 1) if the new engine's large-, trace-, "
+                         "replan- or fleet-config sweep exceeds this many "
+                         "seconds — regression guard (trace: the segment-"
+                         "integration path must not regress to per-sample "
+                         "event spam; replan: the horizon reuse cache must "
+                         "keep full sims at O(segments + re-plans); fleet: "
+                         "the channel allocator/ledger must stay "
+                         "O(jobs·pairs) per window)")
     args = ap.parse_args(argv)
 
     out = run_bench(quick=args.quick, budget_s=args.budget_s)

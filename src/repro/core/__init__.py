@@ -7,6 +7,13 @@ from repro.core.control import (  # noqa: F401
     ControlConfig,
     DriftDetector,
     HorizonResult,
+    HorizonRunner,
     MigrationModel,
     simulate_horizon,
+)
+from repro.core.fleet import (  # noqa: F401
+    FleetConfig,
+    FleetJob,
+    FleetResult,
+    simulate_fleet,
 )

@@ -247,7 +247,30 @@ class BubbleTeaController:
         return len(self.rejected_slo) / n if n else 0.0
 
     def prefill_busy_ms(self) -> float:
+        """End-to-end prefill service time (window occupancy per pipeline)."""
         return sum(p.duration_ms for p in self.placements)
+
+    def prefill_gpu_busy_ms(self) -> float:
+        """Aggregate *GPU* busy time the placed prefills add, summed over
+        the ``pp`` member stages — the Fig-13 utilization numerator."""
+        return sum(
+            prefill_stage_busy_ms(p.duration_ms, self.pp) * self.pp
+            for p in self.placements
+        )
+
+
+def prefill_stage_busy_ms(duration_ms: float, pp_degree: int) -> float:
+    """Busy time of *one* stage during a PP-sharded prefill.
+
+    A PP=p prefill occupies the pipeline's window for ``duration_ms``,
+    but each of the p stages computes only its own pipeline wave —
+    roughly 1/p of the work plus its activation hop — and idles while
+    the wave is elsewhere.  Counting the full duration per stage (the
+    pre-fix accounting) multiplied the busy time p×, pushing the Fig-13
+    utilization past what the bubbles can physically absorb."""
+    if pp_degree <= 1:
+        return duration_ms
+    return min(duration_ms, duration_ms / pp_degree + PIPE_HOP_MS)
 
 
 def utilization_with_prefills(
@@ -255,12 +278,16 @@ def utilization_with_prefills(
     total_gpu_ms: float,
     controller: BubbleTeaController,
 ) -> float:
-    """GPU utilization after BubbleTea fills bubbles (paper Fig 13)."""
+    """GPU utilization after BubbleTea fills bubbles (paper Fig 13).
+
+    The prefill contribution is per-stage pipeline-wave busy time
+    (``prefill_stage_busy_ms``) summed over the ``pp`` member stages —
+    *not* ``duration × pp``: a PP-sharded prefill reserves every stage's
+    window but keeps each stage busy only for its own wave."""
     if total_gpu_ms <= 0.0:
         return 0.0  # zero-length window (e.g. a horizon epoch closed
         # before its first iteration) — no time to be utilized in
-    pp_factor = controller.pp  # a placement occupies all pp stages
-    extra = controller.prefill_busy_ms() * pp_factor
+    extra = controller.prefill_gpu_busy_ms()
     return min(1.0, (sim_busy_ms + extra) / total_gpu_ms)
 
 

@@ -332,6 +332,295 @@ def _crossing_schedules(spec: PipelineSpec, topo: TopologyMatrix):
     return out
 
 
+class HorizonRunner:
+    """Stepwise horizon co-simulator — one job, one iteration per call.
+
+    ``simulate_horizon`` drives a runner to completion against the live
+    topology; the multi-job fleet (``repro.core.fleet``) interleaves N
+    runners in wall-clock order and injects a *contended* topology view
+    (``set_topology``) whenever the channel allocator re-partitions the
+    shared WAN — every engine underneath (event simulator, Atlas
+    list-scheduler, the invariant checker) then prices this job's
+    transfers at contended effective bandwidth, and the drift detector
+    compares contended delivery against the plan's assumption, which is
+    what lets one job's re-plan trigger another's (the cascade).
+
+    ``advance()`` runs exactly one iteration plus the control-plane
+    decision for it and returns an event tag:
+
+      ``"done"``       the sample budget is exhausted (partial last
+                       iteration included);
+      ``"iter"``       a plain iteration (no detector, or no deviation);
+      ``"drift"``      deviation above threshold, streak still arming;
+      ``"calm"``       deviation below threshold (streak cleared);
+      ``"cooldown"``   the detector fired inside the cooldown window;
+      ``"suppressed"`` the detector fired but the caller disallowed
+                       re-planning (the fleet's cascade guard);
+      ``"declined"``   a re-plan was evaluated and rejected (infeasible
+                       or the migration cannot amortize);
+      ``"noop"``       the re-plan kept the deployment and re-anchored
+                       the drift reference;
+      ``"migrated"``   a migration executed and a new epoch opened.
+    """
+
+    def __init__(
+        self,
+        job: JobModel,
+        fleet: Dict[str, int],
+        P: int,
+        live_topo: TopologyMatrix,
+        *,
+        n_iterations: int,
+        planned_topo: Optional[TopologyMatrix] = None,
+        control: Optional[ControlConfig] = None,
+        migration: Optional[MigrationModel] = None,
+        C: Optional[int] = None,
+        policy: str = "atlas",
+        validate: bool = False,
+    ):
+        assert live_topo.dc_names, "control plane needs a named topology"
+        planned = planned_topo if planned_topo is not None else live_topo
+        self.job = job
+        self.fleet = fleet
+        self.P = P
+        self.live_topo = live_topo
+        self.topo = live_topo  # current pricing view (fleet may contend it)
+        self.control = control
+        self.mig_model = migration if migration is not None else MigrationModel()
+        self.policy = policy
+        self.validate = validate
+
+        job0 = dataclasses.replace(job, topology=planned)
+        if C is None:
+            C = max(1, round(job0.comm_compute_ratio))
+        self.C = C
+        plan0 = best_plan(algorithm1(job0, fleet, P, C=C))
+        if not math.isfinite(plan0.total_ms):
+            raise ValueError("initial plan infeasible for this fleet/P/C")
+
+        self.epoch = self._open_epoch(0, 0.0, 0.0, plan0, planned)
+        self.epochs: List[EpochRecord] = [self.epoch]
+        self.migrations: List[MigrationEvent] = []
+        self.iteration_times: List[float] = []
+        self.detector = DriftDetector(control) if control is not None else None
+        self.stats: Dict = {
+            "iter_sims": 0,
+            "iter_reused": 0,
+            "drift_iterations": 0,
+            "drift_fires": 0,
+            "replans_declined": 0,
+            "replans_noop": 0,
+            "replans_suppressed": 0,
+            "fast_forward_gates": {},
+        }
+        self.samples_total = float(n_iterations) * self.epoch.samples_per_iteration
+        self.t = 0.0
+        self.samples = 0.0
+        self.k = 0  # completed full iterations (cooldown clock)
+        self.last_replan_k = -(10 ** 9)
+        self._cache: Dict[Tuple, float] = {}
+        self._crossing = _crossing_schedules(self.epoch.spec, self.topo)
+        # an empty budget is already exhausted — advance() must never
+        # simulate a phantom iteration for n_iterations=0
+        self._done = self.samples_total <= 1e-9
+
+    # -- plumbing ----------------------------------------------------------
+
+    def _open_epoch(self, index, t, samples, plan, assumed) -> EpochRecord:
+        spec = plan_spec(self.job, plan, self.live_topo)
+        return EpochRecord(
+            index=index,
+            start_ms=t,
+            start_sample=samples,
+            plan=plan,
+            spec=spec,
+            n_pipelines=self.C,
+            dp_replicas=plan.D * self.C,
+            assumed=assumed,
+        )
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def set_topology(self, topo: TopologyMatrix) -> None:
+        """Swap the pricing view (the fleet's contended topology).  The
+        iteration-reuse cache and the crossing-schedule set are tied to
+        the old view and are rebuilt; passing the current view is a
+        no-op so the single-job path keeps its cache across calls."""
+        if topo is self.topo:
+            return
+        self.topo = topo
+        self._cache = {}
+        self._crossing = _crossing_schedules(self.epoch.spec, topo)
+
+    def _run_iteration(self) -> float:
+        t = self.t
+        key = tuple(s.bw_at(t) for s in self._crossing)
+        hit = self._cache.get(key)
+        if hit is not None and all(
+            s.constant_over(t, t + hit) for s in self._crossing
+        ):
+            self.stats["iter_reused"] += 1
+            return hit
+        # first iteration after a re-plan never extrapolates across the
+        # migration (the epoch-boundary gate); otherwise the single-
+        # iteration fast-forward engages whenever its own gates allow
+        boundary = self.epoch.index > 0 and self.epoch.iterations == 0
+        gate = fastforward.fast_forward_gate(
+            self.epoch.spec, self.topo, epoch_boundary=boundary
+        )
+        res = simulate(
+            self.epoch.spec,
+            self.topo,
+            policy=self.policy,
+            n_pipelines=self.epoch.n_pipelines,
+            dp_replicas_for_allreduce=self.epoch.dp_replicas,
+            start_ms=t,
+            fast_forward=False if gate is not None else None,
+            validate=self.validate,
+        )
+        self.stats["iter_sims"] += 1
+        if gate is not None:
+            self.stats["fast_forward_gates"][gate] = (
+                self.stats["fast_forward_gates"].get(gate, 0) + 1
+            )
+        if all(s.constant_over(t, t + res.iteration_ms) for s in self._crossing):
+            self._cache[key] = res.iteration_ms
+        return res.iteration_ms
+
+    # -- one iteration + its control decision ------------------------------
+
+    def advance(self, *, allow_replan: bool = True) -> str:
+        assert not self._done, "horizon already exhausted"
+        iter_ms = self._run_iteration()
+        spi = self.epoch.samples_per_iteration
+        if self.samples + spi >= self.samples_total - 1e-9:
+            frac = (self.samples_total - self.samples) / spi
+            self.t += iter_ms * frac
+            self.samples = self.samples_total
+            self.epoch.iterations += 1
+            self.iteration_times.append(iter_ms)
+            self._done = True
+            return "done"
+        self.t += iter_ms
+        self.samples += spi
+        self.k += 1
+        self.epoch.iterations += 1
+        self.iteration_times.append(iter_ms)
+        if self.detector is None:
+            return "iter"
+
+        control = self.control
+        dev = link_deviation(self.topo, self.epoch.assumed, self.t - iter_ms, self.t)
+        drifted = dev > control.drift_threshold
+        self.stats["drift_iterations"] += int(drifted)
+        if not self.detector.observe(dev):
+            return "drift" if drifted else "calm"
+        self.stats["drift_fires"] += 1
+        if self.k - self.last_replan_k < control.cooldown_iterations:
+            return "cooldown"
+        if not allow_replan:
+            # the fleet's cascade guard: the fire is real but this round
+            # of the cascade is over budget — treat like a declined
+            # attempt (the cooldown clock resets, the budget pressure
+            # cannot re-fire every iteration)
+            self.last_replan_k = self.k
+            self.stats["replans_suppressed"] += 1
+            return "suppressed"
+        self.last_replan_k = self.k
+
+        t = self.t
+        window = control.snapshot_window_ms
+        snap = self.topo.snapshot(t, window_ms=iter_ms if window is None else window)
+        job_s = dataclasses.replace(self.job, topology=snap)
+        cand = best_plan(
+            algorithm1(job_s, self.fleet, self.P, C=self.C,
+                       incumbent_order=self.epoch.plan.dc_order)
+        )
+        if not math.isfinite(cand.total_ms):
+            self.stats["replans_declined"] += 1
+            return "declined"
+        cand_spec = plan_spec(self.job, cand, self.live_topo)
+        if cand_spec.stage_dc == self.epoch.spec.stage_dc and cand.D == self.epoch.plan.D:
+            # same deployment under current conditions: re-anchor the
+            # drift reference so the detector stops firing on a change
+            # the plan already tolerates best
+            self.epoch.assumed = snap
+            self.stats["replans_noop"] += 1
+            return "noop"
+
+        mig = plan_migration(
+            self.epoch.spec.stage_dc,
+            cand_spec.stage_dc,
+            param_bytes=self.job.partition_param_bytes,
+            dp_replicas_old=self.epoch.dp_replicas,
+            dp_replicas_new=cand.D * self.C,
+            topo=self.topo,
+            at_ms=t,
+            model=self.mig_model,
+        )
+        cand_res = simulate(
+            cand_spec,
+            self.topo,
+            policy=self.policy,
+            n_pipelines=self.C,
+            dp_replicas_for_allreduce=cand.D * self.C,
+            start_ms=t + mig.duration_ms,
+        )
+        inc_per_sample = iter_ms / spi
+        cand_per_sample = cand_res.iteration_ms / (cand.D * self.C * self.job.microbatches)
+        remaining = self.samples_total - self.samples
+        gain = remaining * (inc_per_sample - cand_per_sample)
+        if gain <= mig.duration_ms + control.min_gain_ms:
+            self.stats["replans_declined"] += 1
+            return "declined"
+
+        mig.projected_gain_ms = gain
+        mig.remaining_samples = remaining
+        self.migrations.append(mig)
+        self.epoch.end_ms = t
+        self.t = t + mig.duration_ms
+        self.epoch = self._open_epoch(
+            self.epoch.index + 1, self.t, self.samples, cand, snap
+        )
+        self.epochs.append(self.epoch)
+        self.detector.reset()
+        self._cache = {}
+        self._crossing = _crossing_schedules(self.epoch.spec, self.topo)
+        return "migrated"
+
+    def defer_epoch_start(self, new_t_ms: float) -> None:
+        """Admission barrier hook for the fleet: extend the migration
+        stall that just opened the current epoch so the epoch starts at
+        ``new_t_ms`` — a job migrating *onto* channels other jobs hold
+        in-flight windows on waits for those windows to drain before its
+        first contended iteration.  Epoch/migration tiling is preserved
+        (the wait is part of the stall; ``validate.check_horizon`` still
+        holds) and the migration's transfers stay inside the window."""
+        assert self.migrations and self.epoch.iterations == 0, (
+            "defer_epoch_start only applies to a freshly migrated epoch"
+        )
+        assert abs(self.epoch.start_ms - self.t) < 1e-9
+        if new_t_ms <= self.t:
+            return
+        self.migrations[-1].duration_ms += new_t_ms - self.t
+        self.t = new_t_ms
+        self.epoch.start_ms = new_t_ms
+
+    def result(self) -> HorizonResult:
+        self.epoch.end_ms = self.t
+        return HorizonResult(
+            total_ms=self.t,
+            samples=self.samples,
+            policy=self.policy,
+            epochs=self.epochs,
+            migrations=self.migrations,
+            iteration_times=self.iteration_times,
+            stats=self.stats,
+        )
+
+
 def simulate_horizon(
     job: JobModel,
     fleet: Dict[str, int],
@@ -356,176 +645,22 @@ def simulate_horizon(
     same call is both arms of the reactive-vs-static comparison.  ``C``
     (pipelines per DP-cell) is pinned across re-plans: re-sizing a cell
     is a full re-shard, not a migration; D is re-picked freely.
+
+    This is the single-job driver of ``HorizonRunner``; the multi-job
+    fleet (``repro.core.fleet.simulate_fleet``) interleaves several
+    runners over one shared WAN and is differentially identical to this
+    function when the fleet has exactly one job.
     """
-    assert live_topo.dc_names, "control plane needs a named topology"
-    planned = planned_topo if planned_topo is not None else live_topo
-    mig_model = migration if migration is not None else MigrationModel()
-
-    job0 = dataclasses.replace(job, topology=planned)
-    if C is None:
-        C = max(1, round(job0.comm_compute_ratio))
-    plan0 = best_plan(algorithm1(job0, fleet, P, C=C))
-    if not math.isfinite(plan0.total_ms):
-        raise ValueError("initial plan infeasible for this fleet/P/C")
-
-    def open_epoch(index, t, samples, plan, assumed):
-        spec = plan_spec(job, plan, live_topo)
-        return EpochRecord(
-            index=index,
-            start_ms=t,
-            start_sample=samples,
-            plan=plan,
-            spec=spec,
-            n_pipelines=C,
-            dp_replicas=plan.D * C,
-            assumed=assumed,
-        )
-
-    epoch = open_epoch(0, 0.0, 0.0, plan0, planned)
-    epochs = [epoch]
-    migrations: List[MigrationEvent] = []
-    iteration_times: List[float] = []
-    detector = DriftDetector(control) if control is not None else None
-    stats = {
-        "iter_sims": 0,
-        "iter_reused": 0,
-        "drift_iterations": 0,
-        "drift_fires": 0,
-        "replans_declined": 0,
-        "replans_noop": 0,
-        "fast_forward_gates": {},
-    }
-
-    samples_total = float(n_iterations) * epoch.samples_per_iteration
-    t = 0.0
-    samples = 0.0
-    k = 0  # completed full iterations (cooldown clock)
-    last_replan_k = -(10 ** 9)
-    cache: Dict[Tuple, float] = {}
-    crossing = _crossing_schedules(epoch.spec, live_topo)
-
-    def run_iteration() -> float:
-        key = tuple(s.bw_at(t) for s in crossing)
-        hit = cache.get(key)
-        if hit is not None and all(s.constant_over(t, t + hit) for s in crossing):
-            stats["iter_reused"] += 1
-            return hit
-        # first iteration after a re-plan never extrapolates across the
-        # migration (the epoch-boundary gate); otherwise the single-
-        # iteration fast-forward engages whenever its own gates allow
-        boundary = epoch.index > 0 and epoch.iterations == 0
-        gate = fastforward.fast_forward_gate(
-            epoch.spec, live_topo, epoch_boundary=boundary
-        )
-        res = simulate(
-            epoch.spec,
-            live_topo,
-            policy=policy,
-            n_pipelines=epoch.n_pipelines,
-            dp_replicas_for_allreduce=epoch.dp_replicas,
-            start_ms=t,
-            fast_forward=False if gate is not None else None,
-            validate=validate,
-        )
-        stats["iter_sims"] += 1
-        if gate is not None:
-            stats["fast_forward_gates"][gate] = (
-                stats["fast_forward_gates"].get(gate, 0) + 1
-            )
-        if all(s.constant_over(t, t + res.iteration_ms) for s in crossing):
-            cache[key] = res.iteration_ms
-        return res.iteration_ms
-
-    while samples < samples_total - 1e-9:
-        iter_ms = run_iteration()
-        spi = epoch.samples_per_iteration
-        if samples + spi >= samples_total - 1e-9:
-            frac = (samples_total - samples) / spi
-            t += iter_ms * frac
-            samples = samples_total
-            epoch.iterations += 1
-            iteration_times.append(iter_ms)
-            break
-        t += iter_ms
-        samples += spi
-        k += 1
-        epoch.iterations += 1
-        iteration_times.append(iter_ms)
-        if detector is None:
-            continue
-
-        dev = link_deviation(live_topo, epoch.assumed, t - iter_ms, t)
-        drifted = dev > control.drift_threshold
-        stats["drift_iterations"] += int(drifted)
-        if not detector.observe(dev):
-            continue
-        stats["drift_fires"] += 1
-        if k - last_replan_k < control.cooldown_iterations:
-            continue
-        last_replan_k = k
-
-        window = control.snapshot_window_ms
-        snap = live_topo.snapshot(t, window_ms=iter_ms if window is None else window)
-        job_s = dataclasses.replace(job, topology=snap)
-        cand = best_plan(
-            algorithm1(job_s, fleet, P, C=C, incumbent_order=epoch.plan.dc_order)
-        )
-        if not math.isfinite(cand.total_ms):
-            stats["replans_declined"] += 1
-            continue
-        cand_spec = plan_spec(job, cand, live_topo)
-        if cand_spec.stage_dc == epoch.spec.stage_dc and cand.D == epoch.plan.D:
-            # same deployment under current conditions: re-anchor the
-            # drift reference so the detector stops firing on a change
-            # the plan already tolerates best
-            epoch.assumed = snap
-            stats["replans_noop"] += 1
-            continue
-
-        mig = plan_migration(
-            epoch.spec.stage_dc,
-            cand_spec.stage_dc,
-            param_bytes=job.partition_param_bytes,
-            dp_replicas_old=epoch.dp_replicas,
-            dp_replicas_new=cand.D * C,
-            topo=live_topo,
-            at_ms=t,
-            model=mig_model,
-        )
-        cand_res = simulate(
-            cand_spec,
-            live_topo,
-            policy=policy,
-            n_pipelines=C,
-            dp_replicas_for_allreduce=cand.D * C,
-            start_ms=t + mig.duration_ms,
-        )
-        inc_per_sample = iter_ms / spi
-        cand_per_sample = cand_res.iteration_ms / (cand.D * C * job.microbatches)
-        remaining = samples_total - samples
-        gain = remaining * (inc_per_sample - cand_per_sample)
-        if gain <= mig.duration_ms + control.min_gain_ms:
-            stats["replans_declined"] += 1
-            continue
-
-        mig.projected_gain_ms = gain
-        mig.remaining_samples = remaining
-        migrations.append(mig)
-        epoch.end_ms = t
-        t += mig.duration_ms
-        epoch = open_epoch(epoch.index + 1, t, samples, cand, snap)
-        epochs.append(epoch)
-        detector.reset()
-        cache = {}
-        crossing = _crossing_schedules(epoch.spec, live_topo)
-
-    epoch.end_ms = t
-    return HorizonResult(
-        total_ms=t,
-        samples=samples,
+    runner = HorizonRunner(
+        job, fleet, P, live_topo,
+        n_iterations=n_iterations,
+        planned_topo=planned_topo,
+        control=control,
+        migration=migration,
+        C=C,
         policy=policy,
-        epochs=epochs,
-        migrations=migrations,
-        iteration_times=iteration_times,
-        stats=stats,
+        validate=validate,
     )
+    while not runner.done:
+        runner.advance()
+    return runner.result()

@@ -1,0 +1,541 @@
+"""Multi-job fleet sharing one WAN — contention-priced channels and
+cross-job re-plan cascades.
+
+Everything before this module simulated one training job owning every
+WAN link.  The paper's premise — workload-aware sharing of *scarce*
+inter-DC bandwidth — only bites when several jobs contend for the same
+directed channels: job A's migration or re-plan changes the bandwidth
+job B observes, so B's drift detector may fire in response.  This
+module co-simulates N jobs (each its own ``JobModel``, GPU fleet slice,
+placement and optional ``ControlConfig``) over one shared
+``TopologyMatrix``:
+
+  * **Channel allocator** — per *directed* DC pair, each job's demand is
+    its per-iteration channel bits over its planned iteration time, as a
+    rate against the pair's guaranteed (worst-segment) capacity.
+    *Temporal sharing first*: when the demands fit the channel together,
+    transfers can serialize into each other's idle windows (the same
+    §4.2 principle Atlas applies within a job) and every job keeps full
+    rate.  Only when the channel is oversubscribed do transfers have to
+    overlap, and the allocator falls back to a *weighted max-min fair
+    share* — each job's schedule view is scaled to its granted fraction
+    (``TopologyMatrix.with_rate_multipliers``), so every engine
+    underneath (event simulator, Atlas list-scheduler,
+    ``validate.check_schedule``, the horizon runner) prices transfers at
+    contended effective bandwidth with no engine changes.
+    ``sharing="fair"`` keeps the naive strawman — contenders always
+    split the channel by weight even when serialization would have fit —
+    as the bench's comparison arm.
+
+  * **Reservation ledger + windowed residual** — every iteration
+    records the average rate granted on each pair it crosses
+    (``ChannelReservation``).  Grants are *residual-aware*: a window may
+    never reserve more than what the open holds of other jobs leave
+    free.  Fleet windows are created in nondecreasing start order (the
+    scheduler always advances the job with the smallest wall clock), so
+    by induction the ledger satisfies the fleet invariant *pointwise*:
+    aggregate reserved rate per directed channel never exceeds the
+    schedule's capacity at any instant (``validate.check_fleet``).  In
+    steady state every open hold sits at or below its fair-share
+    target, so the residual never bites and grants equal targets; it
+    exists for generation transitions (a job migrating or finishing
+    mid-window of another).
+
+  * **Migration admission barrier** — a job migrating *onto* pairs
+    where other jobs still have in-flight windows would find only the
+    leftover residual there.  Instead its migration stall is extended
+    until those holds drain (``HorizonRunner.defer_epoch_start`` —
+    epoch/migration tiling is preserved), after which its fair-share
+    target is guaranteed available.  Migration stall windows themselves
+    are outside the steady-state ledger; their per-pair serialization
+    and live-schedule pricing are asserted per job by
+    ``validate.check_horizon``.
+
+  * **Cascade + convergence guard** — contention enters each job's
+    drift detector through the contended topology view (delivered mean
+    bandwidth is the scaled schedule's), so a re-plan by one job can
+    push another over its drift threshold and trigger a re-plan chain.
+    The fleet bounds each chain: at most ``max_cascade_replans``
+    migrations per *cascade epoch*; further fires are suppressed
+    (``HorizonRunner.advance(allow_replan=False)``) until every active
+    job has completed an iteration without migrating, which closes the
+    epoch and resets the budget.  Jobs are processed in deterministic
+    wall-clock order (ties broken by job list order), so cascades are
+    reproducible.
+
+A single-job fleet degenerates exactly: the lone demander on every
+channel keeps ``mult == 1``, ``with_rate_multipliers`` returns the live
+topology by identity, and the run is differentially identical to
+``control.simulate_horizon`` (tested in ``tests/test_fleet.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+from repro.core.control import (
+    ControlConfig,
+    HorizonResult,
+    HorizonRunner,
+    MigrationModel,
+)
+from repro.core.dc_selection import JobModel
+from repro.core.simulator import iteration_wan_bits, simulate
+from repro.core.topology import Pair, TopologyMatrix
+
+SHARINGS = ("temporal", "fair")
+# pricing floor for a residual-squeezed window, as a fraction of the
+# channel's capacity (see fleet.simulate_fleet's grant logic)
+MIN_GRANT_FRAC = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetJob:
+    """One training job of the fleet: its workload model, its slice of
+    the GPU fleet (per-DC counts), partition count and control knobs.
+    ``weight`` is the job's fair-share weight on oversubscribed
+    channels (capacity splits proportionally to weight)."""
+
+    name: str
+    job: JobModel
+    gpus: Dict[str, int]
+    P: int
+    n_iterations: int
+    C: Optional[int] = None
+    policy: str = "atlas"
+    weight: float = 1.0
+    planned_topo: Optional[TopologyMatrix] = None
+    control: Optional[ControlConfig] = None
+
+    def __post_init__(self):
+        assert self.weight > 0.0, "fair-share weight must be positive"
+        assert self.n_iterations >= 1, self.n_iterations
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Fleet-level knobs.
+
+    ``sharing="temporal"`` is the contention-aware policy (serialize
+    first, fair-share only under oversubscription); ``"fair"`` is the
+    always-fair-share strawman the bench compares against.
+    ``max_cascade_replans`` is the convergence guard: migrations allowed
+    per cascade epoch before further drift fires are suppressed."""
+
+    sharing: str = "temporal"
+    max_cascade_replans: int = 4
+    migration: MigrationModel = dataclasses.field(default_factory=MigrationModel)
+
+    def __post_init__(self):
+        assert self.sharing in SHARINGS, self.sharing
+        assert self.max_cascade_replans >= 1
+
+
+@dataclasses.dataclass
+class ChannelReservation:
+    """Average rate one job holds on one directed channel over one
+    iteration window — the unit of the fleet capacity invariant."""
+
+    job: str
+    pair: Pair
+    t0_ms: float
+    t1_ms: float
+    rate_gbps: float  # allocated average rate over the window
+    mult: float  # rate multiplier the job's schedule view was scaled by
+
+
+@dataclasses.dataclass
+class FleetResult:
+    jobs: Dict[str, HorizonResult]
+    reservations: List[ChannelReservation]
+    total_ms: float  # wall time the last job finished
+    stats: Dict
+
+    @property
+    def replans(self) -> int:
+        return sum(hr.replans for hr in self.jobs.values())
+
+
+# ---------------------------------------------------------------------------
+# demand + fair-share targets
+# ---------------------------------------------------------------------------
+
+
+def pair_demand_rates(spec, n_pipelines: int, iteration_ms: float) -> Dict[Pair, float]:
+    """Average rate (Gbit/s) one job needs on each directed WAN pair:
+    its per-iteration channel bits (``simulator.iteration_wan_bits`` —
+    the same count every engine reports in ``stats["wan_bits"]``) over
+    its iteration time.  Bits/ms = 1e6 · Gbit/s."""
+    assert iteration_ms > 0
+    bits = iteration_wan_bits(spec, n_pipelines)
+    return {p: b / iteration_ms / 1e6 for p, b in bits.items()}
+
+
+def _weighted_max_min(entries: Sequence[Tuple[str, float, float]]) -> Dict[str, float]:
+    """Weighted max-min fair shares of one unit of capacity.
+
+    ``entries`` are ``(key, demand_fraction, weight)``.  Water-fill:
+    jobs whose demand sits below their weighted share are satisfied
+    exactly and their slack is redistributed; the rest split the
+    remaining capacity by weight.  Deterministic in input order."""
+    alloc: Dict[str, float] = {}
+    active = list(entries)
+    remaining = 1.0
+    while active:
+        wsum = sum(w for _k, _d, w in active)
+        sat = [(k, d, w) for k, d, w in active if d <= remaining * w / wsum + 1e-15]
+        if not sat:
+            for k, _d, w in active:
+                alloc[k] = remaining * w / wsum
+            return alloc
+        for k, d, _w in sat:
+            alloc[k] = d
+            remaining -= d
+        done = {k for k, _d, _w in sat}
+        active = [e for e in active if e[0] not in done]
+    return alloc
+
+
+def channel_targets(
+    demands: Mapping[str, Mapping[Pair, float]],
+    weights: Mapping[str, float],
+    topo: TopologyMatrix,
+    *,
+    sharing: str = "temporal",
+    order: Optional[Sequence[str]] = None,
+) -> Dict[str, Dict[Pair, Tuple[float, float, Optional[float]]]]:
+    """Steady-state allocation targets for every demanded channel.
+
+    Per job and directed pair, returns ``(capped_need, target,
+    fixed_mult)``: the demand rate clamped at the pair's guaranteed
+    (worst-segment) capacity, the average rate the job is entitled to
+    reserve, and — in the naive ``"fair"`` mode — the rate multiplier
+    its transfers are pinned to regardless of demand (``None`` in
+    temporal mode, where the multiplier follows the granted rate).
+
+    *Temporal sharing first*: a lone demander, or demanders whose
+    capped needs fit the channel together, keep ``target ==
+    capped_need`` (their transfer windows serialize; nobody slows
+    down).  An oversubscribed channel splits by weighted max-min.  By
+    construction the targets on one pair sum to at most its
+    worst-segment capacity, which is what makes the fleet invariant
+    hold pointwise even while the live schedule fluctuates above that
+    floor."""
+    assert sharing in SHARINGS, sharing
+    names = [n for n in (order if order is not None else demands) if n in demands]
+    out: Dict[str, Dict[Pair, Tuple[float, float, Optional[float]]]] = {
+        n: {} for n in names
+    }
+    pairs = sorted({p for n in names for p in demands[n]})
+    for pair in pairs:
+        cap = topo.effective_bw_gbps(*pair)
+        entries = [
+            (n, min(1.0, demands[n][pair] / cap), weights.get(n, 1.0))
+            for n in names
+            if pair in demands[n]
+        ]
+        fits = sum(d for _n, d, _w in entries) <= 1.0 + 1e-12
+        if len(entries) == 1 or (sharing == "temporal" and fits):
+            for n, d, _w in entries:
+                out[n][pair] = (d * cap, d * cap, None)
+            continue
+        if sharing == "fair":
+            # the strawman: overlapping flows always split the channel
+            # by weight — transfers run at the share rate even when
+            # serialization would have fit everyone at full speed
+            wsum = sum(w for _n, _d, w in entries)
+            for n, d, w in entries:
+                share = w / wsum
+                out[n][pair] = (d * cap, min(d, share) * cap, share)
+            continue
+        shares = _weighted_max_min(entries)
+        for n, d, _w in entries:
+            out[n][pair] = (d * cap, min(d, shares[n]) * cap, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the fleet co-simulator
+# ---------------------------------------------------------------------------
+
+
+def simulate_fleet(
+    jobs: Sequence[FleetJob],
+    live_topo: TopologyMatrix,
+    *,
+    config: Optional[FleetConfig] = None,
+    validate: bool = False,
+) -> FleetResult:
+    """Co-simulate every job of the fleet over the shared live WAN.
+
+    Jobs advance one iteration at a time in wall-clock order (earliest
+    current time first, list order on ties).  Before each iteration the
+    job's grant on every pair it crosses is ``min(target, residual)`` —
+    its fair-share target, clipped by whatever the other jobs' open
+    windows leave free — and its runner is handed the matching contended
+    topology view.  Targets are recomputed whenever the demand set
+    changes (a migration re-placed a job, or a job finished and released
+    its channels).  Drift fires that would exceed the cascade budget are
+    suppressed until the cascade epoch closes (see module docstring).
+    """
+    cfg = config if config is not None else FleetConfig()
+    names = [j.name for j in jobs]
+    assert len(set(names)) == len(names), "fleet job names must be unique"
+    runners: Dict[str, HorizonRunner] = {
+        j.name: HorizonRunner(
+            j.job,
+            j.gpus,
+            j.P,
+            live_topo,
+            n_iterations=j.n_iterations,
+            planned_topo=j.planned_topo,
+            control=j.control,
+            migration=cfg.migration,
+            C=j.C,
+            policy=j.policy,
+            validate=validate,
+        )
+        for j in jobs
+    }
+    weights = {j.name: j.weight for j in jobs}
+    reservations: List[ChannelReservation] = []
+    # per-pair index of *open* holds: closed windows are pruned once the
+    # fleet's minimum wall clock passes them (every future window starts
+    # at or after that clock, so a dead hold can never matter again) —
+    # the full ledger for check_fleet lives in `reservations`
+    pair_res: Dict[Pair, Deque[ChannelReservation]] = {}
+    stats: Dict = {
+        "sharing": cfg.sharing,
+        "generations": 0,
+        "cascade_replans_max": cfg.max_cascade_replans,
+        "cascade_epochs": 0,
+        "cascade_suppressed": 0,
+        "admission_wait_ms": 0.0,
+        "floor_grants": 0,
+        "demand_probe_sims": 0,
+        "per_job": {
+            n: {"throttled_iterations": 0, "throttled_ms": 0.0} for n in names
+        },
+    }
+
+    # per job, chronological demand segments (start, end, rates): the
+    # job's channel demand is active only over the wall-time span that
+    # generates it — job A's post-migration demand must not throttle a
+    # window of job B that starts before A's migration even begins (A
+    # can lag the fleet in wall time).  A migration's new demand claims
+    # from the migration *start* (anticipatory: stall included), so no
+    # window opened during the stall can re-occupy the migrant's share
+    INF = float("inf")
+    segments: Dict[str, List[Tuple[float, float, Dict[Pair, float]]]] = {
+        n: [] for n in names
+    }
+    caps: Dict[Pair, float] = {}
+
+    def uncontended_iter_ms(r: HorizonRunner) -> float:
+        """One probe simulation of the runner's current epoch against
+        the *live* (uncontended) WAN at its current wall offset — the
+        full-rate iteration time its channel demand is measured over.
+        Contention-independent, so the allocation cannot oscillate with
+        its own throttling; one probe per job per epoch."""
+        stats["demand_probe_sims"] += 1
+        return simulate(
+            r.epoch.spec,
+            live_topo,
+            policy=r.policy,
+            n_pipelines=r.epoch.n_pipelines,
+            dp_replicas_for_allreduce=r.epoch.dp_replicas,
+            start_ms=r.t,
+        ).iteration_ms
+
+    def open_segment(name: str, start_ms: Optional[float] = None) -> None:
+        """Open the job's current-epoch demand segment at ``start_ms``
+        (default: the epoch start).  A migrating job passes its
+        migration *start*: the claim is anticipatory — windows other
+        jobs open during the stall already count the migrant as a
+        demander on its new pairs and leave its fair share free."""
+        r = runners[name]
+        stats["generations"] += 1
+        rates = pair_demand_rates(
+            r.epoch.spec, r.epoch.n_pipelines, uncontended_iter_ms(r)
+        )
+        at = r.epoch.start_ms if start_ms is None else start_ms
+        segments[name].append((at, INF, rates))
+        for pair in rates:
+            if pair not in caps:
+                caps[pair] = live_topo.effective_bw_gbps(*pair)
+
+    def close_segment(name: str, t: float) -> None:
+        if segments[name]:
+            s0, _s1, rates = segments[name][-1]
+            segments[name][-1] = (s0, t, rates)
+
+    def demand_at(t: float) -> Dict[str, Dict[Pair, float]]:
+        """The demand rates of every job whose epoch is active at ``t``."""
+        out: Dict[str, Dict[Pair, float]] = {}
+        for n in names:
+            for s0, s1, rates in reversed(segments[n]):
+                if s0 <= t + 1e-9 and t < s1 - 1e-9:
+                    out[n] = rates
+                    break
+        return out
+
+    def residual(name: str, pair: Pair, t: float) -> float:
+        """Capacity the other jobs' open holds leave free on ``pair``
+        from ``t`` on.  Per other job, the largest rate among its
+        reservations still open at ``t`` bounds its pointwise hold.
+        ``t`` is the fleet's minimum wall clock (grants run for the
+        earliest job), so heads that ended by ``t`` are dead for every
+        future window and are dropped — the scan stays O(open holds),
+        not O(horizon)."""
+        chain = pair_res.get(pair)
+        if chain is None:
+            return caps[pair]
+        while chain and chain[0].t1_ms <= t + 1e-9:
+            chain.popleft()
+        held: Dict[str, float] = {}
+        for res in chain:
+            if res.job != name and res.t1_ms > t + 1e-9:
+                held[res.job] = max(held.get(res.job, 0.0), res.rate_gbps)
+        return caps[pair] - sum(held.values())
+
+    def grants(name: str, t: float) -> Tuple[Dict[Pair, float], Dict[Pair, float]]:
+        """(mults, reserved rates) for one window of ``name`` at ``t``:
+        fair-share targets over the demanders active at ``t``, clipped
+        per pair by what other jobs' open holds leave free."""
+        targets = channel_targets(
+            demand_at(t), weights, live_topo, sharing=cfg.sharing, order=names
+        )
+        mults: Dict[Pair, float] = {}
+        reserved: Dict[Pair, float] = {}
+        for pair, (capped, target, fixed_mult) in targets.get(name, {}).items():
+            allowed = min(target, max(residual(name, pair, t), 0.0))
+            reserved[pair] = allowed
+            if fixed_mult is not None and allowed >= target - 1e-12:
+                # naive fair share, steady state: the rate is pinned to
+                # the weight share regardless of demand (average usage
+                # is then exactly `target`, which the ledger reserved)
+                mults[pair] = fixed_mult
+            elif allowed >= capped - 1e-12:
+                mults[pair] = 1.0  # temporal sharing: full-rate transfers
+            else:
+                # residual-squeezed window (either mode): the transfers
+                # themselves are slowed to the granted average so the
+                # ledger never understates what the engines priced.
+                # The anticipatory demand segments + admission barrier
+                # keep `allowed >= target` in every constructed case;
+                # the floor (1% of capacity, counted in stats) bounds
+                # the stretch of the one theoretical corner — a job
+                # lagging behind the migrant's claim while straddling
+                # its barrier — instead of letting a ~zero residual
+                # price a window at effectively no bandwidth
+                if allowed < MIN_GRANT_FRAC * caps[pair]:
+                    stats["floor_grants"] += 1
+                mults[pair] = max(allowed / caps[pair], MIN_GRANT_FRAC)
+        return mults, reserved
+
+    for n in names:
+        open_segment(n)
+
+    topos: Dict[str, TopologyMatrix] = {}
+    topo_keys: Dict[str, Tuple] = {}
+    cascade_replans = 0
+    quiesced: Set[str] = set()
+    while True:
+        active = [n for n in names if not runners[n].done]
+        if not active:
+            break
+        name = min(active, key=lambda n: (runners[n].t, names.index(n)))
+        r = runners[name]
+        mults, reserved = grants(name, r.t)
+        key = tuple(sorted(mults.items()))
+        if topo_keys.get(name) != key:
+            # identity-preserving: an unchanged grant keeps the runner's
+            # topology object, its crossing set and its reuse cache
+            topos[name] = live_topo.with_rate_multipliers(mults)
+            topo_keys[name] = key
+        r.set_topology(topos[name])
+        t0 = r.t
+        throttled = any(m < 1.0 for m in mults.values())
+        ev = r.advance(allow_replan=cascade_replans < cfg.max_cascade_replans)
+        iter_ms = r.iteration_times[-1]
+        t_end = r.t if ev == "done" else t0 + iter_ms
+        if t_end > t0:
+            for pair in sorted(reserved):
+                rate = reserved[pair]
+                chain = pair_res.setdefault(pair, deque())
+                prev = chain[-1] if chain else None
+                if (
+                    prev is not None
+                    and prev.job == name
+                    and prev.rate_gbps == rate
+                    and abs(prev.t1_ms - t0) < 1e-9
+                ):
+                    prev.t1_ms = t_end  # coalesce back-to-back windows
+                else:
+                    res = ChannelReservation(
+                        name, pair, t0, t_end, rate, mults.get(pair, 1.0)
+                    )
+                    reservations.append(res)
+                    chain.append(res)
+        if throttled:
+            pj = stats["per_job"][name]
+            pj["throttled_iterations"] += 1
+            pj["throttled_ms"] += t_end - t0
+
+        if ev == "migrated":
+            cascade_replans += 1
+            quiesced = set()
+            mig_start = r.migrations[-1].at_ms
+            close_segment(name, mig_start)
+            # admission barrier: entering pairs where other jobs still
+            # have open windows, wait for those holds to drain — the
+            # extended stall keeps the entrant's fair-share target
+            # available at its first contended iteration
+            new_pairs = pair_demand_rates(r.epoch.spec, r.epoch.n_pipelines, 1.0)
+            t_bar = r.t
+            for pair in new_pairs:
+                for res in pair_res.get(pair, ()):
+                    if res.job != name and res.t1_ms > t_bar:
+                        t_bar = res.t1_ms
+            if t_bar > r.t:
+                stats["admission_wait_ms"] += t_bar - r.t
+                r.defer_epoch_start(t_bar)
+            # the new demand claims from the migration *start* — no
+            # unclaimed gap for windows other jobs open during the stall
+            open_segment(name, start_ms=mig_start)
+            continue
+        if ev == "suppressed":
+            stats["cascade_suppressed"] += 1
+        if ev == "done":
+            close_segment(name, r.t)  # the job released its channels
+        quiesced.add(name)
+        still_active = {n for n in names if not runners[n].done}
+        if cascade_replans and still_active <= quiesced:
+            # every active job completed an iteration without migrating:
+            # the cascade epoch closes, the re-plan budget resets
+            cascade_replans = 0
+            quiesced = set()
+            stats["cascade_epochs"] += 1
+
+    results = {n: runners[n].result() for n in names}
+    stats["replans_total"] = sum(hr.replans for hr in results.values())
+    for n in names:
+        stats["per_job"][n].update(
+            total_ms=results[n].total_ms,
+            samples=results[n].samples,
+            replans=results[n].replans,
+            migration_ms=results[n].migration_ms,
+            replans_suppressed=results[n].stats.get("replans_suppressed", 0),
+        )
+    out = FleetResult(
+        jobs=results,
+        reservations=reservations,
+        total_ms=max((hr.total_ms for hr in results.values()), default=0.0),
+        stats=stats,
+    )
+    if validate:
+        from repro.core import validate as _validate
+
+        _validate.check_fleet(out, live_topo)
+    return out

@@ -133,6 +133,25 @@ def boundary_schedule(topo, spec: PipelineSpec, s_from: int, s_to: int):
     return get(spec.stage_dc[s_from], spec.stage_dc[s_to])
 
 
+def iteration_wan_bits(spec: PipelineSpec, n_pipelines: int) -> Dict[Tuple[int, int], float]:
+    """Bits one iteration puts on each *directed* WAN DC pair (all
+    ``n_pipelines`` pipelines, both directions).  Analytic and exact for
+    every engine path — event replay, Atlas precompute, fast-forward —
+    because every microbatch crosses every boundary exactly once per
+    direction.  Recorded in ``SimResult.stats["wan_bits"]`` and used by
+    the fleet allocator (``repro.core.fleet.pair_demand_rates``) as the
+    per-iteration channel demand."""
+    out: Dict[Tuple[int, int], float] = {}
+    per_boundary = spec.microbatches * spec.act_bytes * 8.0 * n_pipelines
+    for s in range(spec.num_stages - 1):
+        a, b = spec.stage_dc[s], spec.stage_dc[s + 1]
+        if a == b:
+            continue
+        out[(a, b)] = out.get((a, b), 0.0) + per_boundary
+        out[(b, a)] = out.get((b, a), 0.0) + per_boundary
+    return out
+
+
 def has_time_varying_wan(spec: PipelineSpec, topo) -> bool:
     """Does any stage boundary of ``spec`` cross a WAN pair whose
     bandwidth schedule is non-flat (in either direction)?  Gates the
@@ -447,6 +466,8 @@ def _finalize(
     iteration (including the all-reduce span in the denominator)."""
     ar = wan.allreduce_ms(spec.stage_param_bytes, dp_replicas, topo.intra_bw_gbps)
     total = pp_end + ar
+    if stats is not None:
+        stats["wan_bits"] = iteration_wan_bits(spec, n_pipelines)
     bubbles: Dict[Tuple[int, int], List[Tuple[float, float]]] = {}
     busy_sum = 0.0
     for g, ivs in busy.items():

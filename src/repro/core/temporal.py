@@ -74,6 +74,21 @@ class Schedule:
     num_stages: int
     num_pipelines: int
 
+    def wan_bits(self, spec) -> Dict[Tuple[int, int], float]:
+        """Bits the schedule's transfers put on each *directed* WAN DC
+        pair — measured from the emitted transfers, the differential
+        reference for the analytic per-iteration demand the fleet
+        allocator uses (``simulator`` stats ``wan_bits``)."""
+        out: Dict[Tuple[int, int], float] = {}
+        for tr in self.transfers:
+            b = tr.boundary
+            dc_a, dc_b = spec.stage_dc[b], spec.stage_dc[b + 1]
+            if dc_a == dc_b:
+                continue
+            src, dst = (dc_a, dc_b) if tr.direction == "act" else (dc_b, dc_a)
+            out[(src, dst)] = out.get((src, dst), 0.0) + spec.act_bytes * 8.0
+        return out
+
 
 def is_wan_boundary(spec, topo, b: int) -> bool:
     return spec.stage_dc[b] != spec.stage_dc[b + 1]

@@ -137,6 +137,44 @@ class TopologyMatrix:
         }
         return self.with_bandwidth_schedules(scheds)
 
+    def with_rate_multipliers(
+        self, mults: Mapping[Pair, float]
+    ) -> "TopologyMatrix":
+        """The *contended* view of this WAN: every directed pair in
+        ``mults`` delivers ``mult ×`` its nominal rate — what one job of
+        a fleet observes after the channel allocator (``repro.core
+        .fleet``) grants it a fraction of each shared channel.  Latencies
+        and pairs absent from ``mults`` are unchanged; an empty/identity
+        ``mults`` returns ``self`` so the uncontended path keeps object
+        identity (a single-job fleet must be differentially identical to
+        ``control.simulate_horizon`` on the live topology).
+
+        Every directed WAN link (and every scheduled direction) is
+        materialized explicitly in the copy: the reverse-pair fallback of
+        ``links``/``bw_schedules`` would otherwise alias a scaled entry
+        onto its unscaled reverse direction."""
+        eff = {p: m for p, m in mults.items() if m != 1.0}
+        if not eff:
+            return self
+        assert all(m > 0.0 for m in eff.values()), eff
+        links: Dict[Pair, wan.Link] = {}
+        scheds: Dict[Pair, wan.BandwidthSchedule] = {}
+        for a, b in self.wan_pairs():
+            m = eff.get((a, b), 1.0)
+            link = self.link(a, b)
+            links[(a, b)] = (
+                link if m == 1.0 else wan.Link(link.latency_ms, link.bw_gbps * m)
+            )
+            sched = self.bandwidth_schedule(a, b)
+            if sched is not None:
+                scheds[(a, b)] = sched.scaled(m)
+        return dataclasses.replace(
+            self,
+            links=links,
+            bw_schedules=scheds,
+            name=(self.name or "topology") + "+contended",
+        )
+
     def snapshot(self, t_ms: float, window_ms: float = 0.0) -> "TopologyMatrix":
         """The WAN as *observed* at wall time ``t_ms``: a static matrix
         whose link bandwidths are what each schedule actually delivers —

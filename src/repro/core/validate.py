@@ -390,6 +390,63 @@ def check_horizon(hr, live_topo, *, check_epoch_schedules: bool = True) -> None:
                           pair, (s0, e0), (s1, e1))
 
 
+def check_fleet(fr, live_topo, *, check_jobs: bool = True) -> None:
+    """Assert the multi-job fleet invariants on a ``fleet.FleetResult``.
+
+      * per job: epochs and migration windows tile its horizon exactly
+        (``check_horizon`` without per-epoch schedule re-derivation —
+        fleet epochs ran on *contended* topology views that change with
+        the allocation generation, so re-pricing them against the live
+        matrix would be checking different physics);
+      * the fleet capacity invariant: on every directed channel, the
+        aggregate rate the allocator reserved never exceeds the
+        schedule's capacity at any instant.  Reservations are
+        piecewise-constant, so the check walks the elementary intervals
+        of their union and compares the rate sum against the channel's
+        *lowest* rate in force anywhere in the interval
+        (``wan.BandwidthSchedule.min_bw_over``) — a pointwise bound,
+        not an integral one.
+    """
+    if check_jobs:
+        for hr in fr.jobs.values():
+            check_horizon(hr, live_topo, check_epoch_schedules=False)
+
+    by_pair: Dict[Tuple[int, int], List] = {}
+    for r in fr.reservations:
+        if r.t1_ms < r.t0_ms - EPS:
+            _fail("reservation window inverted", r)
+        if r.rate_gbps < -EPS:
+            _fail("negative reservation rate", r)
+        by_pair.setdefault(tuple(r.pair), []).append(r)
+
+    get_sched = getattr(live_topo, "bandwidth_schedule", None)
+    for pair, rs in sorted(by_pair.items()):
+        link = live_topo.link(*pair)
+        sched = get_sched(*pair) if get_sched is not None else None
+        # sweep over the sorted window endpoints (+rate at t0, −rate at
+        # t1): one O(R log R) pass maintains the pointwise rate sum —
+        # re-scanning all reservations per elementary interval would be
+        # O(R²) on a hot channel
+        events = sorted(
+            [(r.t0_ms, r.rate_gbps) for r in rs]
+            + [(r.t1_ms, -r.rate_gbps) for r in rs]
+        )
+        total = 0.0
+        for i, (x0, delta) in enumerate(events):
+            total += delta
+            x1 = events[i + 1][0] if i + 1 < len(events) else x0
+            if x1 - x0 <= EPS or total <= EPS:
+                continue
+            cap = (
+                sched.min_bw_over(x0, x1) if sched is not None else link.bw_gbps
+            )
+            if total > cap * (1.0 + 1e-9) + EPS:
+                _fail(
+                    "aggregate channel reservations exceed capacity",
+                    pair, (x0, x1), total, cap,
+                )
+
+
 def check_policy(spec, topo, policy: str, n_pipelines: int = 1):
     """Simulate one policy with validation on; returns the SimResult."""
     from repro.core import simulator

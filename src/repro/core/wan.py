@@ -143,6 +143,35 @@ class BandwidthSchedule:
     def max_bw_gbps(self) -> float:
         return max(self.bw_gbps)
 
+    def min_bw_over(self, t0_ms: float, t1_ms: float) -> float:
+        """Lowest rate in force anywhere on ``[t0_ms, t1_ms)`` — the
+        pointwise capacity floor the fleet invariant checker compares
+        aggregate channel reservations against."""
+        t0 = max(0.0, t0_ms)
+        assert t1_ms > t0, (t0_ms, t1_ms)
+        lo = float("inf")
+        for bw, _s0, s1 in self._segments_from(t0):
+            lo = min(lo, bw)
+            if s1 >= t1_ms:
+                break
+        return lo
+
+    def scaled(self, mult: float) -> "BandwidthSchedule":
+        """This schedule with every segment's rate multiplied by
+        ``mult`` — the *contended* view of a shared channel: a job
+        granted a fair-share fraction of the link sees the same shape
+        (segments, period) at ``mult ×`` the rate.  ``mult == 1``
+        returns ``self`` so uncontended paths keep object identity
+        (engine memo keys and schedule-dedup rely on it)."""
+        if mult == 1.0:
+            return self
+        assert mult > 0.0, mult
+        return BandwidthSchedule(
+            self.times_ms,
+            tuple(bw * mult for bw in self.bw_gbps),
+            self.period_ms,
+        )
+
     def transfer_ms(self, nbytes: float, start_ms: float, rate_mult: float = 1.0) -> float:
         """Serialization time of ``nbytes`` starting at ``start_ms``,
         integrating the bits across segment boundaries.  ``rate_mult``

@@ -207,7 +207,8 @@ def build_lowerable(arch: str, shape: str, multi_pod: bool, boundary: str = "str
 
 
 def wan_projection(dcn_bytes: float, topo,
-                   drift: Optional[str] = None) -> Dict[str, Any]:
+                   drift: Optional[str] = None,
+                   fleet_jobs: int = 0) -> Dict[str, Any]:
     """Project the measured inter-pod DCN bytes onto a WAN topology: the
     per-iteration transfer time if the pod boundary ran over the given
     (possibly heterogeneous) WAN instead of the datacenter DCN.  Uses the
@@ -218,7 +219,14 @@ def wan_projection(dcn_bytes: float, topo,
     boundary transfer priced through a sustained 10x degradation of the
     pair it rides (what a static plan keeps paying) vs. re-routed onto
     the best alternative pair (what ``repro.core.control`` migrates to
-    once the drift detector fires)."""
+    once the drift detector fires).
+
+    ``fleet_jobs=N`` (N ≥ 2) adds the multi-job sharing projection
+    (``repro.core.fleet``): N jobs' boundary transfers contending for
+    the same pair.  Contention-aware temporal sharing serializes them —
+    job k's transfer completes at k·S, mean (N+1)/2·S — while the naive
+    always-fair-share model runs every transfer at 1/N rate so *all* of
+    them complete at N·S."""
     from repro.core import wan as _wan
     from repro.core.topology import TopologyMatrix
 
@@ -260,13 +268,29 @@ def wan_projection(dcn_bytes: float, topo,
             "reactive_s": reactive_s,  # re-planned onto the best alternative
             "reactive_speedup": static_s / reactive_s if reactive_s else None,
         }
+    if fleet_jobs >= 2:
+        n = fleet_jobs
+        per_job_s = best.transfer_ms(dcn_bytes) / 1e3
+        out["fleet"] = {
+            "scenario": f"{n} jobs sharing the boundary pair",
+            "per_job_s": per_job_s,  # one transfer alone at full rate
+            # temporal sharing: transfers serialize — the k-th completes
+            # at k·S; mean job waits (N+1)/2·S, the last N·S
+            "temporal_mean_s": (n + 1) / 2.0 * per_job_s,
+            "temporal_worst_s": n * per_job_s,
+            # naive always-fair-share: every transfer at 1/N rate, all
+            # complete together at N·S — no job ever finishes early
+            "fair_share_mean_s": n * per_job_s,
+            "temporal_mean_speedup": 2.0 * n / (n + 1),
+        }
     return out
 
 
 def run_one(arch: str, shape: str, mesh_name: str, boundary: str = "striped",
             fsdp: Optional[bool] = None, relayout: bool = False,
             wan_preset: Optional[str] = None,
-            wan_drift: Optional[str] = None) -> Dict[str, Any]:
+            wan_drift: Optional[str] = None,
+            wan_fleet: int = 0) -> Dict[str, Any]:
     multi_pod = mesh_name == "multi"
     ok, why = shp.shape_supported(arch, shape)
     if not ok:
@@ -337,7 +361,8 @@ def run_one(arch: str, shape: str, mesh_name: str, boundary: str = "striped",
         "active_params": n_active,
     }
     if wan_preset:
-        result["wan"] = wan_projection(coll["dcn"], wan_preset, drift=wan_drift)
+        result["wan"] = wan_projection(coll["dcn"], wan_preset, drift=wan_drift,
+                                       fleet_jobs=wan_fleet)
     return result
 
 
@@ -360,6 +385,11 @@ def main():
                          "projection (static plan riding a 10x-degraded "
                          "boundary pair vs re-planned onto the best "
                          "alternative — repro.core.control)")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="with --wan-preset: add the multi-job sharing "
+                         "projection — N jobs' boundary transfers on one "
+                         "pair, contention-aware temporal sharing vs naive "
+                         "always-fair-share (repro.core.fleet)")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--out", default=OUT_DIR)
     args = ap.parse_args()
@@ -383,7 +413,8 @@ def main():
                                   fsdp=False if args.no_fsdp else None,
                                   relayout=args.relayout,
                                   wan_preset=args.wan_preset,
-                                  wan_drift=args.wan_drift)
+                                  wan_drift=args.wan_drift,
+                                  wan_fleet=args.fleet)
                 except Exception as e:
                     res = {"arch": arch, "shape": shape, "mesh": mesh_name,
                            "boundary": args.boundary, "status": "error",

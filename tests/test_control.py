@@ -423,6 +423,19 @@ def test_migration_cost_can_veto_a_switch():
     assert r.total_ms == pytest.approx(s.total_ms, rel=1e-12)
 
 
+def test_zero_iteration_horizon_simulates_nothing():
+    """n_iterations=0: the budget is exhausted before the first
+    iteration — no phantom simulation, no recorded iteration."""
+    world = _world()
+    r = control.simulate_horizon(
+        _job(), {"a": 4, "b": 4, "c": 4}, P=10, live_topo=world,
+        n_iterations=0, C=1)
+    assert r.total_ms == 0.0
+    assert r.iteration_times == []
+    assert r.epochs[0].iterations == 0
+    assert r.stats["iter_sims"] == 0 and r.stats["iter_reused"] == 0
+
+
 def test_snapshot_observes_live_rates():
     world = _world()
     live = _outage_live(world, start_ms=1_000.0, end_ms=5_000.0)

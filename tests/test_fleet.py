@@ -1,0 +1,339 @@
+"""Multi-job fleet sharing one WAN (ISSUE 5) — contention-priced
+channels, cross-job re-plan cascades, and the fleet capacity invariant.
+
+Nets:
+  * allocator unit behaviour: temporal sharing first (fitting demands
+    keep full rate), weighted max-min under oversubscription, the naive
+    always-fair-share strawman;
+  * two jobs forced onto one pair see fair-share rates end-to-end
+    (contended iterations ~2x the solo iteration);
+  * a single-job fleet is differentially identical to
+    ``control.simulate_horizon`` — same totals, same iteration times,
+    same engine stats — with and without the control plane;
+  * the cascade: job A's outage-triggered migration lands on a pair job
+    B crosses, B's drift detector fires on the contention and B
+    re-plans away; a thrash-inducing config terminates under the
+    fleet's convergence guard (bounded re-plans per cascade epoch,
+    suppressions recorded);
+  * ``validate.check_fleet`` holds on every run above and rejects a
+    corrupted reservation (negative test);
+  * the analytic per-iteration channel demand used by the allocator
+    matches the bits the engines actually put on each directed pair
+    (``simulator`` ``stats["wan_bits"]`` / ``Schedule.wan_bits``).
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import control, fleet, temporal
+from repro.core import topology as tp
+from repro.core import validate as V
+from repro.core import wan
+from repro.core.dc_selection import JobModel
+from repro.core.simulator import simulate
+
+
+def _world(n=3, names=("a", "b", "c")):
+    lat = [[0.0 if i == j else 20.0 for j in range(n)] for i in range(n)]
+    return tp.TopologyMatrix.from_latency(lat, multi_tcp=True, dc_names=names)
+
+
+def _job(**kw):
+    kw.setdefault("t_fwd_ms", 10.0)
+    kw.setdefault("act_bytes", 1e7)
+    kw.setdefault("partition_param_bytes", 2e8)
+    kw.setdefault("microbatches", 24)
+    return JobModel(**kw)
+
+
+# ------------------------------------------------------------- allocator
+
+
+def test_weighted_max_min_water_fill():
+    # equal weights, symmetric overload: the full unit splits evenly
+    assert fleet._weighted_max_min([("a", 0.9, 1.0), ("b", 0.9, 1.0)]) == {
+        "a": 0.5, "b": 0.5}
+    # a small demand is satisfied exactly, slack goes to the big one
+    alloc = fleet._weighted_max_min([("a", 0.9, 1.0), ("b", 0.2, 1.0)])
+    assert alloc["b"] == 0.2
+    assert alloc["a"] == pytest.approx(0.8)
+    # weights split the contested capacity proportionally
+    alloc = fleet._weighted_max_min([("a", 1.0, 2.0), ("b", 1.0, 1.0)])
+    assert alloc["a"] == pytest.approx(2.0 / 3.0)
+    assert alloc["b"] == pytest.approx(1.0 / 3.0)
+
+
+def test_channel_targets_temporal_first_then_fair_share():
+    topo = _world(2, ("a", "b"))
+    cap = topo.effective_bw_gbps(0, 1)
+    # fitting demands: both keep full rate (targets = needs)
+    dem = {"A": {(0, 1): 0.4 * cap}, "B": {(0, 1): 0.5 * cap}}
+    tg = fleet.channel_targets(dem, {}, topo)
+    assert tg["A"][(0, 1)] == (0.4 * cap, 0.4 * cap, None)
+    assert tg["B"][(0, 1)] == (0.5 * cap, 0.5 * cap, None)
+    # oversubscribed: weighted max-min (the whole channel is granted)
+    dem = {"A": {(0, 1): 0.9 * cap}, "B": {(0, 1): 0.9 * cap}}
+    tg = fleet.channel_targets(dem, {}, topo)
+    assert tg["A"][(0, 1)][1] == pytest.approx(0.5 * cap)
+    assert tg["B"][(0, 1)][1] == pytest.approx(0.5 * cap)
+    # the naive strawman pins the rate multiplier even when demand fits
+    dem = {"A": {(0, 1): 0.4 * cap}, "B": {(0, 1): 0.2 * cap}}
+    tg = fleet.channel_targets(dem, {}, topo, sharing="fair")
+    assert tg["A"][(0, 1)][2] == pytest.approx(0.5)
+    assert tg["B"][(0, 1)][2] == pytest.approx(0.5)
+    # a lone demander is never throttled, in either mode
+    tg = fleet.channel_targets({"A": {(0, 1): 2.0 * cap}}, {}, topo, sharing="fair")
+    assert tg["A"][(0, 1)] == (cap, cap, None)
+
+
+def test_fleet_job_validates_weight_and_budget():
+    duo, gpus = _world(2, ("a", "b")), {"a": 2, "b": 2}
+    with pytest.raises(AssertionError):
+        fleet.FleetJob("A", _job(), gpus, P=4, n_iterations=8, weight=0.0)
+    with pytest.raises(AssertionError):
+        fleet.FleetJob("A", _job(), gpus, P=4, n_iterations=8, weight=-1.0)
+    with pytest.raises(AssertionError):
+        fleet.FleetJob("A", _job(), gpus, P=4, n_iterations=0)
+
+
+def test_demand_matches_engine_wan_bits():
+    """The allocator's analytic per-iteration demand must count exactly
+    the bits the engines put on each directed pair."""
+    topo = _world()
+    spec = control.plan_spec(
+        _job(),
+        control.best_plan(control.algorithm1(
+            dataclasses.replace(_job(), topology=topo),
+            {"a": 2, "b": 2, "c": 2}, 6, C=1)),
+        topo,
+    )
+    res = simulate(spec, topo, policy="atlas", n_pipelines=2)
+    sched = temporal.atlas_schedule(spec, topo, 2)
+    rates = fleet.pair_demand_rates(spec, 2, 1000.0)
+    bits = {p: r * 1000.0 * 1e6 for p, r in rates.items()}
+    assert bits == res.stats["wan_bits"]
+    assert bits == sched.wan_bits(spec)
+
+
+# ------------------------------------------- contention, end to end
+
+
+def _duo():
+    return _world(2, ("a", "b")), {"a": 2, "b": 2}
+
+
+def test_two_jobs_on_one_pair_see_fair_share_rates():
+    """Both jobs' pipelines cross the single (a, b) pair with demands
+    that cannot serialize: each must run at ~half rate, and the ledger
+    must respect the pair's capacity throughout."""
+    duo, gpus = _duo()
+    job = _job(act_bytes=2e8)
+    solo = control.simulate_horizon(job, gpus, P=4, live_topo=duo,
+                                    n_iterations=8, C=1)
+    fj = lambda n: fleet.FleetJob(n, job, gpus, P=4, n_iterations=8, C=1)  # noqa: E731
+    fr = fleet.simulate_fleet([fj("A"), fj("B")], duo, validate=True)
+    for name in ("A", "B"):
+        hr = fr.jobs[name]
+        # the shared channel is the bottleneck: contended iterations run
+        # well above solo (→ 2x as transfers dominate)
+        assert hr.iteration_times[0] > 1.5 * solo.iteration_times[0]
+        assert fr.stats["per_job"][name]["throttled_iterations"] == 8
+    # reservations exist on both directions and stay within capacity
+    pairs = {r.pair for r in fr.reservations}
+    assert (0, 1) in pairs and (1, 0) in pairs
+    assert all(r.mult < 1.0 for r in fr.reservations)
+    V.check_fleet(fr, duo)
+
+
+def test_temporal_sharing_beats_naive_fair_share():
+    """Demands that fit the channel together: temporal sharing keeps
+    both jobs at solo speed; the always-fair-share strawman halves both
+    jobs' rates anyway and loses end-to-end."""
+    duo, gpus = _duo()
+    job = _job(act_bytes=2e7)
+    solo = control.simulate_horizon(job, gpus, P=4, live_topo=duo,
+                                    n_iterations=8, C=1)
+    fj = lambda n: fleet.FleetJob(n, job, gpus, P=4, n_iterations=8, C=1)  # noqa: E731
+    tmp = fleet.simulate_fleet([fj("A"), fj("B")], duo, validate=True)
+    fair = fleet.simulate_fleet([fj("A"), fj("B")], duo,
+                                config=fleet.FleetConfig(sharing="fair"),
+                                validate=True)
+    assert tmp.total_ms == solo.total_ms  # nobody throttled
+    assert all(v["throttled_iterations"] == 0
+               for v in tmp.stats["per_job"].values())
+    assert fair.total_ms > tmp.total_ms
+    assert fair.jobs["A"].total_ms > tmp.jobs["A"].total_ms
+    assert fair.jobs["B"].total_ms > tmp.jobs["B"].total_ms
+
+
+def test_single_job_fleet_identical_to_simulate_horizon():
+    """The degenerate fleet must be differentially identical to the
+    single-job horizon simulator — static and reactive arms alike."""
+    world = _world()
+    bw = world.link(0, 1).bw_gbps
+    live = world.with_bandwidth_schedules({
+        (0, 1): wan.BandwidthSchedule.outage(bw, 10_000.0, 200_000.0, bw / 10.0),
+        (1, 0): wan.BandwidthSchedule.flat(bw),
+    })
+    job = _job()
+    gpus = {"a": 4, "b": 4, "c": 4}
+    for ctrl in (None, control.ControlConfig()):
+        hr = control.simulate_horizon(
+            job, gpus, P=10, live_topo=live, planned_topo=world,
+            n_iterations=40, C=1, control=ctrl)
+        fr = fleet.simulate_fleet(
+            [fleet.FleetJob("solo", job, gpus, P=10, n_iterations=40, C=1,
+                            planned_topo=world, control=ctrl)],
+            live, validate=True)
+        got = fr.jobs["solo"]
+        assert got.total_ms == hr.total_ms
+        assert got.iteration_times == hr.iteration_times
+        assert got.replans == hr.replans
+        assert len(got.migrations) == len(hr.migrations)
+        for a, b in zip(got.migrations, hr.migrations):
+            assert a.at_ms == b.at_ms and a.duration_ms == b.duration_ms
+        assert got.stats["iter_sims"] == hr.stats["iter_sims"]
+        assert got.stats["iter_reused"] == hr.stats["iter_reused"]
+        # a lone job never contends: every view is the live topology
+        assert all(res.mult == 1.0 for res in fr.reservations)
+    V.check_horizon(fr.jobs["solo"], live)
+
+
+# ----------------------------------------------------------- the cascade
+
+
+def _cascade_fleet(**cfg_kw):
+    """Job A spans a,b,c; job B spans a,c,d.  An unplanned outage on
+    a->b pushes A onto the (a,c) pair B crosses — the contention then
+    pushes B over its drift threshold."""
+    world = _world(4, ("a", "b", "c", "d"))
+    bw = world.link(0, 1).bw_gbps
+    live = world.with_bandwidth_schedules({
+        (0, 1): wan.BandwidthSchedule.outage(bw, 20_000.0, 1e9, bw / 10.0),
+    })
+    job = _job(act_bytes=1.2e8)
+    fjA = fleet.FleetJob("A", job, {"a": 2, "b": 2, "c": 2}, P=6,
+                         n_iterations=60, C=1, planned_topo=world,
+                         control=control.ControlConfig())
+    fjB = fleet.FleetJob("B", job, {"a": 2, "c": 2, "d": 2}, P=6,
+                         n_iterations=60, C=1, planned_topo=world,
+                         control=control.ControlConfig())
+    cfg = fleet.FleetConfig(**cfg_kw) if cfg_kw else None
+    return world, live, fleet.simulate_fleet([fjA, fjB], live, config=cfg,
+                                             validate=True)
+
+
+def test_cascade_a_migrates_b_drifts_b_replans():
+    world, live, fr = _cascade_fleet()
+    A, B = fr.jobs["A"], fr.jobs["B"]
+    # A re-planned around the outage (off the a->b pair)...
+    assert A.replans == 1
+    a1 = set(zip(A.epochs[1].spec.stage_dc, A.epochs[1].spec.stage_dc[1:]))
+    assert (0, 1) not in a1
+    # ... onto (a, c), which B was crossing: B drifted on the contention
+    # and re-planned away from the now-shared pair
+    assert (0, 2) in a1
+    assert B.replans == 1
+    assert B.migrations[0].at_ms > A.migrations[0].at_ms
+    b1 = set(zip(B.epochs[1].spec.stage_dc, B.epochs[1].spec.stage_dc[1:]))
+    assert (0, 2) not in b1
+    assert fr.stats["per_job"]["B"]["throttled_iterations"] > 0
+    # contention cleared after the cascade: both finish, invariant holds
+    assert A.samples == B.samples
+    V.check_fleet(fr, live)
+
+
+def test_cascade_guard_bounds_replan_thrash():
+    """A hair-trigger control config (zero-ish threshold, no cooldown,
+    hysteresis 1, negative migration margin) makes two jobs chase each
+    other between the pairs of a 3-DC WAN; the fleet guard caps
+    migrations per cascade epoch, records suppressions, and the horizon
+    still terminates with both sample budgets met."""
+    world = _world()
+    gpus = {"a": 2, "b": 2, "c": 2}
+    job = _job(act_bytes=2e8)
+    trigger = control.ControlConfig(
+        drift_threshold=1e-6, hysteresis=1, cooldown_iterations=0,
+        min_gain_ms=-1e15)  # negative margin: any candidate "pays off"
+    fj = lambda n: fleet.FleetJob(n, job, gpus, P=4, n_iterations=10, C=1,  # noqa: E731
+                                  control=trigger)
+    guarded = fleet.simulate_fleet(
+        [fj("A"), fj("B")], world,
+        config=fleet.FleetConfig(max_cascade_replans=1), validate=True)
+    assert guarded.stats["cascade_suppressed"] > 0
+    spi = {n: guarded.jobs[n].epochs[0].samples_per_iteration for n in ("A", "B")}
+    for name in ("A", "B"):
+        hr = guarded.jobs[name]
+        assert hr.samples == 10 * spi[name]  # the budget completed
+        assert hr.stats["replans_suppressed"] > 0 or hr.replans <= 1
+    # with a large budget the same config thrashes far more — the cap
+    # is what bounded the guarded run
+    thrash = fleet.simulate_fleet(
+        [fj("A"), fj("B")], world,
+        config=fleet.FleetConfig(max_cascade_replans=100), validate=True)
+    assert thrash.stats["cascade_suppressed"] == 0
+    assert thrash.replans > guarded.replans
+
+
+# -------------------------------------------------- invariant (negative)
+
+
+def test_check_fleet_rejects_oversubscribed_reservation():
+    duo, gpus = _duo()
+    job = _job(act_bytes=2e8)
+    fj = lambda n: fleet.FleetJob(n, job, gpus, P=4, n_iterations=6, C=1)  # noqa: E731
+    fr = fleet.simulate_fleet([fj("A"), fj("B")], duo)
+    V.check_fleet(fr, duo)  # honest ledger passes
+    # claim one window ran at 10x its grant: the aggregate on that
+    # channel now exceeds the capacity in force
+    victim = next(r for r in fr.reservations if r.mult < 1.0)
+    victim.rate_gbps *= 10.0
+    with pytest.raises(V.InvariantViolation):
+        V.check_fleet(fr, duo)
+
+
+def test_check_fleet_rejects_inverted_window():
+    duo, gpus = _duo()
+    fr = fleet.simulate_fleet(
+        [fleet.FleetJob("A", _job(), gpus, P=4, n_iterations=2, C=1)], duo)
+    fr.reservations[0].t1_ms = fr.reservations[0].t0_ms - 1.0
+    with pytest.raises(V.InvariantViolation):
+        V.check_fleet(fr, duo)
+
+
+# ------------------------------------------- contended topology views
+
+
+def test_with_rate_multipliers_scales_one_direction_only():
+    base = tp.azure_testbed()
+    bw = base.link(0, 1).bw_gbps
+    sched = wan.BandwidthSchedule.step(bw, bw / 2.0, 100.0)
+    topo = base.with_bandwidth_schedules({(0, 1): sched})
+    c = topo.with_rate_multipliers({(0, 1): 0.25})
+    assert c.link(0, 1).bw_gbps == pytest.approx(0.25 * bw)
+    assert c.link(1, 0).bw_gbps == pytest.approx(bw)
+    # the reverse direction kept the *unscaled* schedule, even though in
+    # the source topology it was served by reverse-pair fallback
+    assert topo.bandwidth_schedule(1, 0) is sched
+    assert c.bandwidth_schedule(0, 1).bw_gbps == tuple(
+        0.25 * b for b in sched.bw_gbps)
+    assert c.bandwidth_schedule(1, 0).bw_gbps == sched.bw_gbps
+    # identity short-circuits
+    assert topo.with_rate_multipliers({}) is topo
+    assert topo.with_rate_multipliers({(0, 1): 1.0}) is topo
+    assert sched.scaled(1.0) is sched
+
+
+def test_contended_schedule_prices_transfers_slower():
+    """With the channel dominating the steady-state slot, halving the
+    granted rate must lengthen the iteration in every engine."""
+    spec_topo = _world(2, ("a", "b"))
+    job = _job(act_bytes=2e8)  # ser ≈ 320 ms ≫ the 30 ms compute slot
+    plan = control.best_plan(control.algorithm1(
+        dataclasses.replace(job, topology=spec_topo), {"a": 2, "b": 2}, 4, C=1))
+    spec = control.plan_spec(job, plan, spec_topo)
+    contended = spec_topo.with_rate_multipliers({(0, 1): 0.5, (1, 0): 0.5})
+    for policy in ("varuna", "atlas"):
+        full = simulate(spec, spec_topo, policy=policy, n_pipelines=1)
+        half = simulate(spec, contended, policy=policy, n_pipelines=1)
+        assert half.iteration_ms > full.iteration_ms * 1.5

@@ -125,6 +125,76 @@ def test_trace_schedule_deterministic_and_near_mean():
     assert abs(a.bw_gbps[0] - link.bw_gbps) < 0.2 * link.bw_gbps
 
 
+# ---------------------------------- period_ms cycle-boundary exactness
+# (ISSUE 5 audit: the drift detector reads mean_bw_gbps/constant_over at
+# arbitrary wall offsets, so windows straddling a period_ms cycle
+# boundary must integrate exactly — no wraparound miscount.  The audit
+# found the segment walker correct; these tests pin the boundary cases.)
+
+
+def _periodic():
+    # [0, 10): 1 Gbps, [10, 24): 3 Gbps, wrapping every 24 ms
+    return wan.BandwidthSchedule((0.0, 10.0), (1.0, 3.0), period_ms=24.0)
+
+
+def test_mean_bw_window_straddling_cycle_boundary():
+    s = _periodic()
+    # [20, 28): 4 ms of the 3-Gbps tail + 4 ms of the next cycle's head
+    assert s.mean_bw_gbps(20.0, 28.0) == pytest.approx((4 * 3.0 + 4 * 1.0) / 8)
+    # windows pinned exactly to the cycle edges
+    assert s.mean_bw_gbps(10.0, 24.0) == pytest.approx(3.0)  # ends at edge
+    assert s.mean_bw_gbps(24.0, 34.0) == pytest.approx(1.0)  # starts at edge
+    # a whole cycle from any offset integrates to the cycle mean
+    cycle_mean = (10 * 1.0 + 14 * 3.0) / 24.0
+    for t0 in (0.0, 7.0, 10.0, 23.0, 24.0, 55.5):
+        assert s.mean_bw_gbps(t0, t0 + 24.0) == pytest.approx(cycle_mean)
+    # many cycles out, the same window reads the same mean
+    assert s.mean_bw_gbps(7 * 24.0 + 20.0, 7 * 24.0 + 28.0) == pytest.approx(
+        s.mean_bw_gbps(20.0, 28.0))
+
+
+def test_constant_over_across_cycle_boundary():
+    s = _periodic()
+    # constant inside one segment of a later cycle, boundary-exact ends
+    assert s.constant_over(24.0, 34.0)  # exactly the wrapped [0, 10) seg
+    assert s.constant_over(34.0, 48.0)  # exactly the wrapped [10, 24) seg
+    assert not s.constant_over(20.0, 25.0)  # straddles the cycle edge
+    assert not s.constant_over(33.0, 35.0)  # straddles a segment edge
+    # a flat periodic profile is constant over any window
+    flat = wan.BandwidthSchedule((0.0,), (2.0,), period_ms=None)
+    assert flat.constant_over(0.0, 1e9)
+
+
+def test_bits_sent_and_transfer_across_cycle_boundary():
+    s = _periodic()
+    # [20, 28): 4 ms @ 3 Gbps + 4 ms @ 1 Gbps = 16e6 bits on the wire
+    assert s.bits_sent(1e12, 20.0, 28.0) == pytest.approx(16.0e6)
+    # a transfer sized to finish exactly at the cycle edge does so
+    nbytes = (4 * 3.0e6) / 8.0  # the 3-Gbps tail of the first cycle
+    assert s.transfer_ms(nbytes, 20.0) == pytest.approx(4.0)
+    # one more bit rides the next cycle's 1-Gbps head
+    assert s.transfer_ms(nbytes + 1.0 / 8.0, 20.0) == pytest.approx(
+        4.0 + 1.0 / 1e6)
+    # split at the cycle edge == unsplit (preemption differential):
+    # both legs finish at the same absolute wall time
+    big = 40e6 / 8.0
+    whole = s.transfer_ms(big, 20.0)
+    sent, rem = s.preempt(big, 20.0, 24.0)
+    assert sent == pytest.approx(12e6 / 8.0)  # the 3-Gbps tail's bits
+    assert 24.0 + s.transfer_ms(rem, 24.0) == pytest.approx(20.0 + whole)
+
+
+def test_min_bw_over_windows():
+    s = _periodic()
+    assert s.min_bw_over(10.0, 24.0) == 3.0  # inside the fast segment
+    assert s.min_bw_over(20.0, 28.0) == 1.0  # straddles into the slow head
+    assert s.min_bw_over(24.0, 34.0) == 1.0
+    step = wan.BandwidthSchedule.step(5.0, 2.0, 100.0)
+    assert step.min_bw_over(0.0, 50.0) == 5.0
+    assert step.min_bw_over(0.0, 200.0) == 2.0
+    assert step.min_bw_over(150.0, 1e9) == 2.0
+
+
 # -------------------------------------------------- topology attachment
 
 
