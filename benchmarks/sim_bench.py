@@ -15,8 +15,12 @@ config runs the reactive control plane (``repro.core.control``) over a
 "fleet" config co-simulates two jobs sharing one WAN
 (``repro.core.fleet``) — contention-aware temporal sharing vs the naive
 always-fair-share strawman, plus the cross-job re-plan cascade, all
-under ``validate.check_fleet``.  Writes ``BENCH_sim.json`` so CI and
-future PRs can diff perf artifacts (fields documented in ROADMAP.md).
+under ``validate.check_fleet``.  The "bubbletea" config closes the
+Fig-13 loop at fleet scale: a seeded production-traffic sweep (offered
+load × sharing policy × solo/contended arm) of prefills riding training
+bubbles with WAN-priced KV handoff — records utilization-vs-load points
+and per-tier acceptance.  Writes ``BENCH_sim.json`` so CI and future
+PRs can diff perf artifacts (fields documented in ROADMAP.md).
 
   PYTHONPATH=src python -m benchmarks.sim_bench                 # full sweep
   PYTHONPATH=src python -m benchmarks.sim_bench --quick         # CI smoke
@@ -56,8 +60,11 @@ SPEEDUP_TARGET = 10.0  # large config, new engine vs pre-refactor reference
 # a multi-hundred-iteration horizon at O(segments + re-plans) full sims;
 # "fleet" guards the multi-job co-simulator — the per-window channel
 # allocator and reservation ledger must stay O(jobs · pairs), and the
-# per-job iteration-reuse caches must survive contended topology views
-CEILING_CONFIGS = ("large", "trace", "replan", "fleet")
+# per-job iteration-reuse caches must survive contended topology views;
+# "bubbletea" guards the prefill-as-a-service closed loop — thousands of
+# seeded arrivals admitted against live bubble windows with WAN-priced
+# KV quotes must stay O(live windows + reservations) per request
+CEILING_CONFIGS = ("large", "trace", "replan", "fleet", "bubbletea")
 
 GPT_B = dict(hidden=8192, seq_len=6144, micro_batch=1, layers_per_stage=1,
              layer_params=1.2e9)
@@ -324,6 +331,94 @@ def _bench_fleet() -> Dict:
     }
 
 
+def _bench_bubbletea() -> Dict:
+    """Fig-13 at fleet scale: utilization vs offered prefill load.
+
+    Geometry (see tests/test_prefill_fleet.py): host job A spans DCs
+    a,b,c; contender B squeezes the a<->b channel; decode lives in c so
+    KV handoffs from a/b pipelines ride the contended WAN.  Sweep knobs:
+
+      * ``RATES`` — offered load in req/s (diurnal + MMPP-2 burst
+        modulated, seeded → identical traces across arms);
+      * sharing policy — contention-aware ``temporal`` vs naive ``fair``;
+      * arm — ``solo`` (A alone, uncontended) vs ``duo`` (A + B).
+
+    Each point records training-only vs with-prefills utilization and
+    per-tier acceptance; every run passes ``validate.check_fleet``.
+    ``closed_loop`` asserts the paper's economics end to end: under
+    contention the host's iterations stretch, bubble supply grows, and
+    utilization-with-prefills *exceeds* the uncontended value at the
+    same offered load (for the saturating rates)."""
+    import time as _time
+
+    from repro.core import fleet as fl
+    from repro.core import topology as tp3
+    from repro.core.bubbletea import (ArrivalProcess, InferenceModelSpec,
+                                      PromptMix)
+    from repro.core.dc_selection import JobModel
+
+    t0 = _time.perf_counter()
+    RATES = (10.0, 25.0, 50.0)
+    SATURATING = (25.0, 50.0)
+
+    lat = [[0.0 if i == j else 20.0 for j in range(3)] for i in range(3)]
+    world = tp3.TopologyMatrix.from_latency(lat, multi_tcp=True,
+                                            dc_names=("a", "b", "c"))
+    job = JobModel(t_fwd_ms=10.0, act_bytes=6e7, partition_param_bytes=2e8,
+                   microbatches=24)
+    model = InferenceModelSpec("llama3-8b", num_params=8e9,
+                               kv_bytes_per_token=16384.0)
+    mix = PromptMix(lengths=(512, 1024, 2048), weights=(0.25, 0.65, 0.10))
+    tier_slo = {"gold": 1_200.0, "best_effort": 8_000.0}
+    host = lambda: fl.FleetJob("A", job, {"a": 2, "b": 2, "c": 2}, P=6,  # noqa: E731
+                               n_iterations=8, C=1)
+    cont = lambda: fl.FleetJob("B", job, {"a": 2, "b": 2}, P=4,  # noqa: E731
+                               n_iterations=8, C=1)
+
+    points = []
+    closed_loop = True
+    for rate in RATES:
+        arr = ArrivalProcess(rate_per_s=rate, horizon_ms=60_000.0, seed=7,
+                             diurnal_amplitude=0.3, diurnal_period_ms=30_000.0,
+                             burst_rate_mult=4.0, mean_on_ms=1_000.0,
+                             mean_off_ms=4_000.0)
+        svc = fl.PrefillService(host_job="A", arrivals=arr.generate(
+            mix, tiers={"gold": 0.3, "best_effort": 0.7}),
+            model=model, decode_dc="c", tiers=tier_slo)
+        for sharing in ("temporal", "fair"):
+            cfgf = fl.FleetConfig(sharing=sharing)
+            util_pf = {}
+            for arm, jobs in (("solo", [host()]), ("duo", [host(), cont()])):
+                fr = fl.simulate_fleet(jobs, world, config=cfgf, prefill=svc,
+                                       validate=True)
+                p = fr.stats["prefill"]
+                util_pf[arm] = p["utilization_with_prefills"]
+                points.append({
+                    "rate_per_s": rate,
+                    "sharing": sharing,
+                    "arm": arm,
+                    "offered": p["requests_offered"],
+                    "acceptance": round(p["acceptance"], 4),
+                    "utilization_train": round(p["utilization_train"], 4),
+                    "utilization_with_prefills":
+                        round(p["utilization_with_prefills"], 4),
+                    "kv_wan_transfers": p["kv_wan_transfers"],
+                    "per_tier": {
+                        t: {"acceptance": round(v["acceptance"], 4),
+                            "ttft_p99": round(v["ttft_p99"], 1)}
+                        for t, v in p["per_tier"].items()
+                    },
+                })
+            if rate in SATURATING and util_pf["duo"] <= util_pf["solo"]:
+                closed_loop = False
+    return {
+        "wall_ms": round((_time.perf_counter() - t0) * 1e3, 3),
+        "points": points,
+        "closed_loop": closed_loop,
+        "bubbletea_validate_ok": True,  # every run above passed check_fleet
+    }
+
+
 def _bench_placement_search() -> Dict:
     """Branch-and-bound vs exhaustive Algorithm-1 order search."""
     import random
@@ -424,6 +519,14 @@ def run_bench(quick: bool = False, budget_s: Optional[float] = 180.0,
           f"invariant_ok={fleet['fleet_validate_ok']}",
           file=sys.stderr, flush=True)
 
+    bubbletea = _bench_bubbletea()
+    speedups["bubbletea"] = {"new_total_ms": bubbletea["wall_ms"]}
+    print(f"  bubbletea: wall={bubbletea['wall_ms']:.0f}ms "
+          f"points={len(bubbletea['points'])} "
+          f"closed_loop={bubbletea['closed_loop']} "
+          f"invariant_ok={bubbletea['bubbletea_validate_ok']}",
+          file=sys.stderr, flush=True)
+
     validate_ok = None
     if validate_large:
         cfg = configs["large"]
@@ -452,6 +555,7 @@ def run_bench(quick: bool = False, budget_s: Optional[float] = 180.0,
         "placement_search": _bench_placement_search(),
         "replan": replan,
         "fleet": fleet,
+        "bubbletea": bubbletea,
         "large_validate_ok": validate_ok,
         "quick": quick,
     }

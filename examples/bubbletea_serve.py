@@ -6,10 +6,11 @@
    be placed there (it used to be mis-recorded as one giant bubble per
    GPU) — the utilization figures below are computed from the corrected
    bubbles.
-2. Replay a synthetic inference trace through the BubbleTea controller:
-   admission (including the §5 TTFT-SLO check — late placements are
-   rejected back to the dedicated fleet), placement, TTFT, utilization
-   45% -> ~94% (paper Fig 13).
+2. Replay a seeded production trace (``ArrivalProcess``: diurnal +
+   bursty Poisson, prompt-length mixture, SLO tiers) through the
+   BubbleTea controller: per-tier admission (§5 TTFT-SLO check — late
+   placements are rejected back to the dedicated fleet), placement,
+   TTFT percentiles per tier, utilization 45% -> ~94% (paper Fig 13).
 3. Run a REAL Splitwise-style prefill/decode split on a reduced model to
    show the KV-cache handoff.
 
@@ -20,10 +21,11 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.bubbletea import (
+    ArrivalProcess,
     BubbleTeaController,
     InferenceModelSpec,
     PrefillLatencyModel,
-    PrefillRequest,
+    PromptMix,
     utilization_with_prefills,
 )
 from repro.core.simulator import GeoTopology, simulate, testbed_spec
@@ -48,27 +50,30 @@ def main():
     lm = PrefillLatencyModel(InferenceModelSpec("llama3-8b", 8e9))
     ctrl = BubbleTeaController(
         [list(res.bubbles[g]) for g in sorted(res.bubbles)], lm, pp_degree=1,
-        ttft_slo_ms=5000.0,
+        tiers={"gold": 1_500.0, "best_effort": 5_000.0},
     )
-    rng = np.random.default_rng(0)
-    t, rid = 0.0, 0
-    while t < res.iteration_ms:
-        t += rng.exponential(1.2)
-        L = int(rng.choice([128, 256, 512, 1024, 2048], p=[0.3, 0.25, 0.2, 0.15, 0.1]))
-        ctrl.submit(PrefillRequest(rid, t, L))
-        rid += 1
+    reqs = ArrivalProcess(
+        rate_per_s=1_000.0 / 1.2, horizon_ms=res.iteration_ms, seed=0,
+    ).generate(
+        PromptMix(lengths=(128, 256, 512, 1024, 2048),
+                  weights=(0.3, 0.25, 0.2, 0.15, 0.1)),
+        tiers={"gold": 0.3, "best_effort": 0.7},
+    )
+    for r in reqs:
+        ctrl.submit(r)
     busy = sum(iv.end - iv.start for ivs in res.busy.values() for iv in ivs)
     total = res.iteration_ms * len(res.busy)
     after = utilization_with_prefills(busy, total, ctrl)
-    ttfts = [p.ttft_ms for p in ctrl.placements]
-    print(f"[bubbletea] requests={rid} placed={len(ctrl.placements)} "
+    print(f"[bubbletea] requests={len(reqs)} placed={len(ctrl.placements)} "
           f"accept={ctrl.acceptance_rate():.0%} "
           f"slo-rejects={len(ctrl.rejected_slo)}")
     print(f"[bubbletea] utilization {res.utilization:.0%} -> {after:.0%} "
           f"(paper: 45% -> 94%)")
-    print(f"[bubbletea] TTFT ms p50={np.percentile(ttfts, 50):.0f} "
-          f"p99={np.percentile(ttfts, 99):.0f}; "
-          f"placement search p50={np.percentile(ctrl.search_time_us, 50):.0f}us")
+    for tier, rep in ctrl.tier_report().items():
+        print(f"[bubbletea]   {tier}: accept={rep['acceptance']:.0%} "
+          f"TTFT ms p50={rep['ttft_p50']:.0f} p99={rep['ttft_p99']:.0f}")
+    print(f"[bubbletea] placement search "
+          f"p50={np.percentile(ctrl.search_time_us, 50):.0f}us")
 
     # ---- 3) real Splitwise handoff on a reduced model ----
     cfg = get_smoke_config("gpt_a")

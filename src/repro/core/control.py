@@ -418,7 +418,12 @@ class HorizonRunner:
         self.samples = 0.0
         self.k = 0  # completed full iterations (cooldown clock)
         self.last_replan_k = -(10 ** 9)
-        self._cache: Dict[Tuple, float] = {}
+        self._cache: Dict[Tuple, object] = {}
+        self.last_result = None  # SimResult of the latest _run_iteration
+        # (cache hits reuse the representative result: its busy/bubble
+        # intervals are relative to iteration start, so they re-anchor at
+        # any wall-clock offset — the fleet's BubbleTea loop relies on
+        # this to read *contended* bubbles per iteration window)
         self._crossing = _crossing_schedules(self.epoch.spec, self.topo)
         # an empty budget is already exhausted — advance() must never
         # simulate a phantom iteration for n_iterations=0
@@ -459,10 +464,11 @@ class HorizonRunner:
         key = tuple(s.bw_at(t) for s in self._crossing)
         hit = self._cache.get(key)
         if hit is not None and all(
-            s.constant_over(t, t + hit) for s in self._crossing
+            s.constant_over(t, t + hit.iteration_ms) for s in self._crossing
         ):
             self.stats["iter_reused"] += 1
-            return hit
+            self.last_result = hit
+            return hit.iteration_ms
         # first iteration after a re-plan never extrapolates across the
         # migration (the epoch-boundary gate); otherwise the single-
         # iteration fast-forward engages whenever its own gates allow
@@ -486,7 +492,8 @@ class HorizonRunner:
                 self.stats["fast_forward_gates"].get(gate, 0) + 1
             )
         if all(s.constant_over(t, t + res.iteration_ms) for s in self._crossing):
-            self._cache[key] = res.iteration_ms
+            self._cache[key] = res
+        self.last_result = res
         return res.iteration_ms
 
     # -- one iteration + its control decision ------------------------------

@@ -71,9 +71,20 @@ topology by identity, and the run is differentially identical to
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Deque, Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
+from repro.core.bubbletea import (
+    NVLINK_GBPS_BYTES,
+    BubbleTeaController,
+    InferenceModelSpec,
+    KVQuote,
+    PrefillLatencyModel,
+    PrefillRequest,
+    intersect_bubbles,
+    utilization_with_prefills,
+)
 from repro.core.control import (
     ControlConfig,
     HorizonResult,
@@ -88,6 +99,13 @@ SHARINGS = ("temporal", "fair")
 # pricing floor for a residual-squeezed window, as a fraction of the
 # channel's capacity (see fleet.simulate_fleet's grant logic)
 MIN_GRANT_FRAC = 0.01
+# ledger pseudo-job name for BubbleTea KV-handoff reservations: KV
+# transfers are a scavenger class priced at the *residual* rate, but the
+# bytes are real — recording them under this name makes later training
+# grants' residual() subtract them like any other job's holds, which is
+# what keeps check_fleet's pointwise capacity invariant true with
+# prefill traffic on the wire
+KV_JOB = "~prefill"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,12 +163,38 @@ class ChannelReservation:
     mult: float  # rate multiplier the job's schedule view was scaled by
 
 
+@dataclasses.dataclass(frozen=True)
+class PrefillService:
+    """BubbleTea riding one fleet job: production prefill traffic served
+    out of ``host_job``'s training bubbles (paper §5 at fleet scale).
+
+    ``arrivals`` is one continuous arrival-ordered ``PrefillRequest``
+    stream (see ``bubbletea.ArrivalProcess``) fed across every horizon
+    epoch; ``decode_dc`` names the DC whose dedicated decode GPUs
+    receive the KV cache — prefills in other DCs pay for the handoff as
+    real WAN traffic on the directed channel (``KVFlows``).  ``tiers``
+    maps SLO-class name → TTFT budget (ms) for tier-aware admission;
+    ``pp_degree`` must be 1 (each training GPU is its own inference
+    pipeline) or the host's ``n_pipelines`` (same-rank GPUs across DP
+    cells form one pipeline per stage, §5.1)."""
+
+    host_job: str
+    arrivals: Sequence[PrefillRequest]
+    model: InferenceModelSpec
+    decode_dc: str
+    tiers: Optional[Mapping[str, float]] = None
+    ttft_slo_ms: Optional[float] = None
+    pp_degree: int = 1
+    guard_ms: float = 1.0
+
+
 @dataclasses.dataclass
 class FleetResult:
     jobs: Dict[str, HorizonResult]
     reservations: List[ChannelReservation]
     total_ms: float  # wall time the last job finished
     stats: Dict
+    prefill: Optional[BubbleTeaController] = None
 
     @property
     def replans(self) -> int:
@@ -256,6 +300,184 @@ def channel_targets(
 
 
 # ---------------------------------------------------------------------------
+# WAN-priced KV handoff
+# ---------------------------------------------------------------------------
+
+
+class KVFlows:
+    """Prices BubbleTea KV-cache handoffs on the shared fleet WAN.
+
+    Implements the ``bubbletea`` pricer protocol (``price``/``commit``).
+    A prefill whose pipeline DC equals the decode DC hands off over
+    NVLink; otherwise the KV bytes are demand on the directed
+    ``(src, decode)`` channel, and the transfer is a *scavenger class*:
+
+      * transfers on one channel serialize behind a per-pair cursor
+        (KV has no fair-share entitlement — it consumes leftovers);
+      * each transfer moves at the pointwise **residual** rate — the
+        pair's worst-segment capacity minus every ledger hold open at
+        that instant *and* minus the declared steady-state training
+        demand on the pair (``demand_rate``) — integrated piecewise
+        until the bytes drain, so a training-busy channel stretches the
+        quote and the controller's SLO gate rejects the request up
+        front.  Subtracting declared demand (not just materialized
+        holds) is what keeps KV strictly scavenger-class: a transfer
+        running ahead of the training clock must not book the capacity
+        the next training window is entitled to, or that window's grant
+        would collapse to the pricing floor;
+      * on commit, one ``ChannelReservation`` per constant-rate segment
+        is recorded under ``KV_JOB``.  Later training grants clip
+        against these holds through the same ``residual()`` as against
+        each other, and each KV segment's rate is by construction
+        exactly the capacity the earlier holds left free — so the
+        fleet's pointwise capacity invariant (``validate.check_fleet``)
+        survives prefill traffic by the same creation-order induction
+        that covers training windows.
+
+    Pricing must see every hold overlapping the transfer, including ones
+    the allocator's open-hold index already pruned, so the class keeps
+    its own per-pair history fed from the append-only global ledger.
+    Dead entries are compacted away only when provably immutable: KV
+    segments are final, but a training hold that is the current tail of
+    its pair chain may still be extended in place by the allocator's
+    window coalescing, so the tail always survives compaction.
+    """
+
+    def __init__(
+        self,
+        live_topo: TopologyMatrix,
+        model: InferenceModelSpec,
+        decode_dc: int,
+        caps: Dict[Pair, float],
+        pair_res: Dict[Pair, Deque[ChannelReservation]],
+        reservations: List[ChannelReservation],
+        demand_rate=None,  # (pair, t) -> summed training demand Gbit/s
+        demand_bounds=None,  # () -> iterable of demand-segment edges (ms)
+    ):
+        self.topo = live_topo
+        self.model = model
+        self.decode_dc = decode_dc
+        self.caps = caps  # shared with the allocator
+        self.pair_res = pair_res
+        self.reservations = reservations  # shared append-only ledger
+        self.demand_rate = demand_rate
+        self.demand_bounds = demand_bounds
+        self._seen = 0  # absorbed prefix of `reservations`
+        self._hist: Dict[Pair, List[ChannelReservation]] = {}
+        self._cursor: Dict[Pair, float] = {}
+        self.n_wan = 0
+        self.n_local = 0
+        self.wan_bits = 0.0
+        self.local_bits = 0.0
+        self.kv_reservations = 0
+
+    def _cap(self, pair: Pair) -> float:
+        if pair not in self.caps:
+            self.caps[pair] = self.topo.effective_bw_gbps(*pair)
+        return self.caps[pair]
+
+    def _absorb(self) -> None:
+        while self._seen < len(self.reservations):
+            r = self.reservations[self._seen]
+            self._seen += 1
+            self._hist.setdefault(r.pair, []).append(r)
+
+    def _walk(
+        self, pair: Pair, start: float, bits: float
+    ) -> Tuple[List[Tuple[float, float, float]], float]:
+        """Integrate ``bits`` from ``start`` at the pointwise residual
+        rate; returns the constant-rate segments and the finish time."""
+        cap = self._cap(pair)
+        hist = self._hist.get(pair, [])
+        if len(hist) > 64:
+            chain = self.pair_res.get(pair)
+            tail = chain[-1] if chain else None
+            hist = [
+                r for r in hist
+                if r.t1_ms > start - 1e-9 or (r.job != KV_JOB and r is tail)
+            ]
+            self._hist[pair] = hist
+        holds = [
+            (r.t0_ms, r.t1_ms, r.rate_gbps)
+            for r in hist
+            if r.t1_ms > start + 1e-9 and r.rate_gbps > 0.0
+        ]
+        edges = {b for h in holds for b in h[:2] if b > start + 1e-9}
+        if self.demand_bounds is not None:
+            edges |= {b for b in self.demand_bounds() if b > start + 1e-9}
+        bounds = sorted(edges)
+        segs: List[Tuple[float, float, float]] = []
+        t = start
+        remaining = bits
+        bi = 0
+        while remaining > 1e-6:
+            while bi < len(bounds) and bounds[bi] <= t + 1e-9:
+                bi += 1
+            nxt = bounds[bi] if bi < len(bounds) else float("inf")
+            held = sum(r for (a, b, r) in holds if a <= t + 1e-9 < b)
+            if self.demand_rate is not None:
+                held = max(held, min(cap, self.demand_rate(pair, t)))
+            rate = max(cap - held, 0.0)
+            if rate <= cap * 1e-9:
+                if bi >= len(bounds):
+                    # permanently saturated (open-ended demand fills the
+                    # channel): the transfer never drains — return an
+                    # infinite finish so admission rejects the request
+                    return segs, float("inf")
+                t = nxt
+                continue
+            need_ms = remaining / (rate * 1e6)  # Gbit/s = 1e6 bits/ms
+            if t + need_ms <= nxt:
+                segs.append((t, t + need_ms, rate))
+                t += need_ms
+                remaining = 0.0
+            else:
+                segs.append((t, nxt, rate))
+                remaining -= rate * 1e6 * (nxt - t)
+                t = nxt
+        return segs, t
+
+    # -- pricer protocol ---------------------------------------------------
+
+    def price(self, prompt_tokens: int, src_dc: Optional[int],
+              ready_ms: float) -> KVQuote:
+        bits = prompt_tokens * self.model.kv_bytes_per_token * 8.0
+        if src_dc is None or src_dc == self.decode_dc:
+            kv_ms = (prompt_tokens * self.model.kv_bytes_per_token
+                     / (NVLINK_GBPS_BYTES * 1e9) * 1e3)
+            return KVQuote(prompt_tokens, src_dc, ready_ms, ready_ms,
+                           ready_ms + kv_ms, kv_ms)
+        self._absorb()
+        pair = (src_dc, self.decode_dc)
+        start = max(ready_ms, self._cursor.get(pair, 0.0))
+        segs, end = self._walk(pair, start, bits)
+        if not math.isfinite(end):
+            return KVQuote(prompt_tokens, src_dc, ready_ms, start,
+                           float("inf"), float("inf"))
+        done = end + self.topo.link(*pair).latency_ms
+        return KVQuote(prompt_tokens, src_dc, ready_ms, start, done,
+                       done - ready_ms, payload=(pair, segs))
+
+    def commit(self, quote: KVQuote) -> None:
+        bits = quote.prompt_tokens * self.model.kv_bytes_per_token * 8.0
+        if quote.payload is None:
+            self.n_local += 1
+            self.local_bits += bits
+            return
+        pair, segs = quote.payload
+        self._cursor[pair] = segs[-1][1]
+        cap = self._cap(pair)
+        chain = self.pair_res.setdefault(pair, deque())
+        for a, b, rate in segs:
+            res = ChannelReservation(KV_JOB, pair, a, b, rate, rate / cap)
+            self.reservations.append(res)
+            chain.append(res)
+            self.kv_reservations += 1
+        self.n_wan += 1
+        self.wan_bits += bits
+
+
+# ---------------------------------------------------------------------------
 # the fleet co-simulator
 # ---------------------------------------------------------------------------
 
@@ -266,6 +488,7 @@ def simulate_fleet(
     *,
     config: Optional[FleetConfig] = None,
     validate: bool = False,
+    prefill: Optional[PrefillService] = None,
 ) -> FleetResult:
     """Co-simulate every job of the fleet over the shared live WAN.
 
@@ -278,10 +501,21 @@ def simulate_fleet(
     changes (a migration re-placed a job, or a job finished and released
     its channels).  Drift fires that would exceed the cascade budget are
     suppressed until the cascade epoch closes (see module docstring).
+
+    ``prefill`` closes the BubbleTea loop at fleet scale: the host job's
+    per-iteration **contended** ``SimResult`` bubbles (a throttled job
+    has longer iterations and therefore more bubble supply) become the
+    controller's windows, production arrivals are fed in wall-clock
+    order, and cross-DC KV handoffs are priced and reserved on the
+    shared WAN (``KVFlows``).  A host window ``[t0, t1)`` is processed
+    only once the fleet's minimum wall clock has passed ``t1``, so every
+    training hold overlapping the window — from any job — is already in
+    the ledger when the KV transfers through it are priced.
     """
     cfg = config if config is not None else FleetConfig()
     names = [j.name for j in jobs]
     assert len(set(names)) == len(names), "fleet job names must be unique"
+    assert KV_JOB not in names, f"{KV_JOB!r} is reserved for KV handoff"
     runners: Dict[str, HorizonRunner] = {
         j.name: HorizonRunner(
             j.job,
@@ -437,6 +671,93 @@ def simulate_fleet(
     for n in names:
         open_segment(n)
 
+    # -- BubbleTea prefill service (closed loop) ---------------------------
+    ctrl: Optional[BubbleTeaController] = None
+    kvflows: Optional[KVFlows] = None
+    arrivals: List[PrefillRequest] = []
+    svc_windows: Deque[Tuple[float, float, object, object]] = deque()
+    svc_state = {"next": 0, "busy_gpu_ms": 0.0, "span_gpu_ms": 0.0}
+    if prefill is not None:
+        assert prefill.host_job in runners, prefill.host_job
+        arrivals = list(prefill.arrivals)
+
+        def _kv_demand_rate(pair: Pair, t: float) -> float:
+            total = 0.0
+            for rates in demand_at(t).values():
+                r = rates.get(pair, 0.0)
+                if r > 0.0:
+                    total += min(r, caps.get(pair, r))
+            return total
+
+        def _kv_demand_bounds():
+            out = set()
+            for segs_ in segments.values():
+                for s0, s1, _rates in segs_:
+                    out.add(s0)
+                    if s1 != INF:
+                        out.add(s1)
+            return out
+
+        kvflows = KVFlows(
+            live_topo,
+            prefill.model,
+            live_topo.index_of(prefill.decode_dc),
+            caps,
+            pair_res,
+            reservations,
+            demand_rate=_kv_demand_rate,
+            demand_bounds=_kv_demand_bounds,
+        )
+        ctrl = BubbleTeaController(
+            [],
+            PrefillLatencyModel(prefill.model),
+            pp_degree=prefill.pp_degree,
+            guard_ms=prefill.guard_ms,
+            ttft_slo_ms=prefill.ttft_slo_ms,
+            tiers=prefill.tiers,
+            kv=kvflows,
+        )
+
+    def process_window(t0: float, t1: float, res, spec) -> None:
+        """One matured host iteration window: swap in its contended
+        bubbles (absolute wall-clock, clipped to the window — the last
+        window of a horizon is fractional) and feed the arrivals that
+        land inside it."""
+        pp = ctrl.pp
+        if pp == 1:
+            keys = sorted(res.busy)
+            rel = [res.bubbles[g] for g in keys]
+            dcs = [spec.stage_dc[g[1]] for g in keys]
+        else:
+            assert pp == res.n_pipelines, (
+                "pp_degree must be 1 (each GPU its own pipeline) or the "
+                "host's n_pipelines (same-rank GPUs across DP cells, §5.1)"
+            )
+            rel = [
+                intersect_bubbles(
+                    [res.bubbles[(p, s)] for p in range(res.n_pipelines)]
+                )
+                for s in range(spec.num_stages)
+            ]
+            dcs = list(spec.stage_dc)
+        span = t1 - t0
+        pipes = []
+        for windows in rel:
+            absw = []
+            for a, b in windows:
+                b = min(b, span)
+                if b - a > 1e-9:
+                    absw.append((t0 + a, t0 + b))
+            pipes.append(absw)
+        ctrl.reset_windows(pipes, pipeline_dc=dcs)
+        while (svc_state["next"] < len(arrivals)
+               and arrivals[svc_state["next"]].arrival_ms < t1 - 1e-9):
+            ctrl.submit(arrivals[svc_state["next"]])
+            svc_state["next"] += 1
+        n_gpus = len(res.busy)
+        svc_state["busy_gpu_ms"] += res.utilization * span * n_gpus
+        svc_state["span_gpu_ms"] += span * n_gpus
+
     topos: Dict[str, TopologyMatrix] = {}
     topo_keys: Dict[str, Tuple] = {}
     cascade_replans = 0
@@ -482,6 +803,19 @@ def simulate_fleet(
             pj = stats["per_job"][name]
             pj["throttled_iterations"] += 1
             pj["throttled_ms"] += t_end - t0
+        if (prefill is not None and name == prefill.host_job
+                and t_end > t0 and r.last_result is not None):
+            # queue the window; it is processed only once the fleet's
+            # minimum clock passes t_end, when every overlapping
+            # training hold is in the ledger (see process_window)
+            svc_windows.append((t0, t_end, r.last_result, r.epoch.spec))
+        if prefill is not None and svc_windows:
+            tmin = min(
+                (runners[n].t for n in names if not runners[n].done),
+                default=INF,
+            )
+            while svc_windows and svc_windows[0][1] <= tmin + 1e-9:
+                process_window(*svc_windows.popleft())
 
         if ev == "migrated":
             cascade_replans += 1
@@ -528,11 +862,35 @@ def simulate_fleet(
             migration_ms=results[n].migration_ms,
             replans_suppressed=results[n].stats.get("replans_suppressed", 0),
         )
+    if prefill is not None:
+        while svc_windows:  # every job is done; all windows are mature
+            process_window(*svc_windows.popleft())
+        busy, span = svc_state["busy_gpu_ms"], svc_state["span_gpu_ms"]
+        stats["prefill"] = {
+            "requests_offered": svc_state["next"],
+            "requests_total": len(arrivals),
+            "placed": len(ctrl.placements),
+            "rejected": len(ctrl.rejected),
+            "rejected_slo": len(ctrl.rejected_slo),
+            "acceptance": ctrl.acceptance_rate(),
+            "per_tier": ctrl.tier_report(),
+            "prefill_gpu_busy_ms": ctrl.prefill_gpu_busy_ms(),
+            "kv_wan_transfers": kvflows.n_wan,
+            "kv_local_transfers": kvflows.n_local,
+            "kv_wan_bits": kvflows.wan_bits,
+            "kv_reservations": kvflows.kv_reservations,
+            "host_gpu_ms": span,
+            "utilization_train": busy / span if span > 0 else 0.0,
+            "utilization_with_prefills": utilization_with_prefills(
+                busy, span, ctrl
+            ),
+        }
     out = FleetResult(
         jobs=results,
         reservations=reservations,
         total_ms=max((hr.total_ms for hr in results.values()), default=0.0),
         stats=stats,
+        prefill=ctrl,
     )
     if validate:
         from repro.core import validate as _validate

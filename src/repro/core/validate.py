@@ -405,19 +405,36 @@ def check_fleet(fr, live_topo, *, check_jobs: bool = True) -> None:
         of their union and compares the rate sum against the channel's
         *lowest* rate in force anywhere in the interval
         (``wan.BandwidthSchedule.min_bw_over``) — a pointwise bound,
-        not an integral one.
+        not an integral one;
+      * per (job, channel): reservation windows never overlap.  Training
+        windows are recorded sequentially per job (coalesced when
+        contiguous) and KV-handoff transfers (the ``~prefill`` pseudo-
+        job of ``fleet.KVFlows``) serialize behind a per-channel cursor,
+        so an overlap means double-booking — e.g. a KV transfer priced
+        before its predecessor's segments were committed.
     """
     if check_jobs:
         for hr in fr.jobs.values():
             check_horizon(hr, live_topo, check_epoch_schedules=False)
 
     by_pair: Dict[Tuple[int, int], List] = {}
+    by_job_pair: Dict[Tuple[str, Tuple[int, int]], List] = {}
     for r in fr.reservations:
         if r.t1_ms < r.t0_ms - EPS:
             _fail("reservation window inverted", r)
         if r.rate_gbps < -EPS:
             _fail("negative reservation rate", r)
         by_pair.setdefault(tuple(r.pair), []).append(r)
+        by_job_pair.setdefault((r.job, tuple(r.pair)), []).append(r)
+
+    for (job, pair), rs in sorted(by_job_pair.items()):
+        ws = sorted((r.t0_ms, r.t1_ms) for r in rs)
+        for (s0, e0), (s1, e1) in zip(ws, ws[1:]):
+            if s1 < e0 - EPS:
+                _fail(
+                    "one job's reservations overlap on a channel",
+                    job, pair, (s0, e0), (s1, e1),
+                )
 
     get_sched = getattr(live_topo, "bandwidth_schedule", None)
     for pair, rs in sorted(by_pair.items()):

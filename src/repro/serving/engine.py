@@ -37,6 +37,41 @@ def zeros_cache(model: Model, batch: int, max_len: int):
     return jax.tree.map(mk, model.cache_shape(batch, max_len))
 
 
+def _is_ring_leaf(x, ring: int) -> bool:
+    # cache leaves are layer-stacked: attention rings are (L, B, S, ...)
+    # with S = the slot ring; recurrent state has no slot dimension
+    return x.ndim >= 3 and x.shape[2] == ring
+
+
+def kv_cache_bytes_per_token(cache, ring: int) -> float:
+    """Bytes of KV state one *valid* token occupies in ``cache``.
+
+    Counts floating-point leaves with a ``ring`` slot dimension (layer-
+    stacked ``(L, batch, ring, ...)``) at leaf bytes over
+    ``batch × ring`` — the int32 ``pos`` ring is slot bookkeeping, not
+    handed-off model state, and recurrent-state leaves (no slot dim) are
+    per-sequence, not per-token (``kv_cache_state_bytes_per_seq``).
+    This is the serving-side analogue of
+    ``repro.core.bubbletea.InferenceModelSpec.kv_bytes_per_token``."""
+    total = 0.0
+    for x in jax.tree.leaves(cache):
+        if jnp.issubdtype(x.dtype, jnp.floating) and _is_ring_leaf(x, ring):
+            total += x.size * x.dtype.itemsize / (x.shape[1] * ring)
+    return total
+
+
+def kv_cache_state_bytes_per_seq(cache, ring: int) -> float:
+    """Per-sequence bytes of recurrent state in ``cache`` (ssm/rwkv
+    conv + state leaves, which have no ``ring`` slot dimension).  Zero
+    for pure-attention caches; moves wholesale per request on handoff."""
+    total = 0.0
+    for x in jax.tree.leaves(cache):
+        if (jnp.issubdtype(x.dtype, jnp.floating)
+                and not _is_ring_leaf(x, ring)):
+            total += x.size * x.dtype.itemsize / x.shape[1]
+    return total
+
+
 @dataclasses.dataclass
 class Request:
     req_id: int
@@ -115,13 +150,17 @@ class ServingEngine:
             r.generated.append(int(nxt[i]))
         return cache, nxt, pos
 
-    def decode_batch(self, requests: List[Request], cache, tokens, pos, steps: int):
-        for _ in range(steps):
+    def decode_batch(self, requests: List[Request], cache, tokens, pos, steps: int,
+                     step0: int = 1):
+        """``step0`` is the sampling-step index of the first decode step
+        (the prefill sample is step 0), threaded into ``_sample`` so each
+        step draws from a distinct PRNG stream."""
+        for k in range(steps):
             t0 = time.perf_counter()
             logits, cache = self._decode(self.params, cache, tokens, pos)
             logits.block_until_ready()
             wall = (time.perf_counter() - t0) * 1e3
-            tokens = self._sample(logits, requests)
+            tokens = self._sample(logits, requests, step=step0 + k)
             pos = pos + 1
             for i, r in enumerate(requests):
                 if len(r.generated) < r.max_new_tokens:
@@ -129,11 +168,18 @@ class ServingEngine:
                     r.tbt_ms.append(wall)
         return cache, tokens, pos
 
-    def _sample(self, logits: jax.Array, requests: List[Request]) -> jax.Array:
+    def _sample(self, logits: jax.Array, requests: List[Request],
+                step: int = 0) -> jax.Array:
         temps = np.array([r.temperature for r in requests], np.float32)
         if (temps == 0).all():
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        key = jax.random.PRNGKey(int(sum(r.req_id for r in requests)) & 0x7FFFFFFF)
+        # key = hash of the req-id *tuple* (order-sensitive, unlike the
+        # old sum, which collided for any two batches with equal id sums)
+        # with the sampling step folded in — without the fold, every
+        # decode step reused the identical key and draws were perfectly
+        # correlated across steps
+        seed = hash(tuple(r.req_id for r in requests)) & 0x7FFFFFFF
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
         scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-3)
         return jax.random.categorical(key, scaled).astype(jnp.int32)
 
@@ -172,10 +218,20 @@ class SplitwiseCluster:
         if self.prefill_engine.split_ragged_recurrent(requests, self.serve):
             return requests
         cache, tok, pos = self.prefill_engine.prefill_batch(requests)
-        # KV handoff (Splitwise): device-to-device copy; count the bytes
-        self.kv_bytes_moved += sum(
-            x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)
-        )
+        # KV handoff (Splitwise): device-to-device copy.  Count only the
+        # *valid* slots — the ring is B × max_len and mostly empty pads,
+        # so summing whole leaves over-counted by up to max_len/prompt_len
+        # per request and disagreed with the latency model's
+        # kv_bytes_per_token × prompt_tokens pricing.
+        eng = self.prefill_engine
+        # sliding-window configs allocate a shrunken slot ring
+        # (attention.py: S = min(max_len, cfg.window))
+        ring = min(eng.max_len, eng.cfg.window) if eng.cfg.window else eng.max_len
+        per_token = kv_cache_bytes_per_token(cache, ring)
+        per_seq = kv_cache_state_bytes_per_seq(cache, ring)
+        self.kv_bytes_moved += per_token * sum(
+            min(len(r.prompt), ring) for r in requests
+        ) + per_seq * len(requests)
         cache = jax.tree.map(jnp.copy, cache)
         steps = max(r.max_new_tokens for r in requests) - 1
         self.decode_engine.decode_batch(requests, cache, tok, pos, steps)

@@ -323,3 +323,166 @@ def test_ttft_slo_admission_rejects_late_placements():
     p = slo.submit(PrefillRequest(1, 60_000.0, 256))
     assert p is not None and p.ttft_ms <= 5_000.0
     assert slo.slo_rejection_rate() == 0.5
+
+
+# ---------------------------------------------------------------------------
+# arrival processes, SLO tiers, KV quotes (fleet-scale serving layer)
+# ---------------------------------------------------------------------------
+
+
+def test_arrivals_seeded_deterministic_and_ordered():
+    from repro.core.bubbletea import ArrivalProcess, PromptMix
+
+    arr = ArrivalProcess(rate_per_s=30.0, horizon_ms=20_000.0, seed=11,
+                         diurnal_amplitude=0.4, diurnal_period_ms=10_000.0,
+                         burst_rate_mult=3.0, mean_on_ms=500.0,
+                         mean_off_ms=2_000.0)
+    mix = PromptMix(lengths=(128, 512), weights=(0.7, 0.3))
+    a = arr.generate(mix, tiers={"gold": 0.5, "bronze": 0.5})
+    b = arr.generate(mix, tiers={"gold": 0.5, "bronze": 0.5})
+    assert [(r.req_id, r.arrival_ms, r.prompt_tokens, r.tier) for r in a] == \
+           [(r.req_id, r.arrival_ms, r.prompt_tokens, r.tier) for r in b]
+    assert len(a) > 100  # ~30/s over 20 s, modulo modulation
+    ts = [r.arrival_ms for r in a]
+    assert ts == sorted(ts) and all(0 <= t < 20_000.0 for t in ts)
+    assert [r.req_id for r in a] == list(range(len(a)))
+    assert {r.prompt_tokens for r in a} <= {128, 512}
+    assert {r.tier for r in a} <= {"gold", "bronze"}
+    # a different seed yields a different trace
+    c = ArrivalProcess(rate_per_s=30.0, horizon_ms=20_000.0, seed=12,
+                       diurnal_amplitude=0.4, diurnal_period_ms=10_000.0,
+                       burst_rate_mult=3.0, mean_on_ms=500.0,
+                       mean_off_ms=2_000.0).generate(mix)
+    assert [r.arrival_ms for r in c] != ts
+
+
+def test_arrivals_diurnal_wave_shifts_mass():
+    from repro.core.bubbletea import ArrivalProcess
+
+    # one full sine period: first half (sin > 0) runs above the base
+    # rate, second half below — the counts must reflect that
+    arr = ArrivalProcess(rate_per_s=50.0, horizon_ms=60_000.0, seed=3,
+                         diurnal_amplitude=0.8, diurnal_period_ms=60_000.0)
+    reqs = arr.generate()
+    first = sum(1 for r in reqs if r.arrival_ms < 30_000.0)
+    second = len(reqs) - first
+    assert first > 1.5 * second
+
+
+def test_arrivals_bursty_more_dispersed_than_poisson():
+    from repro.core.bubbletea import ArrivalProcess
+
+    def fano(reqs, horizon_ms, bin_ms=1_000.0):
+        bins = [0] * int(horizon_ms / bin_ms)
+        for r in reqs:
+            bins[min(int(r.arrival_ms / bin_ms), len(bins) - 1)] += 1
+        m = sum(bins) / len(bins)
+        var = sum((b - m) ** 2 for b in bins) / len(bins)
+        return var / m
+
+    plain = ArrivalProcess(rate_per_s=40.0, horizon_ms=120_000.0, seed=5)
+    burst = ArrivalProcess(rate_per_s=40.0, horizon_ms=120_000.0, seed=5,
+                           burst_rate_mult=6.0, mean_on_ms=1_000.0,
+                           mean_off_ms=4_000.0)
+    # Poisson counts have Fano ~1; the MMPP modulation must over-disperse
+    assert fano(plain.generate(), 120_000.0) < 2.0
+    assert fano(burst.generate(), 120_000.0) > 2.0
+
+
+def test_tier_acceptance_monotone_in_slo_slack():
+    """Within one run over a shared request stream, a tier with more
+    TTFT slack accepts (weakly) more of its share — tiers differ only
+    in budget, and a placement feasible under a tight budget is feasible
+    under a looser one."""
+    from repro.core.bubbletea import ArrivalProcess, PromptMix
+
+    arr = ArrivalProcess(rate_per_s=60.0, horizon_ms=20_000.0, seed=9)
+    slos = {"tight": 150.0, "mid": 500.0, "loose": 5_000.0}
+    reqs = arr.generate(PromptMix(lengths=(128, 256), weights=(0.7, 0.3)),
+                        tiers={t: 1.0 for t in slos})
+    bubbles = [[(i * 500.0, i * 500.0 + 220.0) for i in range(40)]]
+    ctrl = BubbleTeaController(bubbles, LM, tiers=slos)
+    for r in reqs:
+        ctrl.submit(r)
+    rep = ctrl.tier_report()
+    assert sum(rep[t]["offered"] for t in slos) == len(reqs)
+    for t, slo in slos.items():
+        assert rep[t]["ttft_p50"] <= rep[t]["ttft_p95"] <= rep[t]["ttft_p99"]
+        if rep[t]["placed"]:
+            assert rep[t]["ttft_p99"] <= slo
+    assert (rep["tight"]["acceptance"] <= rep["mid"]["acceptance"]
+            <= rep["loose"]["acceptance"])
+    assert rep["tight"]["acceptance"] < rep["loose"]["acceptance"]
+
+
+def test_arrival_order_invariant_across_reset_epochs():
+    """reset_windows carries the arrival clock across epochs: a stream
+    split at an epoch boundary equals the same stream fed continuously
+    only if ordering is enforced — and out-of-order submits must raise."""
+    from repro.core.bubbletea import ArrivalProcess
+
+    arr = ArrivalProcess(rate_per_s=20.0, horizon_ms=8_000.0, seed=2)
+    reqs = arr.generate()
+    epoch1 = [[(0.0, 4_000.0)]]
+    epoch2 = [[(4_000.0, 8_000.0)]]
+    ctrl = BubbleTeaController(epoch1, LM)
+    for r in (x for x in reqs if x.arrival_ms < 4_000.0):
+        ctrl.submit(r)
+    ctrl.reset_windows(epoch2)
+    rest = [x for x in reqs if x.arrival_ms >= 4_000.0]
+    for r in rest:
+        ctrl.submit(r)
+    assert len(ctrl.placements) + len(ctrl.rejected) == len(reqs)
+    with pytest.raises(AssertionError):
+        ctrl.submit(PrefillRequest(req_id=10_000, arrival_ms=0.0,
+                                   prompt_tokens=128))
+
+
+def test_local_kv_quote_enters_ttft_and_slo_gate():
+    from repro.core.bubbletea import LocalKVHandoff
+
+    heavy = InferenceModelSpec("kv-heavy", num_params=8e9,
+                               kv_bytes_per_token=2e8)
+    lm = PrefillLatencyModel(heavy)
+    req = PrefillRequest(req_id=0, arrival_ms=0.0, prompt_tokens=512)
+    kv = LocalKVHandoff(heavy)
+    quote = kv.price(512, None, 0.0)
+    assert quote.kv_ms > 0 and quote.done_ms == quote.ready_ms + quote.kv_ms
+    windows = [[(0.0, 10_000.0)]]
+    base = lm.prefill_ms(512, 1)
+    # budget covers prefill + overhead but not the (huge) KV move
+    slo = base + 100.0
+    ctrl = BubbleTeaController(windows, lm, ttft_slo_ms=slo, kv=kv)
+    assert ctrl.submit(req) is None and ctrl.rejected_slo == [0]
+    ctrl2 = BubbleTeaController(windows, lm, ttft_slo_ms=slo + quote.kv_ms, kv=kv)
+    p = ctrl2.submit(PrefillRequest(req_id=1, arrival_ms=0.0, prompt_tokens=512))
+    assert p is not None and p.kv_ms == pytest.approx(quote.kv_ms)
+
+
+def test_sub_guard_fragments_dropped_no_degradation():
+    """Regression: splitting used to leave < guard_ms fragments in the
+    window list; over a long trace first-fit rescanned them forever.
+    They can never host a placement (need = prefill + guard > guard), so
+    the live window count must stay bounded by placements, and search
+    time must not trend upward."""
+    from repro.core.bubbletea import ArrivalProcess
+
+    guard = 1.0
+    # windows sized so a 128-token prefill leaves a sub-guard tail
+    need = LM.prefill_ms(128, 1) + guard
+    w = need + guard + 0.5  # split leaves a 0.5ms (< guard) tail fragment
+    bubbles = [[(i * 400.0, i * 400.0 + w) for i in range(400)]]
+    ctrl = BubbleTeaController(bubbles, LM, guard_ms=guard)
+    arr = ArrivalProcess(rate_per_s=15.0, horizon_ms=160_000.0, seed=4)
+    mix_reqs = arr.generate()
+    for r in mix_reqs:
+        r = PrefillRequest(r.req_id, r.arrival_ms, 128)
+        ctrl.submit(r)
+    assert len(ctrl.placements) > 300
+    # every surviving window is still >= guard wide: no fragment debris
+    for wins in ctrl.windows:
+        assert all(win.end - win.start > guard for win in wins)
+    # search cost stays flat: late-trace searches no slower than 4x early
+    early = np.mean(ctrl.search_time_us[:50])
+    late = np.mean(ctrl.search_time_us[-50:])
+    assert late < max(4.0 * early, 50.0)

@@ -1,0 +1,146 @@
+"""Fleet-scale BubbleTea: prefill-as-a-service riding training bubbles,
+with WAN-priced KV handoff contending against training transfers
+(paper §5 under the PR-5 multi-job allocator).
+
+Geometry: 3 DCs (a, b, c) at 20 ms RTT, host job A spans all three
+(stage_dc a,a,b,b,c,c), contender B squeezes the a<->b channel.  Decode
+lives in c, so prefills placed on a/b pipelines ship KV over the same
+WAN the training jobs are using."""
+import math
+
+import pytest
+
+from repro.core import fleet
+from repro.core import topology as tp
+from repro.core import validate as V
+from repro.core.bubbletea import ArrivalProcess, InferenceModelSpec, PromptMix
+from repro.core.dc_selection import JobModel
+
+
+def _world(n=3, names=("a", "b", "c")):
+    lat = [[0.0 if i == j else 20.0 for j in range(n)] for i in range(n)]
+    return tp.TopologyMatrix.from_latency(lat, multi_tcp=True, dc_names=names)
+
+
+JOB = JobModel(t_fwd_ms=10.0, act_bytes=6e7, partition_param_bytes=2e8,
+               microbatches=24)
+MODEL = InferenceModelSpec("llama3-8b", num_params=8e9,
+                           kv_bytes_per_token=16384.0)
+MIX = PromptMix(lengths=(512, 1024, 2048), weights=(0.25, 0.65, 0.10))
+TIER_SLO = {"gold": 1_200.0, "best_effort": 8_000.0}
+TIER_SHARE = {"gold": 0.3, "best_effort": 0.7}
+RATE = 25.0  # req/s — saturating for this bubble supply
+
+
+def _service(rate=RATE, seed=7):
+    arr = ArrivalProcess(rate_per_s=rate, horizon_ms=60_000.0, seed=seed,
+                         diurnal_amplitude=0.3, diurnal_period_ms=30_000.0,
+                         burst_rate_mult=4.0, mean_on_ms=1_000.0,
+                         mean_off_ms=4_000.0)
+    return fleet.PrefillService(
+        host_job="A", arrivals=arr.generate(MIX, tiers=TIER_SHARE),
+        model=MODEL, decode_dc="c", tiers=TIER_SLO)
+
+
+def _host():
+    return fleet.FleetJob("A", JOB, {"a": 2, "b": 2, "c": 2}, P=6,
+                          n_iterations=8, C=1)
+
+
+def _contender():
+    return fleet.FleetJob("B", JOB, {"a": 2, "b": 2}, P=4,
+                          n_iterations=8, C=1)
+
+
+@pytest.fixture(scope="module")
+def runs():
+    world = _world()
+    svc = _service()
+    solo = fleet.simulate_fleet([_host()], world, prefill=svc, validate=True)
+    duo = fleet.simulate_fleet([_host(), _contender()], world, prefill=svc,
+                               validate=True)
+    return world, solo, duo
+
+
+def test_prefill_stats_shape_and_kv_traffic(runs):
+    world, solo, duo = runs
+    for fr in (solo, duo):
+        p = fr.stats["prefill"]
+        assert p["requests_offered"] > 500
+        # offered = arrivals inside the training horizon; the 60 s trace
+        # outlives the 8-iteration fleet run
+        assert p["placed"] + p["rejected"] == p["requests_offered"]
+        assert p["requests_offered"] <= p["requests_total"]
+        assert 0.0 < p["acceptance"] <= 1.0
+        assert set(p["per_tier"]) == {"gold", "best_effort"}
+        # decode in c, pipelines in a/b/c: both local and WAN handoffs
+        assert p["kv_local_transfers"] > 0
+        assert p["kv_wan_transfers"] > 0 and p["kv_wan_bits"] > 0
+        assert p["kv_reservations"] > 0
+    kv = [r for r in duo.reservations if r.job == fleet.KV_JOB]
+    assert len(kv) == duo.stats["prefill"]["kv_reservations"]
+    ic = world.index_of("c")
+    assert {r.pair for r in kv} <= {(0, ic), (1, ic)}
+    for r in kv:
+        assert r.t1_ms > r.t0_ms and r.rate_gbps > 0 and math.isfinite(r.rate_gbps)
+
+
+def test_closed_loop_contention_raises_bubble_monetization(runs):
+    """The acceptance criterion: WAN contention from job B stretches A's
+    iterations, creating *more* bubble supply — at the same offered
+    load, A's utilization-with-prefills under contention must exceed its
+    uncontended value (Fig 13's economics, closed over the fleet)."""
+    _, solo, duo = runs
+    ps, pd = solo.stats["prefill"], duo.stats["prefill"]
+    # contention really throttled training...
+    assert pd["utilization_train"] < ps["utilization_train"]
+    # ...and prefills monetized the extra bubbles past the solo ceiling
+    assert pd["utilization_with_prefills"] > ps["utilization_with_prefills"]
+    assert pd["utilization_with_prefills"] > pd["utilization_train"]
+
+
+def test_gold_tier_meets_tighter_ttft(runs):
+    _, _, duo = runs
+    per = duo.stats["prefill"]["per_tier"]
+    for tier, slo in TIER_SLO.items():
+        assert per[tier]["offered"] > 0
+        if per[tier]["placed"]:
+            assert per[tier]["ttft_p99"] <= slo
+
+
+def test_fleet_prefill_deterministic(runs):
+    """Same seeded arrivals + same fleet → identical service outcome."""
+    world, _, duo = runs
+    again = fleet.simulate_fleet([_host(), _contender()], world,
+                                 prefill=_service(), validate=True)
+    assert again.stats["prefill"] == duo.stats["prefill"]
+
+
+def test_check_fleet_rejects_corrupted_kv_reservation(runs):
+    world, _, _ = runs
+    fr = fleet.simulate_fleet([_host(), _contender()], world,
+                              prefill=_service())
+    V.check_fleet(fr, world)  # honest ledger passes
+    victim = next(r for r in fr.reservations if r.job == fleet.KV_JOB)
+    victim.rate_gbps *= 50.0
+    with pytest.raises(V.InvariantViolation):
+        V.check_fleet(fr, world)
+
+
+def test_check_fleet_rejects_overlapping_kv_transfers(runs):
+    """KV transfers serialize per channel behind a cursor; sliding one
+    onto its successor is double-booking even when the rate sum still
+    fits under capacity."""
+    world, _, _ = runs
+    fr = fleet.simulate_fleet([_host(), _contender()], world,
+                              prefill=_service())
+    by_pair = {}
+    for r in fr.reservations:
+        if r.job == fleet.KV_JOB:
+            by_pair.setdefault(r.pair, []).append(r)
+    pair, rs = next((p, rs) for p, rs in by_pair.items() if len(rs) >= 2)
+    rs.sort(key=lambda r: r.t0_ms)
+    a, b = rs[0], rs[1]
+    b.t0_ms = a.t1_ms - 0.5 * (a.t1_ms - a.t0_ms)  # overlap, same rates
+    with pytest.raises(V.InvariantViolation):
+        V.check_fleet(fr, world)

@@ -150,3 +150,63 @@ def test_splitwise_matches_monolithic_and_counts_kv_bytes(setup):
     mono = engine.generate([Request(1, prompt.copy(), max_new_tokens=5)])[0]
     assert cluster.kv_bytes_moved > before
     assert split.generated == mono.generated
+
+
+def test_sampling_decorrelated_across_decode_steps(setup):
+    """Regression: the PRNG key used to derive from sum(req_id) only, so
+    every decode step of a batch reused the identical key — with flat
+    logits each step re-drew the same token forever.  The step index is
+    now folded into the key: consecutive steps differ, the same step is
+    reproducible, and batches whose ids merely share a sum diverge."""
+    cfg, _, _, engine, _ = setup
+    flat = jax.numpy.zeros((3, cfg.vocab_size))
+    reqs = [Request(i, np.zeros(1, np.int32), temperature=1.0) for i in range(3)]
+    s1 = engine._sample(flat, reqs, step=1)
+    s2 = engine._sample(flat, reqs, step=2)
+    assert list(s1) != list(s2)
+    assert list(s1) == list(engine._sample(flat, reqs, step=1))
+    # sum-collision: ids (0, 3) and (1, 2) hashed identically before
+    a = [Request(0, np.zeros(1, np.int32), temperature=1.0),
+         Request(3, np.zeros(1, np.int32), temperature=1.0)]
+    b = [Request(1, np.zeros(1, np.int32), temperature=1.0),
+         Request(2, np.zeros(1, np.int32), temperature=1.0)]
+    flat2 = jax.numpy.zeros((2, cfg.vocab_size))
+    draws_a = [int(t) for s in range(4) for t in engine._sample(flat2, a, step=s)]
+    draws_b = [int(t) for s in range(4) for t in engine._sample(flat2, b, step=s)]
+    assert draws_a != draws_b
+
+
+def test_kv_bytes_moved_counts_only_valid_positions(setup):
+    """Regression: the handoff counter summed whole cache leaves, i.e.
+    B × max_len ring slots of which all but prompt_len are pads.  It must
+    agree with the latency model's kv_bytes_per_token × prompt_tokens
+    accounting instead."""
+    cfg, model, _, _, cluster = setup
+    # gpt_a smoke: k+v leaves (L=2, B, S, H=4, hd=64) bf16
+    #   per token = 2 leaves × 2 × 4 × 64 × 2 B = 2048 B
+    from repro.serving.engine import (
+        kv_cache_bytes_per_token,
+        kv_cache_state_bytes_per_seq,
+    )
+    ring = cluster.prefill_engine.max_len
+    cache = zeros_cache(model, 2, ring)
+    per_token = kv_cache_bytes_per_token(cache, ring)
+    per_seq = kv_cache_state_bytes_per_seq(cache, ring)
+    assert per_token == 2 * cfg.num_layers * 4 * 64 * 2
+    assert per_seq == 0.0
+    lens = (5, 8)
+    before = cluster.kv_bytes_moved
+    cluster.serve([
+        Request(10 + i, (np.arange(L) % cfg.vocab_size).astype(np.int32),
+                max_new_tokens=2)
+        for i, L in enumerate(lens)
+    ])
+    moved = cluster.kv_bytes_moved - before
+    assert moved == per_token * sum(lens)
+    # strictly below the old full-ring accounting
+    full_ring = sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree.leaves(cache)
+        if jax.numpy.issubdtype(x.dtype, jax.numpy.floating)
+    )
+    assert moved < full_ring
