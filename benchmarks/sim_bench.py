@@ -19,8 +19,12 @@ under ``validate.check_fleet``.  The "bubbletea" config closes the
 Fig-13 loop at fleet scale: a seeded production-traffic sweep (offered
 load × sharing policy × solo/contended arm) of prefills riding training
 bubbles with WAN-priced KV handoff — records utilization-vs-load points
-and per-tier acceptance.  Writes ``BENCH_sim.json`` so CI and future
-PRs can diff perf artifacts (fields documented in ROADMAP.md).
+and per-tier acceptance.  The "failures" config runs the failure &
+elasticity engine (``repro.core.failures``) over a mid-horizon DC loss:
+static vs ship-live-weights vs checkpoint-aware restore at fixed
+samples, invariant-checked (``failures_validate_ok``).  Writes
+``BENCH_sim.json`` so CI and future PRs can diff perf artifacts (fields
+documented in ROADMAP.md).
 
   PYTHONPATH=src python -m benchmarks.sim_bench                 # full sweep
   PYTHONPATH=src python -m benchmarks.sim_bench --quick         # CI smoke
@@ -63,8 +67,11 @@ SPEEDUP_TARGET = 10.0  # large config, new engine vs pre-refactor reference
 # per-job iteration-reuse caches must survive contended topology views;
 # "bubbletea" guards the prefill-as-a-service closed loop — thousands of
 # seeded arrivals admitted against live bubble windows with WAN-priced
-# KV quotes must stay O(live windows + reservations) per request
-CEILING_CONFIGS = ("large", "trace", "replan", "fleet", "bubbletea")
+# KV quotes must stay O(live windows + reservations) per request;
+# "failures" guards the failure & elasticity engine — a three-arm
+# DC-loss scenario (static / ship-live / checkpoint-restore) must stay
+# a handful of horizon sims, not degrade into per-event re-planning
+CEILING_CONFIGS = ("large", "trace", "replan", "fleet", "bubbletea", "failures")
 
 GPT_B = dict(hidden=8192, seq_len=6144, micro_batch=1, layers_per_stage=1,
              layer_params=1.2e9)
@@ -419,6 +426,83 @@ def _bench_bubbletea() -> Dict:
     }
 
 
+def _bench_failures() -> Dict:
+    """Failure & elasticity engine (``repro.core.failures``).
+
+    A mid-horizon DC loss on a 4-DC named WAN, three arms at *fixed*
+    sample count:
+
+      * **static** — the degraded physics baked in, no reaction: every
+        WAN transfer through the dead DC limps at residual bandwidth.
+      * **ship** — forced failover re-runs Algorithm 1 with the dead DC
+        excluded and ships live weights off it, over the (degraded)
+        live WAN.
+      * **ckpt** — checkpoint-aware recovery: restore-from-nearest-
+        checkpoint + replay is priced against live shipment and wins;
+        the replay debt is real (samples rolled back and re-earned).
+
+    Both reacting arms pass ``validate.check_horizon`` against the
+    degraded topology — no GPU busy time inside a dead DC's outage
+    window, replay accounting consistent with checkpoint recency."""
+    import time as _time
+
+    from repro.core import control
+    from repro.core import topology as tp4
+    from repro.core import validate as val
+    from repro.core.dc_selection import JobModel
+    from repro.core.failures import CheckpointPolicy, FailureEvent, FailureTrace
+
+    lat = [[0.0, 30.0, 60.0, 150.0], [30.0, 0.0, 40.0, 170.0],
+           [60.0, 40.0, 0.0, 120.0], [150.0, 170.0, 120.0, 0.0]]
+    world = tp4.TopologyMatrix.from_latency(
+        lat, multi_tcp=True,
+        dc_names=("use", "ussc", "usw", "asia"), name="azure-failures")
+    trace = FailureTrace(events=(
+        FailureEvent(at_ms=60_000.0, kind="dc_outage", dc="ussc",
+                     residual_frac=0.02),
+    ))
+    ckpt_policy = CheckpointPolicy(
+        interval_ms=20_000.0, placement=("use", "usw"), write_bw_gbps=2.0)
+    job = JobModel(t_fwd_ms=10.0, act_bytes=1e7, partition_param_bytes=4e8,
+                   microbatches=64)
+    fleet = {"use": 8, "ussc": 8, "usw": 8, "asia": 8}
+    kw = dict(P=12, live_topo=world, planned_topo=world, n_iterations=64, C=2)
+
+    t0 = _time.perf_counter()
+    static = control.simulate_horizon(
+        job, fleet, P=12, live_topo=trace.apply_to_topology(world),
+        planned_topo=world, n_iterations=64, C=2)
+    ship = control.simulate_horizon(
+        job, fleet, control=control.ControlConfig(), failures=trace, **kw)
+    ckpt = control.simulate_horizon(
+        job, fleet, control=control.ControlConfig(), failures=trace,
+        migration=control.MigrationModel(checkpoint=ckpt_policy), **kw)
+    wall = (_time.perf_counter() - t0) * 1e3
+
+    degraded = trace.apply_to_topology(world)
+    val.check_horizon(ship, live_topo=degraded)
+    val.check_horizon(ckpt, live_topo=degraded)
+    assert static.samples == ship.samples == ckpt.samples
+    assert ckpt.total_ms < ship.total_ms < static.total_ms, (
+        ckpt.total_ms, ship.total_ms, static.total_ms)
+
+    restore = next(m for m in ckpt.migrations if m.mode == "restore")
+    return {
+        "wall_ms": round(wall, 3),
+        "samples": static.samples,
+        "static_total_ms": round(static.total_ms, 3),
+        "ship_total_ms": round(ship.total_ms, 3),
+        "ckpt_total_ms": round(ckpt.total_ms, 3),
+        "ckpt_gain_vs_ship_ms": round(ship.total_ms - ckpt.total_ms, 3),
+        "ship_stall_ms": round(ship.migration_ms, 3),
+        "ckpt_stall_ms": round(ckpt.migration_ms, 3),
+        "replay_samples": round(ckpt.replay_samples, 3),
+        "restore_reason": restore.reason,
+        "forced_replans": ckpt.stats["replans_forced"],
+        "failures_validate_ok": True,  # both reacting arms passed
+    }
+
+
 def _bench_placement_search() -> Dict:
     """Branch-and-bound vs exhaustive Algorithm-1 order search."""
     import random
@@ -527,6 +611,16 @@ def run_bench(quick: bool = False, budget_s: Optional[float] = 180.0,
           f"invariant_ok={bubbletea['bubbletea_validate_ok']}",
           file=sys.stderr, flush=True)
 
+    failures = _bench_failures()
+    speedups["failures"] = {"new_total_ms": failures["wall_ms"]}
+    print(f"  failures: wall={failures['wall_ms']:.0f}ms "
+          f"ckpt={failures['ckpt_total_ms']/1e3:.1f}s < "
+          f"ship={failures['ship_total_ms']/1e3:.1f}s < "
+          f"static={failures['static_total_ms']/1e3:.1f}s "
+          f"replay={failures['replay_samples']:.0f} "
+          f"invariant_ok={failures['failures_validate_ok']}",
+          file=sys.stderr, flush=True)
+
     validate_ok = None
     if validate_large:
         cfg = configs["large"]
@@ -556,6 +650,7 @@ def run_bench(quick: bool = False, budget_s: Optional[float] = 180.0,
         "replan": replan,
         "fleet": fleet,
         "bubbletea": bubbletea,
+        "failures": failures,
         "large_validate_ok": validate_ok,
         "quick": quick,
     }

@@ -270,6 +270,73 @@ def main():
     print("    contention grew bubble supply: monetized utilization is "
           "higher in the contended run")
 
+    # failure & elasticity (ISSUE 7): a DC dies mid-horizon with no
+    # warning.  Three recovery stances at *fixed* sample count: do
+    # nothing (every transfer through the dead DC limps at residual
+    # bandwidth), re-plan around it and ship the live weights off the
+    # corpse over the degraded WAN, or restore the surviving placement
+    # from the nearest async checkpoint and re-earn the samples written
+    # since ("replay") — the control plane prices both and takes the
+    # cheaper, and validate proves no GPU busy time nor channel
+    # reservation ever touches the dead DC inside its outage window.
+    print("\nFailure & elasticity (mid-horizon DC loss, checkpoint-aware):")
+    from repro.core.failures import (CheckpointPolicy, FailureEvent,
+                                     FailureTrace)
+    from repro.core.validate import check_horizon
+
+    quad_f = topology.TopologyMatrix.from_latency(
+        [[0.0, 30.0, 60.0, 150.0], [30.0, 0.0, 40.0, 170.0],
+         [60.0, 40.0, 0.0, 120.0], [150.0, 170.0, 120.0, 0.0]],
+        multi_tcp=True, dc_names=("use", "ussc", "usw", "asia"))
+    trace = FailureTrace(events=(
+        FailureEvent(at_ms=60_000.0, kind="dc_outage", dc="ussc",
+                     residual_frac=0.02),))
+    ckp = CheckpointPolicy(interval_ms=20_000.0, placement=("use", "usw"),
+                           write_bw_gbps=2.0)
+    job_f = JobModel(t_fwd_ms=10.0, act_bytes=1e7,
+                     partition_param_bytes=4e8, microbatches=64)
+    fleet_f = {n: 8 for n in quad_f.dc_names}
+    kw_f = dict(P=12, live_topo=quad_f, planned_topo=quad_f,
+                n_iterations=64, C=2)
+    static_f = control.simulate_horizon(
+        job_f, fleet_f, P=12, live_topo=trace.apply_to_topology(quad_f),
+        planned_topo=quad_f, n_iterations=64, C=2)
+    ship_f = control.simulate_horizon(
+        job_f, fleet_f, control=control.ControlConfig(), failures=trace,
+        **kw_f)
+    ckpt_f = control.simulate_horizon(
+        job_f, fleet_f, control=control.ControlConfig(), failures=trace,
+        migration=control.MigrationModel(checkpoint=ckp), **kw_f)
+    check_horizon(ship_f, live_topo=trace.apply_to_topology(quad_f))
+    check_horizon(ckpt_f, live_topo=trace.apply_to_topology(quad_f))
+    print(f"  ussc dies at t=60s (residual 2%), {static_f.samples:.0f} "
+          f"samples either way:")
+    print(f"    static (no reaction)   : {static_f.total_ms/1e3:7.1f}s")
+    m_ship = ship_f.migrations[0]
+    print(f"    ship live weights      : {ship_f.total_ms/1e3:7.1f}s  "
+          f"(stall {m_ship.duration_ms/1e3:.1f}s hauling state off the "
+          f"dead DC)")
+    m_ck = next(m for m in ckpt_f.migrations if m.mode == "restore")
+    print(f"    checkpoint restore     : {ckpt_f.total_ms/1e3:7.1f}s  "
+          f"(stall {m_ck.duration_ms/1e3:.1f}s, replay "
+          f"{m_ck.replay_samples:.0f} samples since the last landed "
+          f"async write)")
+    print(f"    both reacting arms re-ran Algorithm 1 with the dead DC "
+          f"excluded ({m_ck.reason}); invariants checked")
+
+    # elastic join: a preempted spot slice comes *back* — opportunistic
+    # re-plan (never forced), taken only if the projected gain clears
+    # the migration + hysteresis bar
+    join = FailureTrace(events=(
+        FailureEvent(at_ms=60_000.0, kind="dc_outage", dc="ussc",
+                     recover_ms=120_000.0, residual_frac=0.02),))
+    heal_f = control.simulate_horizon(
+        job_f, fleet_f, control=control.ControlConfig(), failures=join,
+        migration=control.MigrationModel(checkpoint=ckp), **kw_f)
+    kinds = [m.reason for m in heal_f.migrations]
+    print(f"  same outage healing at t=180s: {heal_f.total_ms/1e3:.1f}s, "
+          f"re-plan trail: {kinds if kinds else 'none'}")
+
     # Fig 12-style sweep
     print("\nFig 12 sweep (dc1=600 fixed, dc2 grows):")
     base = best_plan(algorithm1(job, {"dc1": 600}, P=80)).throughput

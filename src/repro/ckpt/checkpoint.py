@@ -31,13 +31,31 @@ def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _atomic_write_text(path: str, text: str) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def save_pytree(path: str, tree: Any, metadata: Optional[Dict] = None) -> None:
+    """Serialize ``tree`` to ``path`` crash-atomically: a reader (or a
+    restore after a mid-write crash) either sees the complete archive or
+    nothing — never a truncated ``.npz``.  The temp file must be an open
+    file object, not a path: ``np.savez`` appends ``.npz`` to string
+    paths, which would defeat the rename."""
     flat = _flatten(tree)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, **flat)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
     if metadata is not None:
-        with open(path + ".json", "w") as f:
-            json.dump(metadata, f)
+        _atomic_write_text(path + ".json", json.dumps(metadata))
 
 
 def load_pytree(path: str, like: Any) -> Any:
@@ -73,17 +91,21 @@ class AsyncCheckpointer:
     def _worker(self):
         while True:
             item = self._q.get()
-            if item is None:
-                return
-            step, tree, meta = item
             try:
-                path = os.path.join(self.dir, f"step_{step:08d}.npz")
-                save_pytree(path, tree, meta)
-                with open(os.path.join(self.dir, "latest"), "w") as f:
-                    f.write(os.path.basename(path))
-                self._gc()
-            except BaseException as e:  # surfaced on next save/close
-                self._err = e
+                if item is None:
+                    return
+                step, tree, meta = item
+                try:
+                    path = os.path.join(self.dir, f"step_{step:08d}.npz")
+                    save_pytree(path, tree, meta)
+                    _atomic_write_text(
+                        os.path.join(self.dir, "latest"), os.path.basename(path)
+                    )
+                    self._gc()
+                except BaseException as e:  # surfaced on next save/wait/close
+                    self._err = e
+            finally:
+                self._q.task_done()
 
     def _gc(self):
         ckpts = sorted(
@@ -104,17 +126,27 @@ class AsyncCheckpointer:
         self._q.put((step, host_tree, metadata or {}))
 
     def wait(self) -> None:
-        import time
+        """Block until every enqueued snapshot is durable (or failed).
 
-        while not self._q.empty():
-            time.sleep(0.01)
+        ``Queue.join()`` waits for ``task_done`` — i.e. the *write*
+        finishing — where the old ``empty()`` poll returned as soon as
+        the worker had merely dequeued the item, racing the serializer.
+        """
+        self._q.join()
         if self._err:
             raise self._err
 
     def close(self) -> None:
-        self.wait()
-        self._q.put(None)
-        self._thread.join(timeout=30)
+        """Drain, stop the worker thread, and surface any writer error.
+
+        The sentinel is enqueued even when ``wait()`` raises a pending
+        write error — otherwise the worker thread would be leaked alive.
+        """
+        try:
+            self.wait()
+        finally:
+            self._q.put(None)
+            self._thread.join(timeout=30)
 
     def latest_path(self) -> Optional[str]:
         p = os.path.join(self.dir, "latest")

@@ -56,6 +56,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import fastforward
 from repro.core.dc_selection import JobModel, PlanEntry, algorithm1, best_plan
+from repro.core.failures import CheckpointPolicy, FailureTrace, OutageWindow
 from repro.core.simulator import PipelineSpec, simulate
 from repro.core.topology import TopologyMatrix
 
@@ -83,9 +84,18 @@ class MigrationModel:
     live WAN via the existing transfer pricing.  Replica fan-out
     (``dp_replicas`` copies of a stage live in its DC, §4.2) streams
     over the intra-DC fabric after the WAN copy lands.
+
+    ``checkpoint`` makes recovery checkpoint-aware: when set, every
+    re-plan also prices *restore from the nearest durable checkpoint
+    plus lost-work replay* (``plan_restore``) against live weight
+    shipment and takes the cheaper — the only recovery path at all when
+    the source DC is dead enough that shipment cannot amortize, and the
+    only one that exists when a forced re-plan must shrink P (live
+    shards cannot be re-partitioned in flight).
     """
 
     opt_state_mult: float = 2.0
+    checkpoint: Optional[CheckpointPolicy] = None
 
     def stage_bytes(self, param_bytes: float) -> float:
         return param_bytes * (1.0 + self.opt_state_mult)
@@ -93,7 +103,16 @@ class MigrationModel:
 
 @dataclasses.dataclass
 class MigrationEvent:
-    """One executed re-plan: the stall window and what moved."""
+    """One executed re-plan: the stall window and what moved.
+
+    ``mode`` records *how* state reached the new placement: ``"ship"``
+    moves live weights stage-to-stage; ``"restore"`` pulls every stage
+    from a checkpoint placement DC and forfeits ``replay_samples`` of
+    progress (the samples since the ``ckpt_ms``-stamped snapshot whose
+    progress was ``ckpt_samples``).  ``reason`` is ``"drift"`` for
+    detector-triggered re-plans, ``"elasticity"`` for opportunistic
+    post-heal/join ones, and ``"dc_outage:…"``/``"slice_preemption:…"``/
+    ``"link_failure:…"`` for forced failovers."""
 
     at_ms: float  # wall time training paused
     duration_ms: float  # stall: max over links of WAN serialization + fan-out
@@ -104,6 +123,11 @@ class MigrationEvent:
     remaining_samples: float
     from_D: int
     to_D: int
+    mode: str = "ship"
+    reason: str = "drift"
+    replay_samples: float = 0.0
+    ckpt_ms: float = math.nan
+    ckpt_samples: float = math.nan
 
     @property
     def wan_bytes(self) -> float:
@@ -139,6 +163,7 @@ class HorizonResult:
     migrations: List[MigrationEvent]
     iteration_times: List[float]
     stats: Dict
+    outages: List[OutageWindow] = dataclasses.field(default_factory=list)
 
     @property
     def replans(self) -> int:
@@ -147,6 +172,10 @@ class HorizonResult:
     @property
     def migration_ms(self) -> float:
         return sum(m.duration_ms for m in self.migrations)
+
+    @property
+    def replay_samples(self) -> float:
+        return sum(m.replay_samples for m in self.migrations)
 
 
 # ---------------------------------------------------------------------------
@@ -306,6 +335,86 @@ def plan_migration(
     )
 
 
+def plan_restore(
+    new_stage_dc: Sequence[int],
+    *,
+    placement_idx: Sequence[int],
+    param_bytes: float,
+    dp_replicas_old: int,
+    dp_replicas_new: int,
+    topo: TopologyMatrix,
+    at_ms: float,
+    model: MigrationModel,
+) -> MigrationEvent:
+    """Price restoring the *new* placement from checkpoint at ``at_ms``.
+
+    Unlike ``plan_migration`` nothing moves stage-to-stage: every stage
+    of the new placement pulls its ``stage_bytes`` (weights + optimizer
+    shards) from the nearest *alive* checkpoint placement DC — nearest
+    by a one-transfer estimate at the rate in force at ``at_ms``, so a
+    placement DC behind a degraded link loses to a farther healthy one.
+    Pulls sharing a directed pair serialize on the channel with full
+    schedule integration (same physics ``validate.check_horizon``
+    re-prices); a stage restored *in* a placement DC loads locally and
+    pays only intra-DC fabric.  Fan-out mirrors ``plan_migration``:
+    WAN-pulled stages replicate to the remaining ``dp_replicas_new - 1``
+    replicas, local loads stream all ``dp_replicas_new`` from in-DC
+    storage.  The replay debt (samples since the checkpoint) is *not*
+    in the stall — the caller debits progress and the horizon re-earns
+    it at the new plan's rate."""
+    stage_bytes = model.stage_bytes(param_bytes)
+    intra_ms_one = stage_bytes * 8.0 / (topo.intra_bw_gbps * 1e9) * 1e3
+    placement = sorted(set(placement_idx))
+    assert placement, "restore needs at least one alive placement DC"
+
+    def pull_est(src: int, dst: int) -> float:
+        link = topo.link(src, dst)
+        sched = topo.bandwidth_schedule(src, dst)
+        bw = sched.bw_at(at_ms) if sched is not None else link.bw_gbps
+        return link.latency_ms + stage_bytes * 8.0 / (bw * 1e9) * 1e3
+
+    moves: List[Tuple[int, int, int]] = []
+    by_pair: Dict[Tuple[int, int], List[int]] = {}
+    fan: Dict[int, float] = {}
+    for i, dst in enumerate(new_stage_dc):
+        if dst in placement:
+            fan[dst] = fan.get(dst, 0.0) + dp_replicas_new * intra_ms_one
+            continue
+        src = min(placement, key=lambda p: (pull_est(p, dst), p))
+        moves.append((i, src, dst))
+        by_pair.setdefault((src, dst), []).append(i)
+        fan[dst] = fan.get(dst, 0.0) + (dp_replicas_new - 1) * intra_ms_one
+
+    transfers: List[Tuple[int, int, float, float]] = []
+    wan_done = 0.0
+    for (src, dst), stages in sorted(by_pair.items()):
+        link = topo.link(src, dst)
+        sched = topo.bandwidth_schedule(src, dst)
+        cur = at_ms
+        for _ in stages:
+            if sched is not None:
+                occ = sched.transfer_ms(stage_bytes, cur)
+            else:
+                occ = stage_bytes * 8.0 / (link.bw_gbps * 1e9) * 1e3
+            transfers.append((src, dst, cur, cur + occ))
+            cur += occ
+        wan_done = max(wan_done, (cur - at_ms) + link.latency_ms)
+    fan_ms = max(fan.values(), default=0.0)
+
+    return MigrationEvent(
+        at_ms=at_ms,
+        duration_ms=wan_done + fan_ms,
+        bytes_per_stage=stage_bytes,
+        moves=moves,
+        transfers=transfers,
+        projected_gain_ms=0.0,
+        remaining_samples=0.0,
+        from_D=dp_replicas_old,
+        to_D=dp_replicas_new,
+        mode="restore",
+    )
+
+
 # ---------------------------------------------------------------------------
 # the horizon co-simulator
 # ---------------------------------------------------------------------------
@@ -377,6 +486,8 @@ class HorizonRunner:
         C: Optional[int] = None,
         policy: str = "atlas",
         validate: bool = False,
+        failures: Optional[FailureTrace] = None,
+        checkpoint: Optional[CheckpointPolicy] = None,
     ):
         assert live_topo.dc_names, "control plane needs a named topology"
         planned = planned_topo if planned_topo is not None else live_topo
@@ -411,6 +522,7 @@ class HorizonRunner:
             "replans_declined": 0,
             "replans_noop": 0,
             "replans_suppressed": 0,
+            "replans_forced": 0,
             "fast_forward_gates": {},
         }
         self.samples_total = float(n_iterations) * self.epoch.samples_per_iteration
@@ -428,6 +540,37 @@ class HorizonRunner:
         # an empty budget is already exhausted — advance() must never
         # simulate a phantom iteration for n_iterations=0
         self._done = self.samples_total <= 1e-9
+
+        # --- failure & elasticity state (inert when failures is None;
+        # the caller is responsible for running on a live topology with
+        # the trace's bandwidth consequences baked in — simulate_horizon
+        # and simulate_fleet apply trace.apply_to_topology themselves)
+        self.failures = failures
+        self.fleet_now: Dict[str, int] = dict(fleet)
+        self.dead_dcs: set = set()
+        self.dead_pairs: set = set()
+        self.outages: List[OutageWindow] = []
+        self._timeline = failures.timeline() if failures is not None else []
+        self._fail_i = 0
+        self._forced_handled: Optional[str] = None  # noop'd forced reason
+        self._P0 = P  # original partition count (P-fallback scales from it)
+        self._job0 = job
+
+        # --- checkpoint state: the newest *durable* snapshot is what a
+        # restore rolls back to (t=0 initial weights are durable by
+        # definition); stamps are wall-clock periodic, writes land
+        # write_ms later (async — training does not stall for them)
+        self.checkpoint = (
+            checkpoint if checkpoint is not None else self.mig_model.checkpoint
+        )
+        if self.checkpoint is not None:
+            self._ck_bytes = float(P) * self.mig_model.stage_bytes(
+                job.partition_param_bytes
+            )
+            self._ck_write_ms = self.checkpoint.write_ms(self._ck_bytes)
+            self._last_durable = (0.0, 0.0)  # (stamp_ms, samples)
+            self._next_ck = self.checkpoint.interval_ms
+            self._pending_cks: List[Tuple[float, float, float]] = []
 
     # -- plumbing ----------------------------------------------------------
 
@@ -515,6 +658,13 @@ class HorizonRunner:
         self.k += 1
         self.epoch.iterations += 1
         self.iteration_times.append(iter_ms)
+        self._note_checkpoints(spi)
+        if self._fail_i < len(self._timeline) and (
+            self._timeline[self._fail_i][0] <= self.t
+        ):
+            tag = self._handle_failures(allow_replan=allow_replan, iter_ms=iter_ms)
+            if tag is not None:
+                return tag
         if self.detector is None:
             return "iter"
 
@@ -536,20 +686,208 @@ class HorizonRunner:
             self.stats["replans_suppressed"] += 1
             return "suppressed"
         self.last_replan_k = self.k
+        return self._attempt_replan(iter_ms=iter_ms, forced=False, reason="drift")
 
-        t = self.t
-        window = control.snapshot_window_ms
-        snap = self.topo.snapshot(t, window_ms=iter_ms if window is None else window)
-        job_s = dataclasses.replace(self.job, topology=snap)
-        cand = best_plan(
-            algorithm1(job_s, self.fleet, self.P, C=self.C,
-                       incumbent_order=self.epoch.plan.dc_order)
+    # -- failure & elasticity ----------------------------------------------
+
+    def _alive_fleet(self) -> Dict[str, int]:
+        """The per-DC slices with capacity right now; dead DCs are
+        excluded at the Algorithm-1 layer (``exclude_dcs``), not here —
+        their GPUs are unreachable, not merely shrunk."""
+        return {dc: g for dc, g in self.fleet_now.items() if g > 0}
+
+    def _close_window(self, kind: str, *, dc=None, pair=None) -> None:
+        for w in reversed(self.outages):
+            if (
+                w.kind == kind and w.dc == dc and w.pair == pair
+                and math.isinf(w.t1_ms)
+            ):
+                w.t1_ms = self.t
+                return
+
+    def _forced_reason(self) -> Optional[str]:
+        """Why the incumbent deployment can no longer run, or None.
+        Checked against the *current* epoch: a dead DC hosting stages, a
+        preempted slice below the plan's per-DC GPU need (partitions ×
+        D × C), or a stage boundary riding a failed link."""
+        spec = self.epoch.spec
+        used = set(spec.stage_dc)
+        for dc in sorted(self.dead_dcs):
+            if self.live_topo.index_of(dc) in used:
+                return f"dc_outage:{dc}"
+        for dc, parts in sorted(self.epoch.plan.partitions.items()):
+            if parts <= 0 or dc in self.dead_dcs:
+                continue
+            if self.fleet_now.get(dc, 0) < parts * self.epoch.dp_replicas:
+                return f"slice_preemption:{dc}"
+        for fs in sorted(self.dead_pairs, key=sorted):
+            a, b = sorted(fs)
+            ia, ib = self.live_topo.index_of(a), self.live_topo.index_of(b)
+            for s in range(spec.num_stages - 1):
+                if {spec.stage_dc[s], spec.stage_dc[s + 1]} == {ia, ib}:
+                    return f"link_failure:{a}-{b}"
+        return None
+
+    def _handle_failures(self, *, allow_replan: bool, iter_ms: float) -> Optional[str]:
+        """Consume every timeline step due by now, then react once: a
+        forced failover if the incumbent can no longer run (ignores the
+        cascade guard and cooldown — survival is not optional), else an
+        opportunistic re-plan after a heal/join (control plane only,
+        normal gain gating).  Outage windows open/close at *handled*
+        time — iteration granularity, matching what actually ran.
+        Returns an event tag for ``advance`` or None to fall through to
+        drift detection."""
+        healed = joined = False
+        while self._fail_i < len(self._timeline) and (
+            self._timeline[self._fail_i][0] <= self.t
+        ):
+            _te, phase, ev = self._timeline[self._fail_i]
+            self._fail_i += 1
+            self._forced_handled = None
+            if phase == "apply":
+                if ev.kind == "dc_outage":
+                    self.dead_dcs.add(ev.dc)
+                    self.outages.append(
+                        OutageWindow("dc_outage", t0_ms=self.t, dc=ev.dc)
+                    )
+                elif ev.kind == "link_failure":
+                    self.dead_pairs.add(frozenset(ev.pair))
+                    self.outages.append(
+                        OutageWindow("link_failure", t0_ms=self.t,
+                                     pair=tuple(ev.pair))
+                    )
+                elif ev.kind == "slice_preemption":
+                    self.fleet_now[ev.dc] = max(
+                        0, self.fleet_now.get(ev.dc, 0) - ev.gpus
+                    )
+                else:  # dc_join
+                    self.fleet_now[ev.dc] = self.fleet_now.get(ev.dc, 0) + ev.gpus
+                    joined = True
+            else:  # heal
+                healed = True
+                if ev.kind == "dc_outage":
+                    self.dead_dcs.discard(ev.dc)
+                    self._close_window("dc_outage", dc=ev.dc)
+                elif ev.kind == "link_failure":
+                    self.dead_pairs.discard(frozenset(ev.pair))
+                    self._close_window("link_failure", pair=tuple(ev.pair))
+                else:  # slice_preemption returns
+                    self.fleet_now[ev.dc] = self.fleet_now.get(ev.dc, 0) + ev.gpus
+
+        reason = self._forced_reason()
+        if reason is not None and reason != self._forced_handled:
+            self.stats["replans_forced"] += 1
+            self.last_replan_k = self.k
+            tag = self._attempt_replan(iter_ms=iter_ms, forced=True, reason=reason)
+            if tag == "noop":
+                # bnb kept the incumbent (no viable alternative, e.g. a
+                # failed link on a two-DC WAN): remember so the forced
+                # path doesn't re-run Algorithm 1 every iteration until
+                # the failure state actually changes
+                self._forced_handled = reason
+            return tag
+        if (healed or joined) and self.control is not None:
+            if not allow_replan:
+                self.stats["replans_suppressed"] += 1
+                self.last_replan_k = self.k
+                return "suppressed"
+            self.last_replan_k = self.k
+            return self._attempt_replan(
+                iter_ms=iter_ms, forced=False, reason="elasticity"
+            )
+        return None
+
+    def _note_checkpoints(self, spi: float) -> None:
+        """Stamp the checkpoints due by now and promote landed writes.
+        A stamp strictly inside the just-finished iteration captures the
+        *previous* optimizer step (``samples − spi``: no mid-iteration
+        state exists); the async write lands ``write_ms`` later, and
+        only a landed write is a restore point."""
+        ck = self.checkpoint
+        if ck is None:
+            return
+        while self._next_ck <= self.t + 1e-9:
+            stamp = self._next_ck
+            snap_samples = (
+                self.samples - spi if stamp < self.t - 1e-9 else self.samples
+            )
+            self._pending_cks.append(
+                (stamp + self._ck_write_ms, stamp, max(0.0, snap_samples))
+            )
+            self._next_ck += ck.interval_ms
+        while self._pending_cks and self._pending_cks[0][0] <= self.t + 1e-9:
+            _durable_at, stamp, s = self._pending_cks.pop(0)
+            self._last_durable = (stamp, s)
+
+    # -- the re-plan attempt (drift, elasticity, and forced failover) ------
+
+    def _job_for_P(self, P_try: int) -> JobModel:
+        """The job re-partitioned into ``P_try`` layer-partitions: each
+        partition holds ``P0/P_try ×`` the layers, so per-partition
+        weights and forward time scale together; boundary activations
+        and the microbatch count are partition-size-independent."""
+        if P_try == self.P:
+            return self.job
+        scale = self._P0 / P_try
+        return dataclasses.replace(
+            self._job0,
+            partition_param_bytes=self._job0.partition_param_bytes * scale,
+            t_fwd_ms=self._job0.t_fwd_ms * scale,
         )
-        if not math.isfinite(cand.total_ms):
+
+    def _attempt_replan(self, *, iter_ms: float, forced: bool, reason: str) -> str:
+        """Re-run Algorithm 1 on the observed WAN over the surviving
+        fleet and execute the cheaper of live-weight shipment vs
+        checkpoint restore (+ replay debt) when the switch pays for
+        itself — forced failovers skip the gain test (the incumbent
+        cannot run at all) and may shrink P when no placement at the
+        current partition count survives (divisors of the original P,
+        largest first; shrinking P requires a checkpoint — live shards
+        cannot be re-partitioned in flight)."""
+        control = self.control
+        t = self.t
+        window = control.snapshot_window_ms if control is not None else None
+        snap = self.topo.snapshot(t, window_ms=iter_ms if window is None else window)
+        alive = self._alive_fleet()
+        if forced:
+            P_candidates = [
+                p for p in range(self._P0, 0, -1)
+                if self._P0 % p == 0 and p <= self.P
+            ]
+        else:
+            P_candidates = [self.P]
+        cand = cand_P = job_p = None
+        surviving = {dc for dc in alive if dc not in self.dead_dcs}
+        for P_try in P_candidates:
+            if not surviving:
+                break
+            job_try = self._job_for_P(P_try)
+            job_s = dataclasses.replace(job_try, topology=snap)
+            incumbent = self.epoch.plan.dc_order if P_try == self.P else None
+            c = best_plan(
+                algorithm1(
+                    job_s, alive, P_try, C=self.C,
+                    incumbent_order=incumbent,
+                    exclude_dcs=sorted(self.dead_dcs) if self.dead_dcs else None,
+                )
+            )
+            if math.isfinite(c.total_ms):
+                cand, cand_P, job_p = c, P_try, job_try
+                break
+        if cand is None:
+            if forced:
+                raise ValueError(
+                    f"forced failover ({reason}): no feasible placement "
+                    f"survives on fleet {alive} at any P in {P_candidates}"
+                )
             self.stats["replans_declined"] += 1
             return "declined"
-        cand_spec = plan_spec(self.job, cand, self.live_topo)
-        if cand_spec.stage_dc == self.epoch.spec.stage_dc and cand.D == self.epoch.plan.D:
+        cand_spec = plan_spec(job_p, cand, self.live_topo)
+        if (
+            cand_P == self.P
+            and cand_spec.stage_dc == self.epoch.spec.stage_dc
+            and cand.D == self.epoch.plan.D
+        ):
             # same deployment under current conditions: re-anchor the
             # drift reference so the detector stops firing on a change
             # the plan already tolerates best
@@ -557,44 +895,108 @@ class HorizonRunner:
             self.stats["replans_noop"] += 1
             return "noop"
 
-        mig = plan_migration(
-            self.epoch.spec.stage_dc,
-            cand_spec.stage_dc,
-            param_bytes=self.job.partition_param_bytes,
-            dp_replicas_old=self.epoch.dp_replicas,
-            dp_replicas_new=cand.D * self.C,
-            topo=self.topo,
-            at_ms=t,
-            model=self.mig_model,
-        )
-        cand_res = simulate(
-            cand_spec,
-            self.topo,
-            policy=self.policy,
-            n_pipelines=self.C,
-            dp_replicas_for_allreduce=cand.D * self.C,
-            start_ms=t + mig.duration_ms,
-        )
-        inc_per_sample = iter_ms / spi
-        cand_per_sample = cand_res.iteration_ms / (cand.D * self.C * self.job.microbatches)
+        # price the recovery modes: live shipment (stage-to-stage, only
+        # meaningful at unchanged P) vs checkpoint restore + replay
+        dp_new = cand.D * self.C
+        options: List[Tuple[str, MigrationEvent, float]] = []
+        if cand_P == self.P:
+            options.append((
+                "ship",
+                plan_migration(
+                    self.epoch.spec.stage_dc,
+                    cand_spec.stage_dc,
+                    param_bytes=job_p.partition_param_bytes,
+                    dp_replicas_old=self.epoch.dp_replicas,
+                    dp_replicas_new=dp_new,
+                    topo=self.topo,
+                    at_ms=t,
+                    model=self.mig_model,
+                ),
+                0.0,
+            ))
+        ck = None
+        if self.checkpoint is not None:
+            placement_alive = self.checkpoint.alive_placement(self.dead_dcs)
+            if placement_alive:
+                ck = self._last_durable
+                options.append((
+                    "restore",
+                    plan_restore(
+                        cand_spec.stage_dc,
+                        placement_idx=[
+                            self.live_topo.index_of(d) for d in placement_alive
+                        ],
+                        param_bytes=job_p.partition_param_bytes,
+                        dp_replicas_old=self.epoch.dp_replicas,
+                        dp_replicas_new=dp_new,
+                        topo=self.topo,
+                        at_ms=t,
+                        model=self.mig_model,
+                    ),
+                    max(0.0, self.samples - ck[1]),
+                ))
+        if not options:
+            if forced:
+                raise ValueError(
+                    f"forced failover ({reason}) must shrink P to {cand_P} "
+                    "but no checkpoint policy is configured — live shards "
+                    "cannot be re-partitioned in flight"
+                )
+            self.stats["replans_declined"] += 1
+            return "declined"
+
+        best = None
+        for mode, mig, replay in options:
+            cand_res = simulate(
+                cand_spec,
+                self.topo,
+                policy=self.policy,
+                n_pipelines=self.C,
+                dp_replicas_for_allreduce=dp_new,
+                start_ms=t + mig.duration_ms,
+            )
+            cand_per_sample = cand_res.iteration_ms / (
+                dp_new * job_p.microbatches
+            )
+            # effective cost: the stall plus the wall time to re-earn
+            # the forfeited samples at the candidate's own rate
+            cost = mig.duration_ms + replay * cand_per_sample
+            if best is None or cost < best[4]:
+                best = (mode, mig, replay, cand_per_sample, cost)
+        mode, mig, replay, cand_per_sample, cost = best
+        inc_per_sample = iter_ms / self.epoch.samples_per_iteration
         remaining = self.samples_total - self.samples
         gain = remaining * (inc_per_sample - cand_per_sample)
-        if gain <= mig.duration_ms + control.min_gain_ms:
+        if not forced and gain <= cost + control.min_gain_ms:
             self.stats["replans_declined"] += 1
             return "declined"
 
         mig.projected_gain_ms = gain
         mig.remaining_samples = remaining
+        mig.reason = reason
         self.migrations.append(mig)
         self.epoch.end_ms = t
         self.t = t + mig.duration_ms
+        if mode == "restore":
+            mig.replay_samples = replay
+            mig.ckpt_ms, mig.ckpt_samples = ck
+            self.samples = ck[1]
+            # in-flight snapshot writes die with the old deployment; the
+            # cadence restarts from the restore point
+            self._pending_cks = []
+            self._next_ck = self.t + self.checkpoint.interval_ms
+        if cand_P != self.P:
+            self.P = cand_P
+            self.job = job_p
         self.epoch = self._open_epoch(
             self.epoch.index + 1, self.t, self.samples, cand, snap
         )
         self.epochs.append(self.epoch)
-        self.detector.reset()
+        if self.detector is not None:
+            self.detector.reset()
         self._cache = {}
         self._crossing = _crossing_schedules(self.epoch.spec, self.topo)
+        self._forced_handled = None
         return "migrated"
 
     def defer_epoch_start(self, new_t_ms: float) -> None:
@@ -625,6 +1027,7 @@ class HorizonRunner:
             migrations=self.migrations,
             iteration_times=self.iteration_times,
             stats=self.stats,
+            outages=self.outages,
         )
 
 
@@ -641,6 +1044,8 @@ def simulate_horizon(
     C: Optional[int] = None,
     policy: str = "atlas",
     validate: bool = False,
+    failures: Optional[FailureTrace] = None,
+    checkpoint: Optional[CheckpointPolicy] = None,
 ) -> HorizonResult:
     """Co-simulate ``n_iterations`` (of the initial plan's global batch)
     against the live WAN, optionally with the reactive control plane.
@@ -653,11 +1058,23 @@ def simulate_horizon(
     (pipelines per DP-cell) is pinned across re-plans: re-sizing a cell
     is a full re-shard, not a migration; D is re-picked freely.
 
+    ``failures`` injects a seeded ``FailureTrace``: its bandwidth
+    consequences are baked into the live topology here
+    (``apply_to_topology`` — the planner still prices the *raw* WAN, so
+    failures are always unplanned), and its apply/heal steps drive
+    forced failovers and opportunistic elasticity re-plans inside the
+    runner.  ``checkpoint`` (or ``migration.checkpoint``) makes those
+    recoveries checkpoint-aware.
+
     This is the single-job driver of ``HorizonRunner``; the multi-job
     fleet (``repro.core.fleet.simulate_fleet``) interleaves several
     runners over one shared WAN and is differentially identical to this
     function when the fleet has exactly one job.
     """
+    if failures is not None and len(failures):
+        if planned_topo is None:
+            planned_topo = live_topo
+        live_topo = failures.apply_to_topology(live_topo)
     runner = HorizonRunner(
         job, fleet, P, live_topo,
         n_iterations=n_iterations,
@@ -667,6 +1084,8 @@ def simulate_horizon(
         C=C,
         policy=policy,
         validate=validate,
+        failures=failures,
+        checkpoint=checkpoint,
     )
     while not runner.done:
         runner.advance()

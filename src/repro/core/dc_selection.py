@@ -469,6 +469,7 @@ def algorithm1(
     search_orders: Optional[bool] = None,
     order_search: str = "bnb",
     incumbent_order: Optional[Sequence[str]] = None,
+    exclude_dcs: Optional[Sequence[str]] = None,
 ) -> List[PlanEntry]:
     """Paper Algorithm 1. Returns one PlanEntry per DP-cell count D.
 
@@ -487,9 +488,26 @@ def algorithm1(
     the currently-deployed placement: the re-planner
     (``repro.core.control``) passes the live plan's order so the search
     starts from a tight bound and ties resolve to "stay put".
+
+    ``exclude_dcs`` plans over the *surviving* set: the named DCs are
+    removed from the fleet (and from any explicit ``dc_order``) before
+    anything is packed — the forced-failover path of the control plane
+    (``repro.core.failures``) re-runs Algorithm 1 with the dead DC
+    excluded rather than trusting degraded link pricing to route a
+    placement off GPUs that no longer exist.  ``D_max`` (when left
+    automatic) and the availability order follow the surviving fleet.
     """
     if order_search not in ("bnb", "exhaustive"):
         raise ValueError(f"unknown order_search {order_search!r}")
+    if exclude_dcs:
+        dead = set(exclude_dcs)
+        num_gpu = {dc: g for dc, g in num_gpu.items() if dc not in dead}
+        if not num_gpu:
+            raise ValueError(f"exclude_dcs={sorted(dead)} leaves no fleet")
+        if dc_order is not None:
+            dc_order = [dc for dc in dc_order if dc not in dead]
+        if incumbent_order is not None:
+            incumbent_order = [dc for dc in incumbent_order if dc not in dead]
     explicit_order = dc_order is not None
     if dc_order is None:  # default: decreasing GPU availability (§4.5)
         dc_order = sorted(num_gpu, key=lambda d: -num_gpu[d])

@@ -92,6 +92,7 @@ from repro.core.control import (
     MigrationModel,
 )
 from repro.core.dc_selection import JobModel
+from repro.core.failures import CheckpointPolicy, FailureTrace
 from repro.core.simulator import iteration_wan_bits, simulate
 from repro.core.topology import Pair, TopologyMatrix
 
@@ -125,6 +126,10 @@ class FleetJob:
     weight: float = 1.0
     planned_topo: Optional[TopologyMatrix] = None
     control: Optional[ControlConfig] = None
+    # per-job checkpoint policy: makes this job's forced failovers and
+    # re-plans checkpoint-aware (restore + replay priced against live
+    # shipment); None falls back to the fleet MigrationModel's policy
+    checkpoint: Optional[CheckpointPolicy] = None
 
     def __post_init__(self):
         assert self.weight > 0.0, "fair-share weight must be positive"
@@ -489,6 +494,7 @@ def simulate_fleet(
     config: Optional[FleetConfig] = None,
     validate: bool = False,
     prefill: Optional[PrefillService] = None,
+    failures: Optional[FailureTrace] = None,
 ) -> FleetResult:
     """Co-simulate every job of the fleet over the shared live WAN.
 
@@ -511,11 +517,23 @@ def simulate_fleet(
     only once the fleet's minimum wall clock has passed ``t1``, so every
     training hold overlapping the window — from any job — is already in
     the ledger when the KV transfers through it are priced.
+
+    ``failures`` injects one fleet-wide ``FailureTrace``: its bandwidth
+    consequences are baked into the shared live WAN once (every job —
+    reacting or not — prices the same degraded physics), its apply/heal
+    steps drive forced failovers inside every runner, and each forced
+    migration re-enters the normal cascade plumbing (segment close,
+    admission barrier, cascade budget) like a drift migration would.
+    Planners still price the raw WAN — failures are always unplanned.
     """
     cfg = config if config is not None else FleetConfig()
     names = [j.name for j in jobs]
     assert len(set(names)) == len(names), "fleet job names must be unique"
     assert KV_JOB not in names, f"{KV_JOB!r} is reserved for KV handoff"
+    planned_default = None
+    if failures is not None and len(failures):
+        planned_default = live_topo  # the raw WAN the planners believed
+        live_topo = failures.apply_to_topology(live_topo)
     runners: Dict[str, HorizonRunner] = {
         j.name: HorizonRunner(
             j.job,
@@ -523,12 +541,16 @@ def simulate_fleet(
             j.P,
             live_topo,
             n_iterations=j.n_iterations,
-            planned_topo=j.planned_topo,
+            planned_topo=(
+                j.planned_topo if j.planned_topo is not None else planned_default
+            ),
             control=j.control,
             migration=cfg.migration,
             C=j.C,
             policy=j.policy,
             validate=validate,
+            failures=failures,
+            checkpoint=j.checkpoint,
         )
         for j in jobs
     }

@@ -329,7 +329,14 @@ def check_horizon(hr, live_topo, *, check_epoch_schedules: bool = True) -> None:
         the live bandwidth segments in force during that epoch);
       * migration transfers serialize per directed WAN pair, stay inside
         their stall window, and occupy the channel for at least the
-        physical (schedule-integrated) serialization of the moved bytes.
+        physical (schedule-integrated) serialization of the moved bytes;
+      * failure/elasticity (``hr.outages`` non-empty): no epoch with GPU
+        busy time places a stage in a dead DC inside its outage window,
+        and sample accounting is consistent with checkpoint recency —
+        a ship-mode migration carries zero replay debt and preserves
+        sample continuity exactly; a restore-mode one resumes at its
+        checkpoint's sample count with ``replay_samples`` equal to the
+        progress it forfeited.
     """
     import math
 
@@ -389,6 +396,44 @@ def check_horizon(hr, live_topo, *, check_epoch_schedules: bool = True) -> None:
                     _fail("two migration transfers share a WAN channel at once",
                           pair, (s0, e0), (s1, e1))
 
+    # --- failure & elasticity invariants (inert without outages) ---------
+    for w in getattr(hr, "outages", None) or []:
+        if w.kind != "dc_outage":
+            continue
+        idx = live_topo.index_of(w.dc)
+        t1 = min(w.t1_ms, hr.total_ms)
+        for ep in hr.epochs:
+            if ep.iterations <= 0:
+                continue
+            end = ep.end_ms if not math.isnan(ep.end_ms) else hr.total_ms
+            if end <= w.t0_ms + EPS or ep.start_ms >= t1 - EPS:
+                continue
+            if idx in ep.spec.stage_dc:
+                _fail("GPU busy time inside a dead DC's outage window",
+                      w.dc, (w.t0_ms, t1), ep.index, ep.spec.stage_dc)
+
+    for i, m in enumerate(migs):
+        if m.replay_samples < -EPS:
+            _fail("negative replay debt", i, m.replay_samples)
+        ep, nxt = hr.epochs[i], hr.epochs[i + 1]
+        progress = ep.start_sample + ep.iterations * ep.samples_per_iteration
+        if getattr(m, "mode", "ship") == "restore":
+            if math.isnan(m.ckpt_samples):
+                _fail("restore-mode migration missing its checkpoint stamp", i)
+            if abs(nxt.start_sample - m.ckpt_samples) > 1e-6:
+                _fail("restored epoch does not resume at its checkpoint's "
+                      "sample count", i, nxt.start_sample, m.ckpt_samples)
+            if abs(m.replay_samples - (progress - m.ckpt_samples)) > 1e-6:
+                _fail("replay debt inconsistent with checkpoint recency",
+                      i, m.replay_samples, progress, m.ckpt_samples)
+        else:
+            if m.replay_samples != 0.0:
+                _fail("ship-mode migration claims replay debt", i,
+                      m.replay_samples)
+            if abs(nxt.start_sample - progress) > 1e-6:
+                _fail("sample accounting broken across a migration",
+                      i, nxt.start_sample, progress)
+
 
 def check_fleet(fr, live_topo, *, check_jobs: bool = True) -> None:
     """Assert the multi-job fleet invariants on a ``fleet.FleetResult``.
@@ -416,6 +461,33 @@ def check_fleet(fr, live_topo, *, check_jobs: bool = True) -> None:
     if check_jobs:
         for hr in fr.jobs.values():
             check_horizon(hr, live_topo, check_epoch_schedules=False)
+
+    # failure invariant: none of a job's channel reservations may touch a
+    # dead DC (or ride a failed pair) inside that job's outage windows —
+    # the straddling iteration ends exactly where the window opens, and
+    # every post-failover placement must have routed off the dead
+    # resources.  Windows are per-job (handled-time granularity), so one
+    # job's outage never indicts another job's healthy reservation; the
+    # KV pseudo-job carries no outage record and is exempt.
+    for jname, hr in sorted(fr.jobs.items()):
+        for w in getattr(hr, "outages", None) or []:
+            t1 = min(w.t1_ms, hr.total_ms)
+            if w.kind == "dc_outage":
+                idx = live_topo.index_of(w.dc)
+                affected = lambda p: idx in p  # noqa: E731
+            else:  # link_failure
+                dead = {live_topo.index_of(w.pair[0]),
+                        live_topo.index_of(w.pair[1])}
+                affected = lambda p: set(p) == dead  # noqa: E731
+            for r in fr.reservations:
+                if r.job != jname or r.rate_gbps <= EPS:
+                    continue
+                if not affected(tuple(r.pair)):
+                    continue
+                if r.t0_ms < t1 - EPS and r.t1_ms > w.t0_ms + EPS:
+                    _fail("channel reservation touches dead resources "
+                          "during an outage window", jname, w.kind,
+                          w.dc or w.pair, (w.t0_ms, t1), r)
 
     by_pair: Dict[Tuple[int, int], List] = {}
     by_job_pair: Dict[Tuple[str, Tuple[int, int]], List] = {}

@@ -208,7 +208,8 @@ def build_lowerable(arch: str, shape: str, multi_pod: bool, boundary: str = "str
 
 def wan_projection(dcn_bytes: float, topo,
                    drift: Optional[str] = None,
-                   fleet_jobs: int = 0) -> Dict[str, Any]:
+                   fleet_jobs: int = 0,
+                   fail: Optional[str] = None) -> Dict[str, Any]:
     """Project the measured inter-pod DCN bytes onto a WAN topology: the
     per-iteration transfer time if the pod boundary ran over the given
     (possibly heterogeneous) WAN instead of the datacenter DCN.  Uses the
@@ -226,7 +227,15 @@ def wan_projection(dcn_bytes: float, topo,
     the same pair.  Contention-aware temporal sharing serializes them —
     job k's transfer completes at k·S, mean (N+1)/2·S — while the naive
     always-fair-share model runs every transfer at 1/N rate so *all* of
-    them complete at N·S."""
+    them complete at N·S.
+
+    ``fail="dc@t"`` (e.g. ``"us-west@600"``, seconds) adds the failure &
+    elasticity projection (``repro.core.failures``): that DC suffers an
+    unplanned outage at t, its pairs drop to residual bandwidth, and the
+    boundary transfer is priced three ways — keep riding the dead DC at
+    residual rate (static), haul the live state off it over the same
+    residual links (ship), or pull the last async checkpoint between
+    healthy DCs at full rate (checkpoint-aware restore)."""
     from repro.core import wan as _wan
     from repro.core.topology import TopologyMatrix
 
@@ -283,6 +292,46 @@ def wan_projection(dcn_bytes: float, topo,
             "fair_share_mean_s": n * per_job_s,
             "temporal_mean_speedup": 2.0 * n / (n + 1),
         }
+    if fail:
+        from repro.core.failures import FailureEvent, FailureTrace
+
+        if "@" not in fail:
+            raise ValueError(f"--fail wants dc@t_seconds, got {fail!r}")
+        dc, t_str = fail.rsplit("@", 1)
+        if dc not in topo.dc_names:
+            raise ValueError(f"--fail DC {dc!r} not in {topo.dc_names}")
+        at_ms = float(t_str) * 1e3
+        residual = 0.05
+        trace = FailureTrace(events=(
+            FailureEvent(at_ms=at_ms, kind="dc_outage", dc=dc,
+                         residual_frac=residual),))
+        degraded = trace.apply_to_topology(topo)
+        idx = topo.index_of(dc)
+        dead_pairs = [(a, b) for a, b in topo.wan_pairs() if idx in (a, b)]
+        alive = [topo.link(a, b) for a, b in topo.wan_pairs()
+                 if idx not in (a, b)]
+        # the boundary transfer through the dead DC, at residual rate
+        residual_s = max(
+            degraded.bandwidth_schedule(a, b).transfer_ms(
+                dcn_bytes, at_ms + 1.0) / 1e3 + topo.link(a, b).latency_ms / 1e3
+            for a, b in dead_pairs)
+        # restore: the checkpoint lives on healthy DCs — full-rate pull
+        restore_s = (min(l.transfer_ms(dcn_bytes) for l in alive) / 1e3
+                     if alive else residual_s)
+        out["failure"] = {
+            "scenario": f"{dc} dies at t={at_ms/1e3:.0f}s "
+                        f"(residual {residual:.0%})",
+            "dead_dc": dc,
+            "at_s": at_ms / 1e3,
+            # a static plan keeps paying the residual rate every iteration
+            "static_s": residual_s,
+            # shipping live state off the corpse rides the same residual
+            # links once — then runs free of the dead DC
+            "ship_once_s": residual_s,
+            # checkpoint-aware restore never touches the dead DC
+            "restore_s": restore_s,
+            "restore_speedup": residual_s / restore_s if restore_s else None,
+        }
     return out
 
 
@@ -290,7 +339,8 @@ def run_one(arch: str, shape: str, mesh_name: str, boundary: str = "striped",
             fsdp: Optional[bool] = None, relayout: bool = False,
             wan_preset: Optional[str] = None,
             wan_drift: Optional[str] = None,
-            wan_fleet: int = 0) -> Dict[str, Any]:
+            wan_fleet: int = 0,
+            wan_fail: Optional[str] = None) -> Dict[str, Any]:
     multi_pod = mesh_name == "multi"
     ok, why = shp.shape_supported(arch, shape)
     if not ok:
@@ -362,7 +412,7 @@ def run_one(arch: str, shape: str, mesh_name: str, boundary: str = "striped",
     }
     if wan_preset:
         result["wan"] = wan_projection(coll["dcn"], wan_preset, drift=wan_drift,
-                                       fleet_jobs=wan_fleet)
+                                       fleet_jobs=wan_fleet, fail=wan_fail)
     return result
 
 
@@ -390,6 +440,12 @@ def main():
                          "projection — N jobs' boundary transfers on one "
                          "pair, contention-aware temporal sharing vs naive "
                          "always-fair-share (repro.core.fleet)")
+    ap.add_argument("--fail", default=None, metavar="DC@T",
+                    help="with --wan-preset: add the failure & elasticity "
+                         "projection — that DC dies at T seconds, boundary "
+                         "transfer priced static vs ship-live vs "
+                         "checkpoint-aware restore (repro.core.failures); "
+                         "e.g. --fail us-west@600")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--out", default=OUT_DIR)
     args = ap.parse_args()
@@ -414,7 +470,8 @@ def main():
                                   relayout=args.relayout,
                                   wan_preset=args.wan_preset,
                                   wan_drift=args.wan_drift,
-                                  wan_fleet=args.fleet)
+                                  wan_fleet=args.fleet,
+                                  wan_fail=args.fail)
                 except Exception as e:
                     res = {"arch": arch, "shape": shape, "mesh": mesh_name,
                            "boundary": args.boundary, "status": "error",

@@ -102,3 +102,70 @@ def test_load_missing_key_raises():
         save_pytree(p, {"w": np.ones((2, 2))})
         with pytest.raises(KeyError):
             load_pytree(p, {"w": np.ones((2, 2)), "extra": np.ones((1,))})
+
+
+def test_wait_blocks_until_write_durable(monkeypatch):
+    """Regression: wait() used to poll Queue.empty(), which flips true the
+    moment the worker *dequeues* an item — racing the serializer.  With a
+    deliberately slow writer, wait() must not return before the bytes and
+    the latest pointer are on disk."""
+    import time
+
+    import repro.ckpt.checkpoint as ckpt_mod
+
+    real_save = ckpt_mod.save_pytree
+
+    def slow_save(path, tree, meta=None):
+        time.sleep(0.3)
+        real_save(path, tree, meta)
+
+    monkeypatch.setattr(ckpt_mod, "save_pytree", slow_save)
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d)
+        ck.save(1, {"w": np.ones((2,), np.float32)})
+        ck.wait()
+        p = ck.latest_path()
+        assert p is not None and os.path.exists(p)
+        ck.close()
+
+
+def test_save_pytree_crash_leaves_no_partial_npz(monkeypatch):
+    """A crash mid-serialization must not leave a truncated archive at the
+    final path — restore sees the previous complete checkpoint or nothing."""
+
+    def exploding_savez(f, **kw):
+        f.write(b"partial garbage")
+        raise RuntimeError("disk full")
+
+    monkeypatch.setattr(np, "savez", exploding_savez)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "ck.npz")
+        with pytest.raises(RuntimeError):
+            save_pytree(p, {"w": np.ones((2,))})
+        assert not os.path.exists(p)
+
+
+def test_save_pytree_leaves_no_tmp_droppings():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "ck.npz")
+        save_pytree(p, {"w": np.ones((2,))}, {"step": 1})
+        assert sorted(os.listdir(d)) == ["ck.npz", "ck.npz.json"]
+
+
+def test_close_with_pending_error_still_stops_worker(monkeypatch):
+    """close() must enqueue the sentinel and join the worker even when a
+    pending write failed — the old code raised out of wait() first and
+    leaked the thread alive forever."""
+    import repro.ckpt.checkpoint as ckpt_mod
+
+    def failing_save(path, tree, meta=None):
+        raise IOError("no space left on device")
+
+    monkeypatch.setattr(ckpt_mod, "save_pytree", failing_save)
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d)
+        ck.save(1, {"w": np.ones((2,), np.float32)})
+        with pytest.raises(IOError):
+            ck.close()
+        ck._thread.join(timeout=5)
+        assert not ck._thread.is_alive()

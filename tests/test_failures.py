@@ -1,0 +1,298 @@
+"""Failure & elasticity engine: seeded traces, forced failovers,
+checkpoint-aware recovery, and the negative-checkable invariants
+(corrupting a post-outage horizon must be *caught* by validate)."""
+import copy
+import dataclasses
+import math
+
+import pytest
+
+from repro.core.control import (
+    ControlConfig,
+    MigrationModel,
+    simulate_horizon,
+)
+from repro.core.dc_selection import JobModel, algorithm1, best_plan
+from repro.core.failures import (
+    CheckpointPolicy,
+    FailureEvent,
+    FailureTrace,
+)
+from repro.core.fleet import ChannelReservation, FleetJob, simulate_fleet
+from repro.core.topology import TopologyMatrix
+from repro.core.validate import InvariantViolation, check_fleet, check_horizon
+
+NAMES = ("use", "ussc", "usw", "asia")
+LAT = [
+    [0, 30, 60, 150],
+    [30, 0, 40, 170],
+    [60, 40, 0, 120],
+    [150, 170, 120, 0],
+]
+
+
+def _world():
+    return TopologyMatrix.from_latency(LAT, dc_names=NAMES)
+
+
+def _job():
+    return JobModel(
+        t_fwd_ms=10.0, act_bytes=1e7, partition_param_bytes=4e8, microbatches=64
+    )
+
+
+def _fleet():
+    return {n: 8 for n in NAMES}
+
+
+def _outage_trace(residual=0.02, recover_ms=None):
+    return FailureTrace(events=(
+        FailureEvent(at_ms=60_000.0, kind="dc_outage", dc="ussc",
+                     recover_ms=recover_ms, residual_frac=residual),
+    ))
+
+
+def _ckpt():
+    return CheckpointPolicy(
+        interval_ms=20_000.0, placement=("use", "usw"), write_bw_gbps=2.0
+    )
+
+
+_KW = dict(P=12, n_iterations=64, C=2)
+
+
+# ---------------------------------------------------------------------------
+# trace model
+# ---------------------------------------------------------------------------
+
+
+def test_trace_sorted_and_timeline_monotone():
+    tr = FailureTrace(events=(
+        FailureEvent(at_ms=50_000.0, kind="dc_join", dc="asia", gpus=4),
+        FailureEvent(at_ms=10_000.0, kind="dc_outage", dc="use",
+                     recover_ms=5_000.0),
+    ))
+    assert [e.at_ms for e in tr.events] == [10_000.0, 50_000.0]
+    tl = tr.timeline()
+    assert [t for t, _, _ in tl] == sorted(t for t, _, _ in tl)
+    # the recovering outage contributes a heal step at t + recover_ms
+    assert ("heal", 15_000.0) in [(op, t) for t, op, _ in tl]
+
+
+def test_generate_is_seed_deterministic():
+    a = FailureTrace.generate(NAMES, seed=7, horizon_ms=300_000.0, n_events=5)
+    b = FailureTrace.generate(NAMES, seed=7, horizon_ms=300_000.0, n_events=5)
+    c = FailureTrace.generate(NAMES, seed=8, horizon_ms=300_000.0, n_events=5)
+    assert a.events == b.events
+    assert a.events != c.events
+
+
+def test_generate_same_seed_same_cascade():
+    """Two runs of the same seeded trace must produce the *identical*
+    migration cascade — modes, reasons, totals."""
+    tr = FailureTrace.generate(
+        NAMES, seed=13, horizon_ms=250_000.0, n_events=3,
+        kinds=("dc_outage", "slice_preemption"),
+    )
+    kw = dict(
+        live_topo=_world(), planned_topo=_world(),
+        migration=MigrationModel(checkpoint=_ckpt()),
+        control=ControlConfig(), failures=tr, **_KW,
+    )
+    r1 = simulate_horizon(_job(), _fleet(), **kw)
+    r2 = simulate_horizon(_job(), _fleet(), **kw)
+    assert r1.total_ms == r2.total_ms
+    assert [(m.mode, m.reason, m.at_ms) for m in r1.migrations] == [
+        (m.mode, m.reason, m.at_ms) for m in r2.migrations
+    ]
+
+
+def test_apply_to_topology_degrades_and_heals():
+    world = _world()
+    tr = _outage_trace(residual=0.05, recover_ms=30_000.0)
+    degraded = tr.apply_to_topology(world)
+    i = world.index_of("use")
+    j = world.index_of("ussc")
+    base = world.link(i, j).bw_gbps
+    sched = degraded.bandwidth_schedule(i, j)
+    assert sched is not None
+    assert sched.bw_at(0.0) == pytest.approx(base)
+    assert sched.bw_at(70_000.0) == pytest.approx(0.05 * base)
+    assert sched.bw_at(100_000.0) == pytest.approx(base)  # healed
+    # untouched pairs keep static physics
+    k = world.index_of("usw")
+    m = world.index_of("asia")
+    assert degraded.bandwidth_schedule(k, m) is None
+
+
+def test_dead_dcs_at():
+    tr = _outage_trace(recover_ms=30_000.0)
+    assert tr.dead_dcs_at(30_000.0) == frozenset()
+    assert tr.dead_dcs_at(70_000.0) == frozenset({"ussc"})
+    assert tr.dead_dcs_at(100_000.0) == frozenset()
+
+
+# ---------------------------------------------------------------------------
+# engine: forced failovers and checkpoint-aware recovery
+# ---------------------------------------------------------------------------
+
+
+def _run(trace, *, checkpoint=None):
+    world = _world()
+    return simulate_horizon(
+        _job(), _fleet(),
+        live_topo=world, planned_topo=world,
+        migration=MigrationModel(checkpoint=checkpoint),
+        control=ControlConfig(), failures=trace, **_KW,
+    )
+
+
+def test_dc_outage_forces_failover_off_dead_dc():
+    tr = _outage_trace()
+    hr = _run(tr)
+    forced = [m for m in hr.migrations if m.reason == "dc_outage:ussc"]
+    assert forced, "outage must force a re-plan"
+    dead = _world().index_of("ussc")
+    # every epoch opened after the failover avoids the dead DC
+    after = [ep for ep in hr.epochs if ep.start_ms >= forced[0].at_ms]
+    assert after and all(dead not in set(ep.spec.stage_dc) for ep in after)
+    assert hr.stats["replans_forced"] >= 1
+    check_horizon(hr, live_topo=tr.apply_to_topology(_world()))
+
+
+def test_checkpoint_restore_beats_live_shipment():
+    """The acceptance ordering at fixed samples: checkpoint-aware
+    recovery < ship-live-weights < static (no reaction)."""
+    tr = _outage_trace()
+    world = _world()
+    ship = _run(tr)
+    ckpt = _run(tr, checkpoint=_ckpt())
+    static = simulate_horizon(
+        _job(), _fleet(), live_topo=tr.apply_to_topology(world),
+        planned_topo=world, **_KW,
+    )
+    assert ship.samples == ckpt.samples == static.samples
+    assert ckpt.total_ms < ship.total_ms < static.total_ms
+    restores = [m for m in ckpt.migrations if m.mode == "restore"]
+    assert restores and restores[0].replay_samples > 0.0
+    # replay is priced, not free: the restore rolled progress back
+    assert ckpt.replay_samples == sum(m.replay_samples for m in ckpt.migrations)
+    check_horizon(ckpt, live_topo=tr.apply_to_topology(world))
+
+
+def test_slice_preemption_forces_replan_when_capacity_lost():
+    tr = FailureTrace(events=(
+        FailureEvent(at_ms=60_000.0, kind="slice_preemption", dc="use", gpus=8),
+    ))
+    hr = _run(tr, checkpoint=_ckpt())
+    forced = [m for m in hr.migrations
+              if m.reason == "slice_preemption:use"]
+    assert forced and hr.stats["replans_forced"] >= 1
+    use = _world().index_of("use")
+    after = [ep for ep in hr.epochs if ep.start_ms >= forced[0].at_ms]
+    assert after and all(use not in set(ep.spec.stage_dc) for ep in after)
+
+
+def test_dc_join_is_opportunistic_not_forced():
+    tr = FailureTrace(events=(
+        FailureEvent(at_ms=60_000.0, kind="dc_join", dc="use", gpus=8),
+    ))
+    hr = _run(tr, checkpoint=_ckpt())
+    assert hr.stats["replans_forced"] == 0
+    for m in hr.migrations:
+        assert m.reason in ("elasticity", "drift")
+    check_horizon(hr, live_topo=_world())
+
+
+def test_exclude_dcs_filters_fleet_and_incumbent():
+    world = _world()
+    job = dataclasses.replace(_job(), topology=world)
+    full = best_plan(algorithm1(job, _fleet(), 12, C=2))
+    surv = best_plan(
+        algorithm1(job, _fleet(), 12, C=2, exclude_dcs=["ussc"],
+                   incumbent_order=full.dc_order)
+    )
+    assert math.isfinite(surv.total_ms)
+    assert "ussc" not in surv.dc_order
+    with pytest.raises(ValueError):
+        algorithm1(job, _fleet(), 12, C=2, exclude_dcs=list(NAMES))
+
+
+# ---------------------------------------------------------------------------
+# negative tests: the invariants must be *falsifiable*
+# ---------------------------------------------------------------------------
+
+
+def test_negative_gpu_busy_in_dead_dc_is_caught():
+    """Stretch the outage window back to t=0 so the pre-failover epoch
+    (which legitimately ran on the soon-to-die DC) suddenly sits inside
+    it — check_horizon must indict the overlap."""
+    tr = _outage_trace()
+    hr = _run(tr, checkpoint=_ckpt())
+    topo = tr.apply_to_topology(_world())
+    check_horizon(hr, live_topo=topo)  # clean before corruption
+    bad = copy.deepcopy(hr)
+    bad.outages[0].t0_ms = 0.0
+    with pytest.raises(InvariantViolation, match="dead DC"):
+        check_horizon(bad, live_topo=topo)
+
+
+def test_negative_understated_replay_is_caught():
+    tr = _outage_trace()
+    hr = _run(tr, checkpoint=_ckpt())
+    topo = tr.apply_to_topology(_world())
+    bad = copy.deepcopy(hr)
+    restore = next(m for m in bad.migrations if m.mode == "restore")
+    restore.replay_samples -= 128.0  # hide some of the rollback debt
+    with pytest.raises(InvariantViolation, match="replay"):
+        check_horizon(bad, live_topo=topo)
+
+
+def test_negative_wrong_restart_sample_is_caught():
+    tr = _outage_trace()
+    hr = _run(tr, checkpoint=_ckpt())
+    topo = tr.apply_to_topology(_world())
+    bad = copy.deepcopy(hr)
+    restore = next(m for m in bad.migrations if m.mode == "restore")
+    nxt = next(ep for ep in bad.epochs if ep.start_ms >= restore.at_ms)
+    nxt.start_sample += 512.0  # pretend the rollback never happened
+    with pytest.raises(InvariantViolation):
+        check_horizon(bad, live_topo=topo)
+
+
+def test_negative_reservation_on_dead_resources_is_caught():
+    world = _world()
+    tr = _outage_trace()
+    jobs = [FleetJob(
+        name="a", job=_job(), gpus=_fleet(), P=12, n_iterations=48, C=2,
+        control=ControlConfig(), checkpoint=_ckpt(),
+    )]
+    fr = simulate_fleet(jobs, world, failures=tr)
+    topo = tr.apply_to_topology(world)
+    check_fleet(fr, topo)  # clean before corruption
+    dead = world.index_of("ussc")
+    w = fr.jobs["a"].outages[0]
+    bad = copy.deepcopy(fr)
+    bad.reservations.append(ChannelReservation(
+        job="a", pair=(world.index_of("use"), dead),
+        t0_ms=w.t0_ms + 1_000.0, t1_ms=w.t0_ms + 5_000.0,
+        rate_gbps=1.0, mult=1.0,
+    ))
+    with pytest.raises(InvariantViolation, match="dead resources"):
+        check_fleet(bad, topo)
+
+
+def test_link_failure_trace_degrades_both_directions():
+    world = _world()
+    tr = FailureTrace(events=(
+        FailureEvent(at_ms=40_000.0, kind="link_failure",
+                     pair=("use", "usw"), recover_ms=20_000.0,
+                     residual_frac=0.1),
+    ))
+    degraded = tr.apply_to_topology(world)
+    i, j = world.index_of("use"), world.index_of("usw")
+    for a, b in ((i, j), (j, i)):
+        s = degraded.bandwidth_schedule(a, b)
+        base = world.link(a, b).bw_gbps
+        assert s.bw_at(50_000.0) == pytest.approx(0.1 * base)
+        assert s.bw_at(70_000.0) == pytest.approx(base)
