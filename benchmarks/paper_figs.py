@@ -7,6 +7,7 @@ simulation exactly as the paper does for its own §6.3–6.5 results.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Tuple
 
 import numpy as np
@@ -177,7 +178,11 @@ def fig13_bubbletea() -> List[Row]:
     res = simulate(spec, GeoTopology(wan_latency_ms=40, multi_tcp=True),
                    policy="atlas", n_pipelines=3)
     lm = PrefillLatencyModel(InferenceModelSpec("llama3-8b", 8e9))
-    ctrl = BubbleTeaController([list(res.bubbles[g]) for g in sorted(res.bubbles)], lm)
+    ctrl = BubbleTeaController(
+        [list(res.bubbles[g]) for g in sorted(res.bubbles)],
+        lm,
+        clock=time.perf_counter,
+    )
     rng = np.random.default_rng(0)
     t = 0.0
     while t < res.iteration_ms:

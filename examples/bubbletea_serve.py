@@ -16,6 +16,8 @@
 
   PYTHONPATH=src python examples/bubbletea_serve.py
 """
+import time
+
 import jax
 import numpy as np
 
@@ -51,6 +53,7 @@ def main():
     ctrl = BubbleTeaController(
         [list(res.bubbles[g]) for g in sorted(res.bubbles)], lm, pp_degree=1,
         tiers={"gold": 1_500.0, "best_effort": 5_000.0},
+        clock=time.perf_counter,
     )
     reqs = ArrivalProcess(
         rate_per_s=1_000.0 / 1.2, horizon_ms=res.iteration_ms, seed=0,

@@ -1,0 +1,32 @@
+"""``repro.analysis`` — static enforcement of the simulator's invariants.
+
+Four AST passes over ``src/`` and ``tests/`` (run as
+``python -m repro.analysis``):
+
+* **units** (``units/*``) — dimensional analysis over identifier
+  suffixes; conversions must go through ``repro.units``.
+* **determinism** (``det/*``) — ``repro.core`` is wall-clock-free,
+  seeded-RNG-only, and never iterates sets in hash order.
+* **concurrency** (``conc/*``) — queue/thread discipline in threaded
+  modules.
+* **api** (``api/*``) — engine calls in tests validate, no exact float
+  equality on computed ``_ms`` arithmetic, no mutable defaults.
+
+Silence one finding with ``# lint: ok[rule]`` on its line; the
+baseline file (``analysis_baseline.json``) is shipped empty and CI
+fails on any new finding.
+"""
+from repro.analysis.base import (  # noqa: F401
+    Finding,
+    Module,
+    all_rules,
+    load_baseline,
+    load_modules,
+    parse_module,
+    run_passes,
+)
+
+
+def analyze_paths(paths):
+    """Parse every ``.py`` under ``paths`` and run all passes."""
+    return run_passes(load_modules(paths))

@@ -1,0 +1,79 @@
+"""CLI: ``python -m repro.analysis [--baseline FILE] [paths...]``.
+
+Exit status 0 when every finding is baselined (or none exist), 1 when
+new findings are present, 2 on usage errors.  Default paths are
+``src`` and ``tests`` relative to the current directory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+from repro.analysis import all_rules, analyze_paths, load_baseline
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="units/determinism/concurrency/API lint over the repo",
+    )
+    ap.add_argument("paths", nargs="*", help="files or directories (default: src tests)")
+    ap.add_argument(
+        "--baseline",
+        metavar="FILE",
+        help="JSON list of known findings to ignore (shipped empty)",
+    )
+    ap.add_argument("--json", action="store_true", help="emit findings as JSON")
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print every rule id and exit"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(all_rules().items()):
+            print(f"{rule:28s} {desc}")
+        return 0
+
+    paths = args.paths or [p for p in ("src", "tests") if os.path.isdir(p)]
+    if not paths:
+        print("error: no paths given and no src/ or tests/ here", file=sys.stderr)
+        return 2
+
+    findings = analyze_paths(paths)
+    if args.baseline:
+        try:
+            known = load_baseline(args.baseline)
+        except (OSError, ValueError, KeyError) as e:
+            print(f"error: cannot read baseline {args.baseline}: {e}", file=sys.stderr)
+            return 2
+        findings = [f for f in findings if f.fingerprint() not in known]
+
+    if args.json:
+        print(
+            json.dumps(
+                [
+                    {
+                        "rule": f.rule,
+                        "path": f.path,
+                        "line": f.line,
+                        "col": f.col,
+                        "message": f.message,
+                    }
+                    for f in findings
+                ],
+                indent=2,
+            )
+        )
+    else:
+        for f in findings:
+            print(f.render())
+        n = len(findings)
+        print(f"repro.analysis: {n} finding{'s' if n != 1 else ''}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,162 @@
+"""API-misuse pass: engine- and test-surface contracts.
+
+* ``api/validate-missing`` — tests that drive an engine
+  (``simulate`` / ``simulate_fleet`` / ``simulate_horizon``) without
+  ``validate=True`` skip the invariant checker and assert on outputs a
+  corrupted schedule could also produce.  Scoped to ``tests/``; calls
+  on the frozen reference engine (``ref.simulate`` /
+  ``reference.simulate``) are exempt — it predates the ``validate``
+  kwarg and is itself the differential oracle.
+
+* ``api/float-eq-ms`` — ``==``/``!=`` between a *computed* ``_ms``
+  expression and anything else: float arithmetic on wall-clock values
+  is not exact, use ``pytest.approx`` / ``math.isclose``.  Comparing
+  two stored ``_ms`` values verbatim (``r1.total_ms == r2.total_ms``)
+  is a differential/determinism identity and allowed, as are literal
+  sentinels (``t_ms == 0.0``) and ``pytest.approx`` comparisons.
+
+* ``api/mutable-default`` — ``def f(x=[], y={}, z=set())`` shares one
+  object across calls; the classic aliasing bug.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence
+
+from repro.analysis.base import Finding, Module, SignatureRegistry
+
+RULES = {
+    "api/validate-missing": "engine call in tests without validate=True",
+    "api/float-eq-ms": "float ==/!= on computed _ms values "
+    "(use pytest.approx/math.isclose)",
+    "api/mutable-default": "mutable default argument",
+}
+
+_ENGINE_FUNCS = {"simulate", "simulate_fleet", "simulate_horizon"}
+_REFERENCE_RECEIVERS = {"ref", "reference"}
+
+
+def _func_name(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _receiver_name(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+        return node.value.id
+    return None
+
+
+def _contains_ms_identifier(node: ast.expr) -> bool:
+    for sub in ast.walk(node):
+        name = None
+        if isinstance(sub, ast.Name):
+            name = sub.id
+        elif isinstance(sub, ast.Attribute):
+            name = sub.attr
+        if name is not None and (name.lower().endswith("_ms") or name.lower() == "ms"):
+            return True
+    return False
+
+
+def _is_arithmetic(node: ast.expr) -> bool:
+    return isinstance(node, ast.BinOp) and isinstance(
+        node.op, (ast.Add, ast.Sub, ast.Mult, ast.Div, ast.FloorDiv, ast.Mod)
+    )
+
+
+def _is_approx_call(node: ast.expr) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and _func_name(node.func) in ("approx", "isclose")
+    )
+
+
+def _is_literal(node: ast.expr) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    return isinstance(node, ast.UnaryOp) and isinstance(node.operand, ast.Constant)
+
+
+def _is_mutable_literal(node: ast.expr) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id in ("list", "dict", "set", "bytearray", "defaultdict", "deque")
+    return False
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, mod: Module):
+        self.mod = mod
+        self.findings: List[Finding] = []
+
+    def emit(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(
+            Finding(rule, self.mod.path, node.lineno, node.col_offset, message)
+        )
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _func_name(node.func)
+        if (
+            self.mod.is_tests
+            and name in _ENGINE_FUNCS
+            and _receiver_name(node.func) not in _REFERENCE_RECEIVERS
+            and not any(kw.arg == "validate" for kw in node.keywords)
+        ):
+            self.emit(
+                "api/validate-missing",
+                node,
+                f"{name}() in a test without validate=True "
+                "(the invariant checker is off)",
+            )
+        self.generic_visit(node)
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        operands = [node.left] + list(node.comparators)
+        for i, op in enumerate(node.ops):
+            if not isinstance(op, (ast.Eq, ast.NotEq)):
+                continue
+            left, right = operands[i], operands[i + 1]
+            if _is_approx_call(left) or _is_approx_call(right):
+                continue
+            if _is_literal(left) or _is_literal(right):
+                continue  # sentinel checks (t_ms == 0.0) are intentional
+            computed = (_is_arithmetic(left) and _contains_ms_identifier(left)) or (
+                _is_arithmetic(right) and _contains_ms_identifier(right)
+            )
+            if computed:
+                self.emit(
+                    "api/float-eq-ms",
+                    node,
+                    "exact ==/!= on computed _ms arithmetic; "
+                    "use pytest.approx or math.isclose",
+                )
+        self.generic_visit(node)
+
+    def _check_defaults(self, node) -> None:
+        a = node.args
+        for default in list(a.defaults) + [d for d in a.kw_defaults if d is not None]:
+            if _is_mutable_literal(default):
+                self.emit(
+                    "api/mutable-default",
+                    default,
+                    f"mutable default argument in {node.name}() "
+                    "(shared across calls; default to None)",
+                )
+        self.generic_visit(node)
+
+    visit_FunctionDef = _check_defaults
+    visit_AsyncFunctionDef = _check_defaults
+
+
+def run(modules: Sequence[Module], registry: SignatureRegistry) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in modules:
+        checker = _Checker(mod)
+        checker.visit(mod.tree)
+        findings.extend(checker.findings)
+    return findings

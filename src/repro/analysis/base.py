@@ -1,0 +1,193 @@
+"""Shared infrastructure for the ``repro.analysis`` lint passes.
+
+Each pass consumes parsed :class:`Module` objects and yields
+:class:`Finding`s.  Findings can be silenced two ways:
+
+* an inline ``# lint: ok[rule]`` comment on the offending line (several
+  rules comma-separated; a pass prefix like ``units`` silences every
+  ``units/*`` rule on that line), or
+* a baseline file (``analysis_baseline.json``) listing known findings —
+  shipped empty: the tree is expected to lint clean.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+_SUPPRESS_RE = re.compile(r"#\s*lint:\s*ok\[([^\]]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: ``rule`` is ``<pass>/<check>`` (e.g. ``units/scale-mismatch``)."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def fingerprint(self) -> Tuple[str, str, int]:
+        return (self.rule, self.path, self.line)
+
+
+@dataclasses.dataclass
+class Module:
+    """A parsed source file plus everything passes need to scope rules."""
+
+    path: str  # as given (repo-relative when invoked from the repo root)
+    source: str
+    tree: ast.Module
+    suppressions: Dict[int, Set[str]]  # line -> suppressed rule names/prefixes
+
+    @property
+    def is_core(self) -> bool:
+        norm = self.path.replace(os.sep, "/")
+        return "repro/core/" in norm
+
+    @property
+    def is_tests(self) -> bool:
+        norm = self.path.replace(os.sep, "/")
+        return norm.startswith("tests/") or "/tests/" in norm
+
+    @property
+    def is_units_module(self) -> bool:
+        """The sanctioned conversion site (``repro/units.py``)."""
+        norm = self.path.replace(os.sep, "/")
+        return norm.endswith("repro/units.py")
+
+    @property
+    def is_analysis_module(self) -> bool:
+        norm = self.path.replace(os.sep, "/")
+        return "repro/analysis/" in norm
+
+    def suppressed(self, finding: Finding) -> bool:
+        rules = self.suppressions.get(finding.line)
+        if not rules:
+            return False
+        for r in rules:
+            if finding.rule == r or finding.rule.startswith(r + "/"):
+                return True
+        return False
+
+
+def _parse_suppressions(source: str) -> Dict[int, Set[str]]:
+    out: Dict[int, Set[str]] = {}
+    # tokenize so string literals containing "# lint: ok[...]" don't count
+    try:
+        import io
+
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type == tokenize.COMMENT:
+                m = _SUPPRESS_RE.search(tok.string)
+                if m:
+                    rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                    out.setdefault(tok.start[0], set()).update(rules)
+    except tokenize.TokenError:
+        for i, text in enumerate(source.splitlines(), 1):
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                out.setdefault(i, set()).update(rules)
+    return out
+
+
+def parse_module(path: str, source: Optional[str] = None) -> Module:
+    if source is None:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+    tree = ast.parse(source, filename=path)
+    return Module(path, source, tree, _parse_suppressions(source))
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs if d != "__pycache__")
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def load_modules(paths: Sequence[str]) -> List[Module]:
+    return [parse_module(p) for p in iter_python_files(paths)]
+
+
+# --- call/function signature registry (for call-argument unit binding) ----
+
+#: name -> parameter-name tuple (leading self/cls stripped).  Only
+#: functions whose every definition across the analyzed tree agrees on
+#: the parameter list are bindable — ambiguous names map to None.
+SignatureRegistry = Dict[str, Optional[Tuple[str, ...]]]
+
+
+def build_signature_registry(modules: Sequence[Module]) -> SignatureRegistry:
+    reg: SignatureRegistry = {}
+    for mod in modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            a = node.args
+            if a.vararg or a.kwarg or a.posonlyargs:
+                params: Optional[Tuple[str, ...]] = None
+            else:
+                names = [arg.arg for arg in a.args]
+                if names and names[0] in ("self", "cls"):
+                    names = names[1:]
+                params = tuple(names) + tuple(arg.arg for arg in a.kwonlyargs)
+            if node.name in reg and reg[node.name] != params:
+                reg[node.name] = None  # ambiguous across defs
+            else:
+                reg[node.name] = params
+    return reg
+
+
+# --- baseline -------------------------------------------------------------
+
+
+def load_baseline(path: str) -> Set[Tuple[str, str, int]]:
+    with open(path, encoding="utf-8") as f:
+        entries = json.load(f)
+    if not isinstance(entries, list):
+        raise ValueError(f"baseline {path}: expected a JSON list")
+    out: Set[Tuple[str, str, int]] = set()
+    for e in entries:
+        out.add((e["rule"], e["path"], int(e["line"])))
+    return out
+
+
+def run_passes(modules: Sequence[Module]) -> List[Finding]:
+    """Run every pass over ``modules``; inline suppressions applied."""
+    from repro.analysis import api_pass, concurrency_pass, determinism_pass, units_pass
+
+    registry = build_signature_registry(modules)
+    findings: List[Finding] = []
+    by_path = {m.path: m for m in modules}
+    for pass_mod in (units_pass, determinism_pass, concurrency_pass, api_pass):
+        findings.extend(pass_mod.run(modules, registry))
+    kept = [f for f in findings if not by_path[f.path].suppressed(f)]
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return kept
+
+
+def all_rules() -> Dict[str, str]:
+    """rule id -> one-line description, aggregated from every pass."""
+    from repro.analysis import api_pass, concurrency_pass, determinism_pass, units_pass
+
+    out: Dict[str, str] = {}
+    for pass_mod in (units_pass, determinism_pass, concurrency_pass, api_pass):
+        out.update(pass_mod.RULES)
+    return out

@@ -1,0 +1,271 @@
+"""Concurrency pass: thread/queue discipline in threaded modules.
+
+Applies to any analyzed module that imports ``threading`` or ``queue``
+(today: ``repro/ckpt/checkpoint.py``).  Three checks, each the static
+form of a bug this repo has already shipped or reviewed:
+
+* ``conc/queue-empty-poll`` — ``Queue.empty()`` is a snapshot, not a
+  synchronization primitive: the PR-7 checkpointer race polled
+  ``empty()`` and returned while the worker was still serializing the
+  dequeued item.  Completion must go through ``join()``/``task_done()``
+  or an explicit sentinel/event.
+
+* ``conc/unlocked-shared-write`` — an attribute written both by a
+  worker-thread function (a ``threading.Thread(target=...)``) and by
+  other methods of the same class, with neither write under a
+  ``with <lock>:`` block, is a data race.  ``__init__`` writes are
+  exempt (setup happens before the thread starts).
+
+* ``conc/thread-no-join`` — a module that starts a thread but never
+  joins anything leaks the worker: there is no shutdown path, so
+  errors surface never and interpreters hang or lose writes at exit.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set
+
+from repro.analysis.base import Finding, Module, SignatureRegistry
+
+RULES = {
+    "conc/queue-empty-poll": "Queue.empty() used as a completion signal "
+    "(use join()/task_done() or a sentinel)",
+    "conc/unlocked-shared-write": "attribute written by both worker thread "
+    "and other methods without a lock",
+    "conc/thread-no-join": "thread started but never joined "
+    "(no shutdown/sentinel path)",
+}
+
+
+def _imports_threading(mod: Module) -> bool:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            if any(a.name in ("threading", "queue") for a in node.names):
+                return True
+        elif isinstance(node, ast.ImportFrom):
+            if node.module in ("threading", "queue"):
+                return True
+    return False
+
+
+def _attr_chain(node: ast.expr) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_queue_ctor(node: ast.expr) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    chain = _attr_chain(node.func)
+    return chain is not None and chain.split(".")[-1] in (
+        "Queue",
+        "LifoQueue",
+        "PriorityQueue",
+        "SimpleQueue",
+    )
+
+
+def _is_lock_ctor(node: ast.expr) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    chain = _attr_chain(node.func)
+    return chain is not None and chain.split(".")[-1] in (
+        "Lock",
+        "RLock",
+        "Condition",
+        "Semaphore",
+        "BoundedSemaphore",
+    )
+
+
+class _ModuleFacts(ast.NodeVisitor):
+    """Collect queue-typed names, lock-typed names, thread targets and
+    whether any ``.join(`` appears."""
+
+    def __init__(self) -> None:
+        self.queue_names: Set[str] = set()  # "q", "self._q" chains
+        self.lock_names: Set[str] = set()
+        self.thread_targets: Set[str] = set()  # function names passed as target=
+        self.thread_ctors: List[ast.Call] = []
+        self.has_join = False
+        self.starts_thread = False
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            chain = _attr_chain(t)
+            if chain is None:
+                continue
+            if _is_queue_ctor(node.value):
+                self.queue_names.add(chain)
+            if _is_lock_ctor(node.value):
+                self.lock_names.add(chain)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        chain = _attr_chain(node.target)
+        if chain is not None and node.value is not None:
+            if _is_queue_ctor(node.value):
+                self.queue_names.add(chain)
+            if _is_lock_ctor(node.value):
+                self.lock_names.add(chain)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        if chain is not None:
+            last = chain.split(".")[-1]
+            if last == "join":
+                self.has_join = True
+            if last == "start":
+                self.starts_thread = self.starts_thread or True
+            if last == "Thread":
+                self.thread_ctors.append(node)
+                for kw in node.keywords:
+                    if kw.arg == "target":
+                        target_chain = _attr_chain(kw.value)
+                        if target_chain is not None:
+                            self.thread_targets.add(target_chain.split(".")[-1])
+        self.generic_visit(node)
+
+
+class _AttrWrites(ast.NodeVisitor):
+    """self.<attr> writes inside one function, split by lock protection."""
+
+    def __init__(self, lock_names: Set[str]) -> None:
+        self.lock_names = lock_names
+        self.writes: Dict[str, List[ast.AST]] = {}
+        self._lock_depth = 0
+
+    def visit_With(self, node: ast.With) -> None:
+        locked = any(
+            _attr_chain(item.context_expr) in self.lock_names
+            or (
+                isinstance(item.context_expr, ast.Call)
+                and _attr_chain(item.context_expr.func) in self.lock_names
+            )
+            for item in node.items
+        )
+        if locked:
+            self._lock_depth += 1
+        self.generic_visit(node)
+        if locked:
+            self._lock_depth -= 1
+
+    def _record(self, target: ast.expr) -> None:
+        if self._lock_depth > 0:
+            return
+        if (
+            isinstance(target, ast.Attribute)
+            and isinstance(target.value, ast.Name)
+            and target.value.id == "self"
+        ):
+            self.writes.setdefault(target.attr, []).append(target)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._record(t)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._record(node.target)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self._record(node.target)
+        self.generic_visit(node)
+
+
+def _check_class(
+    cls: ast.ClassDef, facts: _ModuleFacts, mod: Module, findings: List[Finding]
+) -> None:
+    methods = {
+        n.name: n
+        for n in cls.body
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+    workers = [m for name, m in methods.items() if name in facts.thread_targets]
+    if not workers:
+        return
+    worker_names = {m.name for m in workers}
+    worker_writes: Dict[str, List[ast.AST]] = {}
+    other_writes: Set[str] = set()
+    for name, m in methods.items():
+        aw = _AttrWrites(facts.lock_names)
+        aw.visit(m)
+        if name in worker_names:
+            for attr, sites in aw.writes.items():
+                worker_writes.setdefault(attr, []).extend(sites)
+        elif name != "__init__":  # setup precedes thread start
+            other_writes.update(aw.writes)
+    for attr, sites in sorted(worker_writes.items()):
+        if attr in other_writes:
+            for site in sites:
+                findings.append(
+                    Finding(
+                        "conc/unlocked-shared-write",
+                        mod.path,
+                        site.lineno,
+                        site.col_offset,
+                        f"self.{attr} written by worker thread and other "
+                        "methods without lock/queue mediation",
+                    )
+                )
+
+
+class _EmptyPoll(ast.NodeVisitor):
+    def __init__(self, mod: Module, queue_names: Set[str], findings: List[Finding]):
+        self.mod = mod
+        self.queue_names = queue_names
+        self.findings = findings
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "empty":
+            chain = _attr_chain(node.func.value)
+            tail = chain.split(".")[-1] if chain else ""
+            if (
+                chain in self.queue_names
+                or tail in ("q", "_q")
+                or tail.endswith("queue")
+            ):
+                self.findings.append(
+                    Finding(
+                        "conc/queue-empty-poll",
+                        self.mod.path,
+                        node.lineno,
+                        node.col_offset,
+                        f"{chain or '<queue>'}.empty() is a racy snapshot; "
+                        "use join()/task_done() or a sentinel",
+                    )
+                )
+        self.generic_visit(node)
+
+
+def run(modules: Sequence[Module], registry: SignatureRegistry) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in modules:
+        if mod.is_tests or not _imports_threading(mod):
+            continue
+        facts = _ModuleFacts()
+        facts.visit(mod.tree)
+        _EmptyPoll(mod, facts.queue_names, findings).visit(mod.tree)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                _check_class(node, facts, mod, findings)
+        if facts.thread_ctors and facts.starts_thread and not facts.has_join:
+            ctor = facts.thread_ctors[0]
+            findings.append(
+                Finding(
+                    "conc/thread-no-join",
+                    mod.path,
+                    ctor.lineno,
+                    ctor.col_offset,
+                    "thread started but module has no join()/shutdown path",
+                )
+            )
+    return findings

@@ -1,0 +1,248 @@
+"""Determinism pass: ``repro.core`` traces are pure functions of a seed.
+
+Two families of checks, both scoped to ``src/repro/core/``:
+
+* **Nondeterministic sources** — wall-clock reads (``time.time``,
+  ``time.perf_counter``, ``datetime.now``, ...) and unseeded RNG
+  (``random.Random()`` with no seed, module-level ``random.*``
+  functions that hit the shared global RNG, ``np.random.*`` legacy
+  API).  ``random.Random(seed)`` is the sanctioned idiom.
+
+* **Hash-order iteration** — iterating a ``set``/``frozenset`` in a
+  planner makes its output depend on ``PYTHONHASHSEED`` for string
+  elements.  Any direct iteration (``for``, comprehensions) over a
+  set-valued expression must go through ``sorted(...)``; ``list()`` /
+  ``tuple()`` / ``iter()`` / ``reversed()`` merely materialize the
+  hash order and do not sanction it.  Membership tests, ``len``,
+  ``min``/``max``/``sum``/``any``/``all`` are order-insensitive and
+  exempt.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set
+
+from repro.analysis.base import Finding, Module, SignatureRegistry
+
+RULES = {
+    "det/wall-clock": "wall-clock read inside repro.core "
+    "(inject a clock instead)",
+    "det/unseeded-rng": "unseeded or global RNG inside repro.core "
+    "(use random.Random(seed))",
+    "det/set-iteration": "iteration over a set in hash order inside "
+    "repro.core (wrap in sorted(...))",
+}
+
+_WALL_CLOCK_TIME_ATTRS = {
+    "time",
+    "time_ns",
+    "perf_counter",
+    "perf_counter_ns",
+    "monotonic",
+    "monotonic_ns",
+    "process_time",
+    "process_time_ns",
+}
+_WALL_CLOCK_DATETIME_ATTRS = {"now", "utcnow", "today"}
+#: module-level random.* functions that mutate/read the global RNG
+_GLOBAL_RNG_FUNCS = {
+    "random",
+    "randint",
+    "randrange",
+    "uniform",
+    "choice",
+    "choices",
+    "shuffle",
+    "sample",
+    "gauss",
+    "normalvariate",
+    "expovariate",
+    "betavariate",
+    "seed",
+    "getrandbits",
+    "triangular",
+}
+#: functions whose consumption of an iterable is order-insensitive
+_ORDER_FREE_SINKS = {"sorted", "len", "min", "max", "sum", "any", "all", "set", "frozenset"}
+#: wrappers that preserve (do not sanction) the underlying hash order
+_ORDER_PRESERVING = {"list", "tuple", "iter", "reversed"}
+
+
+def _dotted(node: ast.expr) -> Optional[str]:
+    """'a.b.c' for a pure attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _SetTracker(ast.NodeVisitor):
+    """Per-function inference of which local names hold sets."""
+
+    def __init__(self) -> None:
+        self.set_names: Set[str] = set()
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if _is_set_expr(node.value, self.set_names):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.set_names.add(t.id)
+        else:
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.set_names.discard(t.id)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        ann = ast.unparse(node.annotation) if node.annotation is not None else ""
+        if isinstance(node.target, ast.Name):
+            if ann.split("[")[0] in ("set", "Set", "frozenset", "FrozenSet", "typing.Set"):
+                self.set_names.add(node.target.id)
+            elif node.value is not None and _is_set_expr(node.value, self.set_names):
+                self.set_names.add(node.target.id)
+        self.generic_visit(node)
+
+
+def _is_set_expr(node: ast.expr, set_names: Set[str]) -> bool:
+    """Is this expression set-valued (hash-ordered when iterated)?"""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in set_names
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Name):
+            if node.func.id in ("set", "frozenset"):
+                return True
+            if node.func.id in _ORDER_PRESERVING and node.args:
+                return _is_set_expr(node.args[0], set_names)
+        if isinstance(node.func, ast.Attribute):
+            # s.union(...), s.copy(), ... on a set-typed receiver
+            if node.func.attr in (
+                "union", "intersection", "difference", "symmetric_difference", "copy"
+            ):
+                return _is_set_expr(node.func.value, set_names)
+        return False
+    if isinstance(node, ast.BinOp) and isinstance(
+        node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)
+    ):
+        return _is_set_expr(node.left, set_names) or _is_set_expr(node.right, set_names)
+    return False
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, mod: Module):
+        self.mod = mod
+        self.findings: List[Finding] = []
+        self._from_imports: Dict[str, str] = {}  # local name -> "module.orig"
+        self._set_scopes: List[Set[str]] = [set()]
+
+    def emit(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(
+            Finding(rule, self.mod.path, node.lineno, node.col_offset, message)
+        )
+
+    # --- imports ----------------------------------------------------------
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        for alias in node.names:
+            local = alias.asname or alias.name
+            self._from_imports[local] = f"{node.module}.{alias.name}"
+            if node.module == "time" and alias.name in _WALL_CLOCK_TIME_ATTRS:
+                self.emit(
+                    "det/wall-clock", node,
+                    f"imports wall clock time.{alias.name} into repro.core",
+                )
+            if node.module == "random" and alias.name in _GLOBAL_RNG_FUNCS:
+                self.emit(
+                    "det/unseeded-rng", node,
+                    f"imports global-RNG random.{alias.name} into repro.core",
+                )
+        self.generic_visit(node)
+
+    # --- calls ------------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+        if dotted is not None:
+            self._check_call(node, dotted)
+        self.generic_visit(node)
+
+    def _check_call(self, node: ast.Call, dotted: str) -> None:
+        parts = dotted.split(".")
+        # wall clocks
+        if len(parts) == 2 and parts[0] == "time" and parts[1] in _WALL_CLOCK_TIME_ATTRS:
+            self.emit("det/wall-clock", node, f"wall-clock read {dotted}()")
+        if parts[-1] in _WALL_CLOCK_DATETIME_ATTRS and "datetime" in parts[:-1]:
+            self.emit("det/wall-clock", node, f"wall-clock read {dotted}()")
+        if len(parts) == 1 and parts[0] in self._from_imports:
+            orig = self._from_imports[parts[0]]
+            mod, _, name = orig.rpartition(".")
+            if mod == "time" and name in _WALL_CLOCK_TIME_ATTRS:
+                self.emit("det/wall-clock", node, f"wall-clock read {orig}()")
+            if mod == "random" and name in _GLOBAL_RNG_FUNCS:
+                self.emit("det/unseeded-rng", node, f"global RNG {orig}()")
+        # RNG
+        if dotted == "random.Random" and not node.args and not node.keywords:
+            self.emit(
+                "det/unseeded-rng", node,
+                "random.Random() without a seed",
+            )
+        if len(parts) == 2 and parts[0] == "random" and parts[1] in _GLOBAL_RNG_FUNCS:
+            self.emit("det/unseeded-rng", node, f"global RNG {dotted}()")
+        if len(parts) >= 3 and parts[0] in ("np", "numpy") and parts[1] == "random":
+            if parts[2] == "default_rng":
+                if not node.args and not node.keywords:
+                    self.emit(
+                        "det/unseeded-rng", node,
+                        "np.random.default_rng() without a seed",
+                    )
+            else:
+                self.emit(
+                    "det/unseeded-rng", node,
+                    f"legacy global numpy RNG {dotted}()",
+                )
+
+    # --- set iteration ----------------------------------------------------
+
+    def _enter_function(self, node) -> None:
+        tracker = _SetTracker()
+        tracker.visit(node)
+        self._set_scopes.append(tracker.set_names)
+        self.generic_visit(node)
+        self._set_scopes.pop()
+
+    visit_FunctionDef = _enter_function
+    visit_AsyncFunctionDef = _enter_function
+
+    def _set_names(self) -> Set[str]:
+        return self._set_scopes[-1]
+
+    def _check_iter(self, node: ast.expr) -> None:
+        if _is_set_expr(node, self._set_names()):
+            self.emit(
+                "det/set-iteration", node,
+                "iterates a set in hash order; wrap in sorted(...)",
+            )
+
+    def visit_For(self, node: ast.For) -> None:
+        self._check_iter(node.iter)
+        self.generic_visit(node)
+
+    def visit_comprehension(self, node: ast.comprehension) -> None:
+        self._check_iter(node.iter)
+        self.generic_visit(node)
+
+
+def run(modules: Sequence[Module], registry: SignatureRegistry) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in modules:
+        if not mod.is_core:
+            continue
+        checker = _Checker(mod)
+        checker.visit(mod.tree)
+        findings.extend(checker.findings)
+    return findings

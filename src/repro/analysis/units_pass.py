@@ -1,0 +1,681 @@
+"""Units pass: dimensional analysis over identifier suffixes.
+
+Every quantity in the repo carries its unit in its name (``_ms``,
+``_bytes``, ``_gbps``, ...).  This pass turns that convention into a
+checkable type system: each known suffix maps to a *dimension vector*
+over (time, data, samples) plus a *scale* relative to the canonical
+units — milliseconds, bits, samples.  A value ``x`` in unit ``u``
+represents ``x * scale(u)`` canonical units, so
+
+* multiplication adds dimensions and multiplies scales,
+* division subtracts dimensions and divides scales,
+* multiplying by a conversion constant ``c`` (8, 1e3, 1e6, 1e9, ...)
+  divides the scale by ``c`` (the value grew by ``c``; the quantity
+  didn't),
+* addition/subtraction/comparison requires equal dimensions *and*
+  equal scales.
+
+Under this algebra the sanctioned conversions come out exactly right —
+``nbytes * 8.0 / (bw_gbps * 1e9) * 1e3`` has dimension *time* at scale
+1 (milliseconds) — and the classic WAN-model bugs come out wrong:
+``x_bits = y_bytes`` is a data/data scale mismatch of 8 (missing ×8),
+``cap_bits = seg_ms * bw_gbps`` is off by 1e6 (Gbit/s is 1e6 bits per
+ms).  Unknown names poison an expression to *unknown* and suppress all
+checks — the pass only speaks when every operand is known.
+
+Checks:
+
+``units/mixed-units``     cross-dimension ``+``/``-``/``%``/comparison
+                          (also min/max arguments).
+``units/scale-mismatch``  same dimension, wrong factor — in arithmetic,
+                          assignments to suffixed names, returns from
+                          suffixed functions, and call-argument binding
+                          against suffixed parameters.
+``units/inline-conversion``  conversion constants (8, 1e6, 1e9) applied
+                          to dimensioned operands inside ``repro.core``
+                          anywhere but ``repro/units.py`` — conversions
+                          must go through the sanctioned helpers.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.base import Finding, Module, SignatureRegistry
+
+RULES = {
+    "units/mixed-units": "addition/comparison across different dimensions",
+    "units/scale-mismatch": "same dimension combined at different scales "
+    "(ms vs s, bytes vs bits, Gbps without the 1e6)",
+    "units/inline-conversion": "conversion arithmetic outside repro/units.py "
+    "(use the sanctioned helpers)",
+}
+
+# dimension vector: (time, data, samples)
+Dim = Tuple[int, int, int]
+_T: Dim = (1, 0, 0)
+_D: Dim = (0, 1, 0)
+_S: Dim = (0, 0, 1)
+_RATE: Dim = (-1, 1, 0)  # data per time
+_NONE: Dim = (0, 0, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Unit:
+    dims: Dim
+    scale: float  # canonical units (ms / bits / samples) per 1 of this unit
+
+
+DIMLESS = Unit(_NONE, 1.0)
+
+
+class _Neutral:
+    """A zero literal (or empty accumulator): unifies with any unit."""
+
+
+NEUTRAL = _Neutral()
+UNKNOWN = None
+
+#: suffix token -> unit.  Canonical: time=ms, data=bit, samples=sample.
+SUFFIX_UNITS: Dict[str, Unit] = {
+    "ms": Unit(_T, 1.0),
+    "s": Unit(_T, 1e3),
+    "us": Unit(_T, 1e-3),
+    "hours": Unit(_T, 3.6e6),
+    "bytes": Unit(_D, 8.0),
+    "nbytes": Unit(_D, 8.0),
+    "bits": Unit(_D, 1.0),
+    "gb": Unit(_D, 8e9),
+    "gbps": Unit(_RATE, 1e6),  # 1 Gbit/s = 1e6 bits/ms
+    "samples": Unit(_S, 1.0),
+    "frac": DIMLESS,
+    "mult": DIMLESS,
+}
+#: compound suffixes, matched before the last-token rule.  GB/s-rated
+#: local links (NVLink/PCIe) move 8e6 bits per ms per unit.
+COMPOUND_SUFFIX_UNITS: Dict[str, Unit] = {
+    "gbps_bytes": Unit(_RATE, 8e6),
+}
+
+#: constants whose appearance in a product is a unit conversion, not a
+#: count (scale bookkeeping folds them; anything else is a pure number).
+CONVERSION_CONSTANTS = (8.0, 1e3, 1e6, 1e9, 1e12, 3.6e6)
+#: the subset whose use next to a dimensioned operand means "inline
+#: unit conversion" for the units/inline-conversion rule.
+INLINE_CONVERSION_CONSTANTS = (8.0, 1e6, 1e9)
+
+_UNIT_NAMES = {
+    (_T, 1.0): "ms",
+    (_T, 1e3): "s",
+    (_T, 1e-3): "us",
+    (_T, 3.6e6): "hours",
+    (_D, 1.0): "bits",
+    (_D, 8.0): "bytes",
+    (_D, 8e9): "GB",
+    (_RATE, 1e6): "Gbit/s",
+    (_RATE, 8e6): "GB/s",
+    (_S, 1.0): "samples",
+    (_NONE, 1.0): "dimensionless",
+}
+
+
+def describe(u: Unit) -> str:
+    for (dims, scale), name in _UNIT_NAMES.items():
+        if u.dims == dims and math.isclose(u.scale, scale, rel_tol=1e-9):
+            return name
+    return f"dims(time,data,samples)={u.dims} scale={u.scale:g}"
+
+
+def unit_of_name(name: str) -> Optional[Unit]:
+    """Unit implied by an identifier, or UNKNOWN."""
+    low = name.lower()
+    if "_per_" in low:
+        return UNKNOWN  # rates-by-convention (rate_per_s, kv_bytes_per_token)
+    for suf, u in COMPOUND_SUFFIX_UNITS.items():
+        if low == suf or low.endswith("_" + suf):
+            return u
+    if "_" in low:
+        token = low.rsplit("_", 1)[-1]
+        if token in SUFFIX_UNITS:
+            return SUFFIX_UNITS[token]
+    elif low in SUFFIX_UNITS and len(low) > 1:
+        # whole-name matches only for unambiguous multi-char names
+        # ("ms", "nbytes", ...); a bare ``s`` is a loop variable or a
+        # schedule, not seconds
+        return SUFFIX_UNITS[low]
+    # count-like names are dimensionless multipliers
+    if low.startswith(("n_", "num_")) or low.endswith("_count"):
+        return DIMLESS
+    if len(name) == 1 and name.isupper():
+        return DIMLESS  # D, P, M, ... — loop/shape counts by convention
+    return UNKNOWN
+
+
+def _is_zero(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Constant)
+        and isinstance(node.value, (int, float))
+        and node.value == 0
+    )
+
+
+def _const_value(node: ast.AST) -> Optional[float]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, (int, float)) \
+            and not isinstance(node.value, bool):
+        return float(node.value)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = _const_value(node.operand)
+        return None if v is None else -v
+    if isinstance(node, ast.BinOp):
+        # fold constant-only arithmetic (``1.0 / 8.0``, ``6144 * 8192 * 2``)
+        lv, rv = _const_value(node.left), _const_value(node.right)
+        if lv is not None and rv is not None:
+            try:
+                if isinstance(node.op, ast.Add):
+                    return lv + rv
+                if isinstance(node.op, ast.Sub):
+                    return lv - rv
+                if isinstance(node.op, ast.Mult):
+                    return lv * rv
+                if isinstance(node.op, ast.Div):
+                    return lv / rv
+                if isinstance(node.op, ast.FloorDiv):
+                    return float(lv // rv)
+                if isinstance(node.op, ast.Pow):
+                    return float(lv ** rv)
+            except (ZeroDivisionError, OverflowError, ValueError):
+                return None
+    return None
+
+
+def _is_conversion_const(v: float, table=CONVERSION_CONSTANTS) -> bool:
+    return any(math.isclose(abs(v), c, rel_tol=1e-12) for c in table)
+
+
+class FileChecker:
+    def __init__(self, mod: Module, registry: SignatureRegistry):
+        self.mod = mod
+        self.registry = registry
+        self.findings: List[Finding] = []
+
+    def emit(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(
+            Finding(rule, self.mod.path, node.lineno, node.col_offset, message)
+        )
+
+    def check(self) -> List[Finding]:
+        self._check_scope(self.mod.tree.body, {})
+        return self.findings
+
+    # --- scopes -----------------------------------------------------------
+
+    def _check_scope(self, body: Sequence[ast.stmt], env: Dict[str, object]) -> None:
+        for stmt in body:
+            self._stmt(stmt, env)
+
+    def _function(self, node: ast.FunctionDef) -> None:
+        env: Dict[str, object] = {}
+        a = node.args
+        for arg in list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs):
+            u = unit_of_name(arg.arg)
+            if u is not UNKNOWN:
+                env[arg.arg] = u
+        self._ret_unit = unit_of_name(node.name)
+        self._ret_name = node.name
+        self._check_scope(node.body, env)
+
+    # --- statements -------------------------------------------------------
+
+    def _stmt(self, stmt: ast.stmt, env: Dict[str, object]) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            outer = (getattr(self, "_ret_unit", UNKNOWN), getattr(self, "_ret_name", ""))
+            self._function(stmt)
+            self._ret_unit, self._ret_name = outer
+        elif isinstance(stmt, ast.ClassDef):
+            self._check_scope(stmt.body, {})
+        elif isinstance(stmt, ast.Assign):
+            rhs = self.eval(stmt.value, env)
+            for tgt in stmt.targets:
+                self._bind_target(tgt, stmt.value, rhs, env)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                rhs = self.eval(stmt.value, env)
+                self._bind_target(stmt.target, stmt.value, rhs, env)
+        elif isinstance(stmt, ast.AugAssign):
+            cur = self._load_unit(stmt.target, env)
+            rhs = self.eval(stmt.value, env)
+            if isinstance(stmt.op, (ast.Add, ast.Sub)):
+                # literal adjustments (x_ms += 5.0) make no unit claim
+                if _const_value(stmt.value) is not None:
+                    rhs = NEUTRAL
+                res = self._unify(cur, rhs, stmt, "augmented assignment")
+            elif isinstance(stmt.op, (ast.Mult, ast.Div)):
+                res = self._combine_mult(cur, rhs, isinstance(stmt.op, ast.Div))
+            else:
+                res = UNKNOWN
+            if isinstance(stmt.target, ast.Name):
+                env[stmt.target.id] = res
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                u = self.eval(stmt.value, env)
+                ret = getattr(self, "_ret_unit", UNKNOWN)
+                if ret is not UNKNOWN and ret is not None:
+                    self._require(
+                        ret, u, stmt,
+                        f"return from {getattr(self, '_ret_name', '?')}()",
+                    )
+        elif isinstance(stmt, ast.For):
+            it = self._iter_element_unit(stmt.iter, env)
+            self.eval(stmt.iter, env)
+            self._bind_loop_target(stmt.target, stmt.iter, it, env)
+            self._check_scope(stmt.body, env)
+            self._check_scope(stmt.orelse, env)
+        elif isinstance(stmt, (ast.While, ast.If)):
+            self.eval(stmt.test, env)
+            self._check_scope(stmt.body, env)
+            self._check_scope(stmt.orelse, env)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self.eval(item.context_expr, env)
+            self._check_scope(stmt.body, env)
+        elif isinstance(stmt, ast.Try):
+            self._check_scope(stmt.body, env)
+            for h in stmt.handlers:
+                self._check_scope(h.body, env)
+            self._check_scope(stmt.orelse, env)
+            self._check_scope(stmt.finalbody, env)
+        elif isinstance(stmt, ast.Assert):
+            self.eval(stmt.test, env)
+            if stmt.msg is not None:
+                self.eval(stmt.msg, env)
+        elif isinstance(stmt, ast.Expr):
+            self.eval(stmt.value, env)
+        elif isinstance(stmt, (ast.Raise, ast.Delete)):
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self.eval(child, env)
+        # imports, pass, break, continue, global, nonlocal: nothing to do
+
+    def _bind_target(
+        self, tgt: ast.expr, value_node: ast.expr, rhs: object, env: Dict[str, object]
+    ) -> None:
+        if isinstance(tgt, ast.Name):
+            declared = unit_of_name(tgt.id)
+            if declared is not UNKNOWN and declared is not DIMLESS:
+                self._require(declared, rhs, value_node, f"assignment to {tgt.id}")
+                env[tgt.id] = declared
+            else:
+                env[tgt.id] = rhs
+        elif isinstance(tgt, ast.Attribute):
+            declared = unit_of_name(tgt.attr)
+            if declared is not UNKNOWN and declared is not DIMLESS:
+                self._require(declared, rhs, value_node, f"assignment to .{tgt.attr}")
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            elts = tgt.elts
+            if isinstance(value_node, (ast.Tuple, ast.List)) and len(
+                value_node.elts
+            ) == len(elts):
+                for t, v in zip(elts, value_node.elts):
+                    self._bind_target(t, v, self.eval(v, env), env)
+            else:
+                for t in elts:
+                    if isinstance(t, ast.Name):
+                        env[t.id] = UNKNOWN
+
+    def _bind_loop_target(
+        self, tgt: ast.expr, iter_node: ast.expr, elt_unit: object, env: Dict[str, object]
+    ) -> None:
+        if isinstance(tgt, ast.Name):
+            env[tgt.id] = elt_unit
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            # zip(xs_ms, ys_bytes) binds pairwise
+            if (
+                isinstance(iter_node, ast.Call)
+                and isinstance(iter_node.func, ast.Name)
+                and iter_node.func.id == "zip"
+                and len(iter_node.args) == len(tgt.elts)
+            ):
+                for t, src in zip(tgt.elts, iter_node.args):
+                    self._bind_loop_target(t, src, self._iter_element_unit(src, env), env)
+            else:
+                for t in tgt.elts:
+                    if isinstance(t, ast.Name):
+                        env[t.id] = UNKNOWN
+
+    def _iter_element_unit(self, node: ast.expr, env: Dict[str, object]) -> object:
+        """Unit of one element when iterating ``node``.  Containers keep
+        their suffix (``times_ms`` is a sequence of ms);``range`` yields
+        counts."""
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id in ("range", "enumerate")
+        ):
+            return DIMLESS if node.func.id == "range" else UNKNOWN
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            return self._load_unit(node, env)
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in ("sorted", "list", "tuple", "reversed", "set"):
+            if node.args:
+                return self._iter_element_unit(node.args[0], env)
+        return UNKNOWN
+
+    # --- expression evaluation -------------------------------------------
+
+    def _load_unit(self, node: ast.expr, env: Dict[str, object]) -> object:
+        if isinstance(node, ast.Name):
+            if node.id in env:
+                return env[node.id]
+            return unit_of_name(node.id)
+        if isinstance(node, ast.Attribute):
+            return unit_of_name(node.attr)
+        if isinstance(node, ast.Subscript):
+            return self._load_unit(node.value, env)
+        return UNKNOWN
+
+    def eval(self, node: ast.expr, env: Dict[str, object]) -> object:
+        if isinstance(node, ast.Constant):
+            if isinstance(node.value, bool) or not isinstance(node.value, (int, float)):
+                return UNKNOWN
+            return NEUTRAL if node.value == 0 else DIMLESS
+        if isinstance(node, ast.Name):
+            return self._load_unit(node, env)
+        if isinstance(node, ast.Attribute):
+            self.eval(node.value, env)
+            return self._load_unit(node, env)
+        if isinstance(node, ast.Subscript):
+            self.eval(node.value, env)
+            self.eval(node.slice, env)
+            return self._load_unit(node, env)
+        if isinstance(node, ast.BinOp):
+            return self._binop(node, env)
+        if isinstance(node, ast.UnaryOp):
+            return self.eval(node.operand, env)
+        if isinstance(node, ast.Compare):
+            return self._compare(node, env)
+        if isinstance(node, ast.Call):
+            return self._call(node, env)
+        if isinstance(node, ast.IfExp):
+            self.eval(node.test, env)
+            a = self.eval(node.body, env)
+            b = self.eval(node.orelse, env)
+            if a is NEUTRAL:
+                return b
+            if b is NEUTRAL:
+                return a
+            return a if a == b else UNKNOWN
+        if isinstance(node, ast.BoolOp):
+            for v in node.values:
+                self.eval(v, env)
+            return UNKNOWN
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            inner = dict(env)
+            for gen in node.generators:
+                elt = self._iter_element_unit(gen.iter, inner)
+                self.eval(gen.iter, inner)
+                self._bind_loop_target(gen.target, gen.iter, elt, inner)
+                for cond in gen.ifs:
+                    self.eval(cond, inner)
+            self.eval(node.elt, inner)
+            return UNKNOWN
+        if isinstance(node, ast.DictComp):
+            inner = dict(env)
+            for gen in node.generators:
+                elt = self._iter_element_unit(gen.iter, inner)
+                self.eval(gen.iter, inner)
+                self._bind_loop_target(gen.target, gen.iter, elt, inner)
+                for cond in gen.ifs:
+                    self.eval(cond, inner)
+            self.eval(node.key, inner)
+            self.eval(node.value, inner)
+            return UNKNOWN
+        if isinstance(node, ast.Lambda):
+            inner = dict(env)
+            for arg in node.args.args:
+                u = unit_of_name(arg.arg)
+                inner[arg.arg] = u
+            self.eval(node.body, inner)
+            return UNKNOWN
+        # tuples, dicts, f-strings, comprehension-free fallbacks: walk
+        # children so nested calls/compares are still checked
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self.eval(child, env)
+        return UNKNOWN
+
+    # --- operators --------------------------------------------------------
+
+    def _binop(self, node: ast.BinOp, env: Dict[str, object]) -> object:
+        if isinstance(node.op, (ast.Mult, ast.Div, ast.FloorDiv)):
+            return self._product(node, env)
+        a = self.eval(node.left, env)
+        b = self.eval(node.right, env)
+        if isinstance(node.op, (ast.Add, ast.Sub, ast.Mod)):
+            # bare numeric literals (epsilons, paddings) are neutral:
+            # `t_ms + 1e-9` is tolerance arithmetic, not a unit claim
+            if _const_value(node.left) is not None:
+                a = NEUTRAL
+            if _const_value(node.right) is not None:
+                b = NEUTRAL
+            return self._unify(a, b, node, "arithmetic")
+        return UNKNOWN  # Pow, shifts, bitwise: out of scope
+
+    def _product(self, node: ast.expr, env: Dict[str, object]) -> object:
+        """Flatten a Mult/Div chain: dims add, scales multiply, numeric
+        conversion constants fold into the scale."""
+        factors: List[Tuple[ast.expr, int]] = []
+
+        def collect(n: ast.expr, sign: int) -> None:
+            if isinstance(n, ast.BinOp) and isinstance(
+                n.op, (ast.Mult, ast.Div, ast.FloorDiv)
+            ):
+                collect(n.left, sign)
+                collect(n.right, -sign if isinstance(n.op, (ast.Div, ast.FloorDiv)) else sign)
+            else:
+                factors.append((n, sign))
+
+        collect(node, 1)
+        dims = [0, 0, 0]
+        scale = 1.0
+        known = True
+        zero = False
+        conv_consts: List[ast.expr] = []
+        dimmed = False
+        for f, sign in factors:
+            c = _const_value(f)
+            if c is not None:
+                if c == 0:
+                    zero = True
+                    continue
+                if _is_conversion_const(c):
+                    if _is_conversion_const(c, INLINE_CONVERSION_CONSTANTS):
+                        conv_consts.append(f)
+                    scale = scale / (c ** sign)
+                # pure-number factor otherwise: dims and scale untouched
+                continue
+            u = self.eval(f, env)
+            if u is NEUTRAL:
+                zero = True
+                continue
+            if u is UNKNOWN:
+                known = False
+                continue
+            if u.dims != (0, 0, 0):
+                dimmed = dimmed or u.dims[1] != 0 or u.dims == _RATE
+            dims = [d + sign * x for d, x in zip(dims, u.dims)]
+            scale *= u.scale ** sign
+        # inline-conversion rule: conversion constants applied to a
+        # data/bandwidth-dimensioned operand in repro.core outside the
+        # sanctioned repro/units.py helpers
+        if (
+            conv_consts
+            and dimmed
+            and self.mod.is_core
+            and not self.mod.is_units_module
+        ):
+            self.emit(
+                "units/inline-conversion",
+                conv_consts[0],
+                "inline unit-conversion arithmetic; use a repro.units helper",
+            )
+        if zero:
+            return NEUTRAL
+        if not known:
+            return UNKNOWN
+        if tuple(dims) == (0, 0, 0):
+            return DIMLESS  # pure ratio/number: scale bookkeeping ends here
+        return Unit((dims[0], dims[1], dims[2]), scale)
+
+    def _combine_mult(self, a: object, b: object, div: bool) -> object:
+        if a is UNKNOWN or b is UNKNOWN:
+            return UNKNOWN
+        if a is NEUTRAL or b is NEUTRAL:
+            return NEUTRAL
+        sign = -1 if div else 1
+        dims = tuple(x + sign * y for x, y in zip(a.dims, b.dims))
+        scale = a.scale * (b.scale ** sign)
+        if dims == (0, 0, 0):
+            return DIMLESS
+        return Unit(dims, scale)  # type: ignore[arg-type]
+
+    def _compare(self, node: ast.Compare, env: Dict[str, object]) -> object:
+        operands = [node.left] + list(node.comparators)
+        units = [self.eval(o, env) for o in operands]
+        for i, op in enumerate(node.ops):
+            if isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn)):
+                continue
+            left, right = operands[i], operands[i + 1]
+            # bare numeric literals compare against anything (sentinels,
+            # thresholds written as plain numbers)
+            if _const_value(left) is not None or _const_value(right) is not None:
+                continue
+            self._unify(units[i], units[i + 1], node, "comparison")
+        return UNKNOWN
+
+    def _call(self, node: ast.Call, env: Dict[str, object]) -> object:
+        kw_units = {
+            kw.arg: self.eval(kw.value, env)
+            for kw in node.keywords
+            if kw.value is not None
+        }
+        arg_units = [self.eval(a, env) for a in node.args]
+
+        fname: Optional[str] = None
+        if isinstance(node.func, ast.Name):
+            fname = node.func.id
+        elif isinstance(node.func, ast.Attribute):
+            fname = node.func.attr
+            self.eval(node.func.value, env)
+
+        if fname in ("abs", "float", "round"):
+            return arg_units[0] if arg_units else UNKNOWN
+        if fname in ("min", "max"):
+            out: object = NEUTRAL
+            for a, u in zip(node.args, arg_units):
+                if _const_value(a) is not None:
+                    continue  # max(0.0, x_ms) clamps; the literal is neutral
+                out = self._unify(out, u, node, f"{fname}() arguments")
+            return out
+        if fname == "len":
+            return DIMLESS
+        if fname in ("sum",):
+            return UNKNOWN
+
+        if fname is not None:
+            self._bind_call_args(node, fname, arg_units, kw_units)
+            if not fname.lower().startswith("from_"):
+                # ``from_samples(...)`` names its *input*, not its result
+                u = unit_of_name(fname)
+                if u is not UNKNOWN and u is not DIMLESS:
+                    return u
+        return UNKNOWN
+
+    def _bind_call_args(
+        self,
+        node: ast.Call,
+        fname: str,
+        arg_units: List[object],
+        kw_units: Dict[Optional[str], object],
+    ) -> None:
+        params = self.registry.get(fname)
+        if not params:
+            return
+        for i, (a, u) in enumerate(zip(node.args, arg_units)):
+            if i >= len(params):
+                break
+            if _const_value(a) is not None:
+                continue  # literal arguments configure values; no unit claim
+            declared = unit_of_name(params[i])
+            if declared is not UNKNOWN and declared is not DIMLESS:
+                self._require(
+                    declared, u, a, f"argument {params[i]!r} of {fname}()"
+                )
+        for kw in node.keywords:
+            if kw.arg is None or kw.arg not in params:
+                continue
+            if _const_value(kw.value) is not None:
+                continue
+            declared = unit_of_name(kw.arg)
+            if declared is not UNKNOWN and declared is not DIMLESS:
+                self._require(
+                    declared, kw_units.get(kw.arg), kw.value,
+                    f"argument {kw.arg!r} of {fname}()",
+                )
+
+    # --- unification ------------------------------------------------------
+
+    def _unify(self, a: object, b: object, node: ast.AST, where: str) -> object:
+        if a is UNKNOWN or b is UNKNOWN:
+            return UNKNOWN
+        if a is NEUTRAL:
+            return b
+        if b is NEUTRAL:
+            return a
+        assert isinstance(a, Unit) and isinstance(b, Unit)
+        if a is DIMLESS and b is DIMLESS:
+            return DIMLESS
+        if a.dims != b.dims:
+            self.emit(
+                "units/mixed-units",
+                node,
+                f"{where} mixes {describe(a)} and {describe(b)}",
+            )
+            return UNKNOWN
+        if not math.isclose(a.scale, b.scale, rel_tol=1e-9):
+            self.emit(
+                "units/scale-mismatch",
+                node,
+                f"{where} mixes {describe(a)} and {describe(b)}",
+            )
+            return UNKNOWN
+        return a
+
+    def _require(self, declared: Unit, got: object, node: ast.AST, where: str) -> None:
+        if got is UNKNOWN or got is NEUTRAL or got is DIMLESS:
+            return  # unknowns and bare numbers make no unit claim
+        assert isinstance(got, Unit)
+        if got.dims == (0, 0, 0):
+            return
+        if got.dims != declared.dims:
+            self.emit(
+                "units/mixed-units",
+                node,
+                f"{where} expects {describe(declared)}, got {describe(got)}",
+            )
+        elif not math.isclose(got.scale, declared.scale, rel_tol=1e-9):
+            self.emit(
+                "units/scale-mismatch",
+                node,
+                f"{where} expects {describe(declared)}, got {describe(got)}",
+            )
+
+
+def run(modules: Sequence[Module], registry: SignatureRegistry) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in modules:
+        if mod.is_units_module:
+            continue  # the sanctioned conversion site
+        findings.extend(FileChecker(mod, registry).check())
+    return findings

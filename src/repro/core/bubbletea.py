@@ -38,8 +38,9 @@ import bisect
 import dataclasses
 import math
 import random
-import time
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro import units
 
 # hardware constants (A100 80GB testbed, paper §6)
 GPU_TFLOPS = 312.0  # A100 bf16 dense
@@ -82,14 +83,14 @@ class PrefillLatencyModel:
         model_bytes/p; bytes beyond the resident budget stream over PCIe
         once per compute wave and only partially overlap."""
         per_gpu = self.model.model_bytes / pp_degree
-        budget = self.model.mem_budget_gb * 1e9
+        budget = units.gb_to_bytes(self.model.mem_budget_gb)
         non_resident_total = max(0.0, per_gpu - budget) * pp_degree
         if non_resident_total <= 0.0:
             return 0.0
         waves = max(1, -(-prompt_tokens // SATURATION_TOKENS))
         if prompt_tokens < SATURATION_TOKENS:
             return 0.0  # streaming fully hidden under unsaturated compute
-        stream_ms = non_resident_total / (PCIE_GBPS_BYTES * 1e9) * 1e3
+        stream_ms = units.serialization_ms_gbytes(non_resident_total, PCIE_GBPS_BYTES)
         return waves * stream_ms * (1.0 - SWAP_OVERLAP)
 
     def prefill_ms(self, prompt_tokens: int, pp_degree: int) -> float:
@@ -101,9 +102,8 @@ class PrefillLatencyModel:
         )
 
     def ttft_ms(self, prompt_tokens: int, pp_degree: int, queue_ms: float = 0.0) -> float:
-        kv_ms = (
-            prompt_tokens * self.model.kv_bytes_per_token
-            / (NVLINK_GBPS_BYTES * 1e9) * 1e3
+        kv_ms = units.serialization_ms_gbytes(
+            prompt_tokens * self.model.kv_bytes_per_token, NVLINK_GBPS_BYTES
         )
         return BASE_OVERHEAD_MS + queue_ms + self.prefill_ms(prompt_tokens, pp_degree) + kv_ms
 
@@ -252,8 +252,9 @@ class LocalKVHandoff:
 
     def price(self, prompt_tokens: int, src_dc: Optional[int],
               ready_ms: float) -> KVQuote:
-        kv_ms = (prompt_tokens * self.model.kv_bytes_per_token
-                 / (NVLINK_GBPS_BYTES * 1e9) * 1e3)
+        kv_ms = units.serialization_ms_gbytes(
+            prompt_tokens * self.model.kv_bytes_per_token, NVLINK_GBPS_BYTES
+        )
         return KVQuote(prompt_tokens, src_dc, ready_ms, ready_ms,
                        ready_ms + kv_ms, kv_ms)
 
@@ -339,6 +340,7 @@ class BubbleTeaController:
         tiers: Optional[Mapping[str, float]] = None,
         pipeline_dc: Optional[Sequence[int]] = None,
         kv: Optional[object] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.lat = latency_model
         self.pp = pp_degree
@@ -352,6 +354,10 @@ class BubbleTeaController:
         self.placements: List[Placement] = []
         self.rejected: List[int] = []
         self.rejected_slo: List[int] = []
+        # admission-search profiling is opt-in: ``repro.core`` traces are
+        # pure functions of their seeds, so the wall clock only enters
+        # when a caller injects one (e.g. ``clock=time.perf_counter``)
+        self._clock = clock
         self.search_time_us: List[float] = []
         # per-tier accounting: tier → [offered, placed, slo-rejects, ttfts]
         self._tier_stats: Dict[str, Dict[str, object]] = {}
@@ -428,7 +434,7 @@ class BubbleTeaController:
             "requests must be submitted in arrival order"
         )
         self._last_arrival = req.arrival_ms
-        t0 = time.perf_counter()
+        t0 = self._clock() if self._clock is not None else None
         need = self.lat.prefill_ms(req.prompt_tokens, self.pp) + self.guard
         # earliest feasible placement per pipeline (windows sorted: the
         # first window that fits gives that pipeline's earliest start)
@@ -444,7 +450,8 @@ class BubbleTeaController:
                 if w.end - start >= need:
                     cands.append((start, pi, wi))
                     break  # windows sorted; first feasible is earliest here
-        self.search_time_us.append((time.perf_counter() - t0) * 1e6)
+        if t0 is not None:
+            self.search_time_us.append((self._clock() - t0) * 1e6)
         if not cands:
             self.rejected.append(req.req_id)
             self._account(req, False, False, None)

@@ -54,6 +54,7 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro import units
 from repro.core import fastforward
 from repro.core.dc_selection import JobModel, PlanEntry, algorithm1, best_plan
 from repro.core.failures import CheckpointPolicy, FailureTrace, OutageWindow
@@ -306,12 +307,12 @@ def plan_migration(
             if sched is not None:
                 occ = sched.transfer_ms(stage_bytes, cur)
             else:
-                occ = stage_bytes * 8.0 / (link.bw_gbps * 1e9) * 1e3
+                occ = units.serialization_ms(stage_bytes, link.bw_gbps)
             transfers.append((src, dst, cur, cur + occ))
             cur += occ
         wan_done = max(wan_done, (cur - at_ms) + link.latency_ms)
 
-    intra_ms_one = stage_bytes * 8.0 / (topo.intra_bw_gbps * 1e9) * 1e3
+    intra_ms_one = units.serialization_ms(stage_bytes, topo.intra_bw_gbps)
     fan: Dict[int, float] = {}
     for _i, _src, dst in moves:
         fan[dst] = fan.get(dst, 0.0) + (dp_replicas_new - 1) * intra_ms_one
@@ -363,7 +364,7 @@ def plan_restore(
     in the stall — the caller debits progress and the horizon re-earns
     it at the new plan's rate."""
     stage_bytes = model.stage_bytes(param_bytes)
-    intra_ms_one = stage_bytes * 8.0 / (topo.intra_bw_gbps * 1e9) * 1e3
+    intra_ms_one = units.serialization_ms(stage_bytes, topo.intra_bw_gbps)
     placement = sorted(set(placement_idx))
     assert placement, "restore needs at least one alive placement DC"
 
@@ -371,7 +372,7 @@ def plan_restore(
         link = topo.link(src, dst)
         sched = topo.bandwidth_schedule(src, dst)
         bw = sched.bw_at(at_ms) if sched is not None else link.bw_gbps
-        return link.latency_ms + stage_bytes * 8.0 / (bw * 1e9) * 1e3
+        return link.latency_ms + units.serialization_ms(stage_bytes, bw)
 
     moves: List[Tuple[int, int, int]] = []
     by_pair: Dict[Tuple[int, int], List[int]] = {}
@@ -395,7 +396,7 @@ def plan_restore(
             if sched is not None:
                 occ = sched.transfer_ms(stage_bytes, cur)
             else:
-                occ = stage_bytes * 8.0 / (link.bw_gbps * 1e9) * 1e3
+                occ = units.serialization_ms(stage_bytes, link.bw_gbps)
             transfers.append((src, dst, cur, cur + occ))
             cur += occ
         wan_done = max(wan_done, (cur - at_ms) + link.latency_ms)

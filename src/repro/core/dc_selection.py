@@ -33,6 +33,7 @@ import itertools
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro import units
 from repro.core import wan
 from repro.core.topology import TopologyMatrix
 
@@ -105,7 +106,7 @@ class JobModel:
                 if self.multi_tcp
                 else wan.tcp_single_bw_gbps(self.wan_latency_ms)
             )
-        ser_ms = self.act_bytes * 8.0 / (bw * 1e9) * 1e3
+        ser_ms = units.serialization_ms(self.act_bytes, bw)
         return ser_ms / self.t_fwd_ms
 
 
@@ -224,8 +225,8 @@ def _pair_terms(
     lock-step."""
     fwd = job.pair_link(idx_a, idx_b)
     rev = job.pair_link(idx_b, idx_a)
-    ser_f = job.act_bytes * 8.0 / (job.pair_bw_gbps(idx_a, idx_b) * 1e9) * 1e3
-    ser_r = job.act_bytes * 8.0 / (job.pair_bw_gbps(idx_b, idx_a) * 1e9) * 1e3
+    ser_f = units.serialization_ms(job.act_bytes, job.pair_bw_gbps(idx_a, idx_b))
+    ser_r = units.serialization_ms(job.act_bytes, job.pair_bw_gbps(idx_b, idx_a))
     fill = ser_f / D + 2.0 * hop + fwd.latency_ms
     drain = ser_r / D + 2.0 * hop + rev.latency_ms
     return fill, drain, max(ser_f, ser_r)
@@ -259,8 +260,8 @@ def _latency_pp_impl(
     intra_bw = (
         job.topology.intra_bw_gbps if job.topology is not None else job.intra_bw_gbps
     )
-    hop = job.act_bytes * (D - 1) / D * 8.0 / (intra_bw * 1e9) * 1e3
-    intra_ms = job.act_bytes * 8.0 / (intra_bw * 1e9) * 1e3
+    hop = units.serialization_ms(job.act_bytes * (D - 1) / D, intra_bw)
+    intra_ms = units.serialization_ms(job.act_bytes, intra_bw)
 
     # temporal sharing: channel occupancy ser/D; scatter/gather hops stream
     # with the WAN send and only add delivery delay (see _pair_terms)
@@ -356,8 +357,8 @@ def _bnb_best_order(
     comp_slot = t_f + t_r + t_b
     const = P * t_f + P * (t_r + t_b)
     intra_bw = topo.intra_bw_gbps
-    hop = job.act_bytes * (D - 1) / D * 8.0 / (intra_bw * 1e9) * 1e3
-    intra_cost = 2.0 * (job.act_bytes * 8.0 / (intra_bw * 1e9) * 1e3)  # fill+drain
+    hop = units.serialization_ms(job.act_bytes * (D - 1) / D, intra_bw)
+    intra_cost = 2.0 * units.serialization_ms(job.act_bytes, intra_bw)  # fill+drain
 
     idx = {dc: topo.index_of(dc) for dc in usable}
     pair_cost: Dict[Tuple[str, str], float] = {}

@@ -51,6 +51,7 @@ import math
 import random
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
+from repro import units
 from repro.core import wan
 from repro.core.topology import TopologyMatrix
 
@@ -133,7 +134,7 @@ class CheckpointPolicy:
 
     def write_ms(self, nbytes: float) -> float:
         """Async-write landing latency of one ``nbytes`` snapshot."""
-        return nbytes * 8.0 / (self.write_bw_gbps * 1e9) * 1e3
+        return units.serialization_ms(nbytes, self.write_bw_gbps)
 
     def alive_placement(self, dead_dcs) -> Tuple[str, ...]:
         return tuple(dc for dc in self.placement if dc not in dead_dcs)
@@ -281,7 +282,7 @@ class FailureTrace:
             return topo
         # materialize both directions of touched pairs (fallback aliasing)
         touched = set(windows)
-        for a, b in list(touched):
+        for a, b in sorted(touched):
             touched.add((b, a))
         scheds = dict(topo.bw_schedules)
         for a, b in sorted(touched):

@@ -75,6 +75,7 @@ import math
 from collections import deque
 from typing import Deque, Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
+from repro import units
 from repro.core.bubbletea import (
     NVLINK_GBPS_BYTES,
     BubbleTeaController,
@@ -218,7 +219,7 @@ def pair_demand_rates(spec, n_pipelines: int, iteration_ms: float) -> Dict[Pair,
     its iteration time.  Bits/ms = 1e6 · Gbit/s."""
     assert iteration_ms > 0
     bits = iteration_wan_bits(spec, n_pipelines)
-    return {p: b / iteration_ms / 1e6 for p, b in bits.items()}
+    return {p: units.bits_rate_gbps(b, iteration_ms) for p, b in bits.items()}
 
 
 def _weighted_max_min(entries: Sequence[Tuple[str, float, float]]) -> Dict[str, float]:
@@ -431,14 +432,14 @@ class KVFlows:
                     return segs, float("inf")
                 t = nxt
                 continue
-            need_ms = remaining / (rate * 1e6)  # Gbit/s = 1e6 bits/ms
+            need_ms = units.bits_serialization_ms(remaining, rate)
             if t + need_ms <= nxt:
                 segs.append((t, t + need_ms, rate))
                 t += need_ms
                 remaining = 0.0
             else:
                 segs.append((t, nxt, rate))
-                remaining -= rate * 1e6 * (nxt - t)
+                remaining -= units.window_bits(nxt - t, rate)
                 t = nxt
         return segs, t
 
@@ -446,10 +447,11 @@ class KVFlows:
 
     def price(self, prompt_tokens: int, src_dc: Optional[int],
               ready_ms: float) -> KVQuote:
-        bits = prompt_tokens * self.model.kv_bytes_per_token * 8.0
+        bits = units.bytes_to_bits(prompt_tokens * self.model.kv_bytes_per_token)
         if src_dc is None or src_dc == self.decode_dc:
-            kv_ms = (prompt_tokens * self.model.kv_bytes_per_token
-                     / (NVLINK_GBPS_BYTES * 1e9) * 1e3)
+            kv_ms = units.serialization_ms_gbytes(
+                prompt_tokens * self.model.kv_bytes_per_token, NVLINK_GBPS_BYTES
+            )
             return KVQuote(prompt_tokens, src_dc, ready_ms, ready_ms,
                            ready_ms + kv_ms, kv_ms)
         self._absorb()
@@ -464,7 +466,7 @@ class KVFlows:
                        done - ready_ms, payload=(pair, segs))
 
     def commit(self, quote: KVQuote) -> None:
-        bits = quote.prompt_tokens * self.model.kv_bytes_per_token * 8.0
+        bits = units.bytes_to_bits(quote.prompt_tokens * self.model.kv_bytes_per_token)
         if quote.payload is None:
             self.n_local += 1
             self.local_bits += bits

@@ -61,7 +61,7 @@ def simulate(
     def transfer_times(s_from: int, s_to: int) -> Tuple[float, float]:
         dc_a, dc_b = spec.stage_dc[s_from], spec.stage_dc[s_to]
         link = topo.link(dc_a, dc_b)
-        ser = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
+        ser = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3  # lint: ok[units/inline-conversion]
         return ser, link.latency_ms
 
     def chan_key(p: int, boundary: int, direction: str) -> Tuple:
@@ -230,10 +230,10 @@ def atlas_schedule(
     def boundary_times(b: int, direction: str = "act") -> Tuple[float, float]:
         dc_a, dc_b = spec.stage_dc[b], spec.stage_dc[b + 1]
         link = topo.link(dc_a, dc_b) if direction == "act" else topo.link(dc_b, dc_a)
-        ser = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
+        ser = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3  # lint: ok[units/inline-conversion]
         if dc_a == dc_b:
             return ser, link.latency_ms
-        hop = (spec.act_bytes * (D - 1) / D * 8.0) / (topo.intra_bw_gbps * 1e9) * 1e3
+        hop = (spec.act_bytes * (D - 1) / D * 8.0) / (topo.intra_bw_gbps * 1e9) * 1e3  # lint: ok[units/inline-conversion]
         return ser / D, link.latency_ms + 2.0 * hop
 
     is_wan = [spec.stage_dc[b] != spec.stage_dc[b + 1] for b in range(P - 1)]

@@ -42,6 +42,7 @@ import heapq
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro import units
 from repro.core import wan
 from repro.core.topology import TopologyMatrix
 
@@ -142,7 +143,7 @@ def iteration_wan_bits(spec: PipelineSpec, n_pipelines: int) -> Dict[Tuple[int, 
     the fleet allocator (``repro.core.fleet.pair_demand_rates``) as the
     per-iteration channel demand."""
     out: Dict[Tuple[int, int], float] = {}
-    per_boundary = spec.microbatches * spec.act_bytes * 8.0 * n_pipelines
+    per_boundary = units.bytes_to_bits(spec.microbatches * spec.act_bytes) * n_pipelines
     for s in range(spec.num_stages - 1):
         a, b = spec.stage_dc[s], spec.stage_dc[s + 1]
         if a == b:
@@ -297,7 +298,7 @@ def _run_events(
                 # fast path (at the schedule's rate, which may override
                 # the static link's)
                 bw, sched = sched.bw_gbps[0], None
-            ser = (spec.act_bytes * 8.0) / (bw * 1e9) * 1e3
+            ser = units.serialization_ms(spec.act_bytes, bw)
             ttimes[(s_from, s_to)] = (ser, link.latency_ms, sched)
 
     # --- channels: (pipeline, boundary, dir), a heap ordered by (micro,

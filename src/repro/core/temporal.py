@@ -42,6 +42,7 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional, Tuple
 
+from repro import units
 from repro.core import wan
 
 
@@ -86,7 +87,9 @@ class Schedule:
             if dc_a == dc_b:
                 continue
             src, dst = (dc_a, dc_b) if tr.direction == "act" else (dc_b, dc_a)
-            out[(src, dst)] = out.get((src, dst), 0.0) + spec.act_bytes * 8.0
+            out[(src, dst)] = out.get((src, dst), 0.0) + units.bytes_to_bits(
+                spec.act_bytes
+            )
         return out
 
 
@@ -139,10 +142,12 @@ def atlas_schedule(
         bw = link.bw_gbps if sched is None else sched.min_bw_gbps()
         if sched is not None and sched.is_flat():
             sched = None  # constant rate (= min_bw): keep the fast path
-        ser = (spec.act_bytes * 8.0) / (bw * 1e9) * 1e3
+        ser = units.serialization_ms(spec.act_bytes, bw)
         if dc_a == dc_b:
             return ser, link.latency_ms, None, 1
-        hop = (spec.act_bytes * (D - 1) / D * 8.0) / (topo.intra_bw_gbps * 1e9) * 1e3
+        hop = units.serialization_ms(
+            spec.act_bytes * (D - 1) / D, topo.intra_bw_gbps
+        )
         return ser / D, link.latency_ms + 2.0 * hop, sched, D
 
     is_wan = [spec.stage_dc[b] != spec.stage_dc[b + 1] for b in range(P - 1)]

@@ -32,6 +32,7 @@ from __future__ import annotations
 from bisect import bisect_right
 from typing import Dict, List, Optional, Tuple
 
+from repro import units
 from repro.core import wan
 
 EPS = 1e-6
@@ -254,7 +255,7 @@ def check_schedule(
                 spec.act_bytes, start_ms + tr.start, rate_mult=D if is_wan_b else 1
             )
         else:
-            ser_one = (spec.act_bytes * 8.0) / (link.bw_gbps * 1e9) * 1e3
+            ser_one = units.serialization_ms(spec.act_bytes, link.bw_gbps)
             ser = ser_one / D if is_wan_b else ser_one
         occupancy = tr.end - tr.start
         if occupancy < ser - EPS:
@@ -384,7 +385,7 @@ def check_horizon(hr, live_topo, *, check_epoch_schedules: bool = True) -> None:
             if bw_sched is not None:
                 ser = bw_sched.transfer_ms(m.bytes_per_stage, s)
             else:
-                ser = m.bytes_per_stage * 8.0 / (link.bw_gbps * 1e9) * 1e3
+                ser = units.serialization_ms(m.bytes_per_stage, link.bw_gbps)
             if (e - s) < ser - EPS:
                 _fail("migration transfer faster than the live link allows",
                       (src, dst), (s, e), ser)

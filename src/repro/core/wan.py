@@ -16,8 +16,10 @@ import zlib
 from bisect import bisect_right
 from typing import Optional, Sequence, Tuple
 
+from repro import units
+
 # calibration constants (paper Table 1 / Fig 5 / §4.1)
-TCP_K_GBIT_MS = 12.0  # single-connection bw ≈ K / latency_ms (Gbit/s·ms)
+TCP_THROUGHPUT_K = 12.0  # single-connection bw ≈ K / latency_ms; K in Gbit/s·ms
 SINGLE_CONN_MAX_GBPS = 1.22  # Table 1 @ 10 ms; NIC-side cap for short RTT
 NODE_PAIR_CAP_GBPS = 5.0  # hypervisor rate limit (paper §4.1, AWS/Azure)
 INTRA_DC_GBPS = 100.0  # paper §6.1 testbed intra-DC cap
@@ -29,7 +31,7 @@ def tcp_single_bw_gbps(latency_ms: float) -> float:
     """Achievable single-TCP-connection bandwidth (Gbit/s) over the WAN."""
     if latency_ms <= 0:
         return SINGLE_CONN_MAX_GBPS
-    return min(SINGLE_CONN_MAX_GBPS, TCP_K_GBIT_MS / latency_ms)
+    return min(SINGLE_CONN_MAX_GBPS, TCP_THROUGHPUT_K / latency_ms)
 
 
 def tcp_multi_bw_gbps(latency_ms: float, num_connections: int) -> float:
@@ -55,7 +57,7 @@ class Link:
     bw_gbps: float
 
     def transfer_ms(self, nbytes: float) -> float:
-        return self.latency_ms + (nbytes * 8.0) / (self.bw_gbps * 1e9) * 1e3
+        return self.latency_ms + units.serialization_ms(nbytes, self.bw_gbps)
 
 
 def wan_link(latency_ms: float, multi_tcp: bool) -> Link:
@@ -118,8 +120,11 @@ class BandwidthSchedule:
                 self,
                 "_cycle_bits",
                 sum(
-                    ((self.times_ms[j + 1] if j + 1 < n else self.period_ms)
-                     - self.times_ms[j]) * self.bw_gbps[j] * 1e6
+                    units.window_bits(
+                        (self.times_ms[j + 1] if j + 1 < n else self.period_ms)
+                        - self.times_ms[j],
+                        self.bw_gbps[j],
+                    )
                     for j in range(n)
                 ),
             )
@@ -178,7 +183,7 @@ class BandwidthSchedule:
         scales the rate (Atlas temporal sharing sends at D× node-pair
         bandwidth).  On a flat schedule this reduces to the static
         ``bytes·8 / bw`` formula exactly."""
-        rem = nbytes * 8.0  # bits
+        rem = units.bytes_to_bits(nbytes)
         t = max(0.0, start_ms)
         if self.period_ms is None:
             i = bisect_right(self.times_ms, t) - 1
@@ -186,11 +191,11 @@ class BandwidthSchedule:
             while True:
                 bw = self.bw_gbps[i] * rate_mult
                 if i + 1 >= n:
-                    return (t - start_ms) + rem / (bw * 1e9) * 1e3
+                    return (t - start_ms) + units.bits_serialization_ms(rem, bw)
                 seg_ms = self.times_ms[i + 1] - t
-                cap_bits = seg_ms * bw * 1e6  # Gbit/s = 1e6 bits per ms
+                cap_bits = units.window_bits(seg_ms, bw)
                 if rem <= cap_bits:
-                    return (t - start_ms) + rem / (bw * 1e9) * 1e3
+                    return (t - start_ms) + units.bits_serialization_ms(rem, bw)
                 rem -= cap_bits
                 t = self.times_ms[i + 1]
                 i += 1
@@ -205,9 +210,9 @@ class BandwidthSchedule:
         while True:
             bw = self.bw_gbps[i] * rate_mult
             nxt = self.times_ms[i + 1] if i + 1 < n else period
-            cap_bits = (nxt - tau) * bw * 1e6
+            cap_bits = units.window_bits(nxt - tau, bw)
             if rem <= cap_bits:
-                return (base + tau - start_ms) + rem / (bw * 1e9) * 1e3
+                return (base + tau - start_ms) + units.bits_serialization_ms(rem, bw)
             rem -= cap_bits
             tau = nxt
             i += 1
@@ -257,14 +262,14 @@ class BandwidthSchedule:
         on the wire by ``until_ms`` (capped at the transfer size) — the
         preemption primitive: integrate the rate over the elapsed window
         instead of assuming any single segment's bandwidth."""
-        total = nbytes * 8.0
+        total = units.bytes_to_bits(nbytes)
         t0 = max(0.0, start_ms)
         if until_ms <= t0:
             return 0.0
         sent = 0.0
         for bw, s0, s1 in self._segments_from(t0):
             hi = min(s1, until_ms)
-            sent += (hi - max(s0, t0)) * bw * rate_mult * 1e6
+            sent += units.window_bits(hi - max(s0, t0), bw, rate_mult)
             if sent >= total:
                 return total
             if s1 >= until_ms:
@@ -280,7 +285,7 @@ class BandwidthSchedule:
         ``(sent_bytes, remaining_bytes)``.  Splitting at any point and
         resuming immediately reproduces the unsplit ``transfer_ms``
         exactly — the differential identity the tests pin down."""
-        sent = self.bits_sent(nbytes, start_ms, at_ms, rate_mult) / 8.0
+        sent = units.bits_to_bytes(self.bits_sent(nbytes, start_ms, at_ms, rate_mult))
         return sent, nbytes - sent
 
     def mean_bw_gbps(self, t0_ms: float, t1_ms: float) -> float:
@@ -478,7 +483,7 @@ def allreduce_ms(param_bytes: float, n_nodes: int, bw_gbps: float) -> float:
     if n_nodes <= 1:
         return 0.0
     vol = 2.0 * param_bytes * (n_nodes - 1) / n_nodes
-    return (vol * 8.0) / (bw_gbps * 1e9) * 1e3
+    return units.serialization_ms(vol, bw_gbps)
 
 
 def activation_bytes(micro_batch: int, seq_len: int, hidden: int, bytes_per: int = 2) -> float:

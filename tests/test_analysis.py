@@ -1,0 +1,471 @@
+"""repro.analysis lint suite — positive/negative fixtures per rule.
+
+Every rule gets (at least) one snippet it must fire on and one fixed
+form it must stay silent on, plus suppression-comment, baseline, and
+whole-tree-clean coverage (ISSUE 8 satellite: the shipped baseline is
+empty and stays empty).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import all_rules, analyze_paths, load_baseline, parse_module, run_passes
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CORE = "src/repro/core/fixture.py"
+SRC = "src/repro/serve/fixture.py"
+TESTS = "tests/test_fixture.py"
+UNITS = "src/repro/units.py"
+
+
+def lint(source, path=CORE, rule=None):
+    """Run every pass over one in-memory module; optionally filter."""
+    mod = parse_module(path, textwrap.dedent(source))
+    found = run_passes([mod])
+    if rule is not None:
+        found = [f for f in found if f.rule == rule]
+    return found
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ------------------------------------------------------------- units pass
+
+
+def test_units_mixed_add_fires_and_fixed_form_is_silent():
+    bad = """
+        def slack(deadline_ms, payload_bytes):
+            return deadline_ms + payload_bytes
+    """
+    assert rules_of(lint(bad)) == ["units/mixed-units"]
+    good = """
+        def slack(deadline_ms, arrival_ms):
+            return deadline_ms + arrival_ms
+    """
+    assert lint(good) == []
+
+
+def test_units_mixed_compare_fires():
+    bad = """
+        def late(t_ms, size_bytes):
+            return t_ms > size_bytes
+    """
+    assert rules_of(lint(bad)) == ["units/mixed-units"]
+
+
+def test_units_scale_mismatch_seconds_vs_ms():
+    bad = """
+        def total(wait_s, step_ms):
+            return wait_s + step_ms
+    """
+    assert rules_of(lint(bad)) == ["units/scale-mismatch"]
+    good = """
+        def total(wait_s, step_ms):
+            return wait_s * 1e3 + step_ms
+    """
+    assert lint(good) == []
+
+
+def test_units_bytes_to_bits_without_x8_is_scale_mismatch():
+    bad = """
+        def mix(a_bits, b_bytes):
+            return a_bits + b_bytes
+    """
+    assert rules_of(lint(bad)) == ["units/scale-mismatch"]
+    good = """
+        def mix(a_bits, b_bytes):
+            return a_bits + b_bytes * 8.0  # lint: ok[units/inline-conversion]
+    """
+    assert lint(good) == []
+
+
+def test_units_gbps_window_without_1e6_is_scale_mismatch():
+    # Gbps x ms = 1e6 bits; forgetting the 1e6 leaves the wrong scale
+    bad = """
+        def window(seg_ms, bw_gbps, budget_bits):
+            sent_bits = seg_ms * bw_gbps
+            return budget_bits - sent_bits
+    """
+    assert "units/scale-mismatch" in rules_of(lint(bad))
+    good = """
+        def window(seg_ms, bw_gbps, budget_bits):
+            sent_bits = seg_ms * bw_gbps * 1e6  # lint: ok[units/inline-conversion]
+            return budget_bits - sent_bits
+    """
+    assert lint(good) == []
+
+
+def test_units_propagate_through_assignment_and_call_binding():
+    bad = """
+        def ser(nbytes, bw_gbps):
+            return nbytes / bw_gbps
+
+        def caller(delay_ms, size_bytes):
+            t = delay_ms
+            return ser(t, size_bytes)
+    """
+    # delay_ms bound to parameter 'nbytes', size_bytes to 'bw_gbps'
+    assert rules_of(lint(bad)) == ["units/mixed-units"]
+
+
+def test_units_inline_conversion_fires_in_core_only():
+    snippet = """
+        def ser_ms(nbytes, bw_gbps):
+            return (nbytes * 8.0) / (bw_gbps * 1e9) * 1e3
+    """
+    assert rules_of(lint(snippet, path=CORE)) == ["units/inline-conversion"]
+    # the sanctioned module and non-core code are exempt
+    assert lint(snippet, path=UNITS) == []
+    assert lint(snippet, path=SRC) == []
+
+
+def test_units_zero_and_epsilon_literals_are_neutral():
+    good = """
+        def pad(t_ms):
+            t_ms += 5.0
+            if t_ms > 0:
+                return t_ms + 1e-9
+            return 0.0
+    """
+    assert lint(good) == []
+
+
+# ------------------------------------------------------- determinism pass
+
+
+def test_det_wall_clock_fires_in_core_only():
+    bad = """
+        import time
+
+        def stamp():
+            return time.perf_counter()
+    """
+    assert rules_of(lint(bad, path=CORE)) == ["det/wall-clock"]
+    assert lint(bad, path=SRC) == []  # serving layer may profile
+
+
+def test_det_wall_clock_from_import():
+    bad = """
+        from time import monotonic
+
+        def stamp():
+            return monotonic()
+    """
+    found = lint(bad, path=CORE, rule="det/wall-clock")
+    assert len(found) == 2  # the import and the call
+
+
+def test_det_unseeded_rng():
+    bad = """
+        import random
+
+        def jitter():
+            rng = random.Random()
+            return rng.random() + random.uniform(0.0, 1.0)
+    """
+    found = lint(bad, path=CORE, rule="det/unseeded-rng")
+    assert len(found) == 2  # Random() without seed + global uniform()
+    good = """
+        import random
+
+        def jitter(seed):
+            rng = random.Random(seed)
+            return rng.random()
+    """
+    assert lint(good, path=CORE) == []
+
+
+def test_det_numpy_global_rng():
+    bad = """
+        import numpy as np
+
+        def draw():
+            return np.random.rand(3)
+    """
+    assert rules_of(lint(bad, path=CORE)) == ["det/unseeded-rng"]
+    good = """
+        import numpy as np
+
+        def draw(seed):
+            return np.random.default_rng(seed).random(3)
+    """
+    assert lint(good, path=CORE) == []
+
+
+def test_det_set_iteration_fires_and_sorted_is_sanctioned():
+    bad = """
+        def order(names):
+            pending = set(names)
+            out = []
+            for n in pending:
+                out.append(n)
+            return out
+    """
+    assert rules_of(lint(bad, path=CORE)) == ["det/set-iteration"]
+    good = bad.replace("for n in pending:", "for n in sorted(pending):")
+    assert lint(good, path=CORE) == []
+
+
+def test_det_list_wrapper_does_not_sanction_hash_order():
+    bad = """
+        def order(names):
+            pending = set(names)
+            return [n for n in list(pending)]
+    """
+    assert rules_of(lint(bad, path=CORE)) == ["det/set-iteration"]
+
+
+def test_det_membership_and_len_are_exempt():
+    good = """
+        def stats(names, probe):
+            pending = set(names)
+            return probe in pending, len(pending), min(pending)
+    """
+    assert lint(good, path=CORE) == []
+
+
+# ------------------------------------------------------- concurrency pass
+
+
+def test_conc_queue_empty_poll():
+    bad = """
+        import queue
+
+        class Writer:
+            def __init__(self):
+                self._q = queue.Queue()
+
+            def wait(self):
+                while not self._q.empty():
+                    pass
+    """
+    assert rules_of(lint(bad, path=SRC)) == ["conc/queue-empty-poll"]
+    good = """
+        import queue
+
+        class Writer:
+            def __init__(self):
+                self._q = queue.Queue()
+
+            def wait(self):
+                self._q.join()
+    """
+    assert lint(good, path=SRC) == []
+
+
+def test_conc_unlocked_shared_write():
+    bad = """
+        import threading
+
+        class Worker:
+            def __init__(self):
+                self.n = 0
+                self._t = threading.Thread(target=self._run)
+                self._t.start()
+
+            def _run(self):
+                self.n += 1
+
+            def reset(self):
+                self.n = 0
+
+            def stop(self):
+                self._t.join()
+    """
+    assert rules_of(lint(bad, path=SRC)) == ["conc/unlocked-shared-write"]
+    good = """
+        import threading
+
+        class Worker:
+            def __init__(self):
+                self.n = 0
+                self._lock = threading.Lock()
+                self._t = threading.Thread(target=self._run)
+                self._t.start()
+
+            def _run(self):
+                with self._lock:
+                    self.n += 1
+
+            def reset(self):
+                with self._lock:
+                    self.n = 0
+
+            def stop(self):
+                self._t.join()
+    """
+    assert lint(good, path=SRC) == []
+
+
+def test_conc_thread_no_join():
+    bad = """
+        import threading
+
+        def spawn(fn):
+            t = threading.Thread(target=fn, daemon=True)
+            t.start()
+            return t
+    """
+    assert rules_of(lint(bad, path=SRC)) == ["conc/thread-no-join"]
+    good = """
+        import threading
+
+        def run(fn):
+            t = threading.Thread(target=fn)
+            t.start()
+            t.join()
+    """
+    assert lint(good, path=SRC) == []
+
+
+def test_conc_pass_skips_tests_and_threadless_modules():
+    snippet = """
+        import threading
+
+        def spawn(fn):
+            t = threading.Thread(target=fn)
+            t.start()
+    """
+    assert lint(snippet, path=TESTS) == []  # tests may leak threads
+    assert lint("x = 1\n", path=SRC) == []
+
+
+# -------------------------------------------------------------- api pass
+
+
+def test_api_validate_missing_in_tests_only():
+    bad = """
+        def test_runs(spec, topo):
+            r = simulate(spec, topo)
+            assert r is not None
+    """
+    assert rules_of(lint(bad, path=TESTS)) == ["api/validate-missing"]
+    good = bad.replace("simulate(spec, topo)", "simulate(spec, topo, validate=True)")
+    assert lint(good, path=TESTS) == []
+    # library code composes engines behind its own validate plumbing
+    assert lint(bad, path=SRC) == []
+
+
+def test_api_validate_reference_engine_exempt():
+    good = """
+        def test_differential(spec, topo):
+            a = ref.simulate(spec, topo)
+            b = reference.simulate(spec, topo)
+            assert a == b
+    """
+    assert lint(good, path=TESTS) == []
+
+
+def test_api_float_eq_ms():
+    bad = """
+        def test_sum(a_ms, b_ms, c_ms):
+            assert a_ms + b_ms == c_ms
+    """
+    assert rules_of(lint(bad, path=TESTS)) == ["api/float-eq-ms"]
+    # stored-value identity and approx comparisons are allowed
+    good = """
+        def test_sum(a_ms, b_ms, c_ms):
+            assert a_ms == b_ms
+            assert a_ms + b_ms == pytest.approx(c_ms)
+            assert c_ms == 0.0
+    """
+    assert lint(good, path=TESTS) == []
+
+
+def test_api_mutable_default():
+    bad = """
+        def collect(item, acc=[]):
+            acc.append(item)
+            return acc
+    """
+    assert rules_of(lint(bad, path=SRC)) == ["api/mutable-default"]
+    good = """
+        def collect(item, acc=None):
+            acc = [] if acc is None else acc
+            acc.append(item)
+            return acc
+    """
+    assert lint(good, path=SRC) == []
+
+
+# ------------------------------------------------- suppressions + baseline
+
+
+def test_suppression_comment_silences_one_line():
+    src = """
+        def slack(deadline_ms, payload_bytes):
+            return deadline_ms + payload_bytes  # lint: ok[units/mixed-units]
+    """
+    assert lint(src) == []
+
+
+def test_suppression_pass_prefix_matches_all_pass_rules():
+    src = """
+        def slack(deadline_ms, payload_bytes):
+            return deadline_ms + payload_bytes  # lint: ok[units]
+    """
+    assert lint(src) == []
+
+
+def test_suppression_for_wrong_rule_does_not_silence():
+    src = """
+        def slack(deadline_ms, payload_bytes):
+            return deadline_ms + payload_bytes  # lint: ok[det/wall-clock]
+    """
+    assert rules_of(lint(src)) == ["units/mixed-units"]
+
+
+def test_every_rule_has_a_description():
+    rules = all_rules()
+    assert len(rules) == 12
+    for rule, desc in rules.items():
+        assert "/" in rule and desc
+
+
+def test_shipped_baseline_is_empty():
+    path = os.path.join(REPO, "analysis_baseline.json")
+    with open(path, encoding="utf-8") as f:
+        assert json.load(f) == []
+    assert load_baseline(path) == set()
+
+
+def test_baseline_filters_fingerprints(tmp_path):
+    base = tmp_path / "baseline.json"
+    base.write_text(json.dumps(
+        [{"rule": "units/mixed-units", "path": "src/x.py", "line": 3}]
+    ))
+    known = load_baseline(str(base))
+    assert ("units/mixed-units", "src/x.py", 3) in known
+
+
+@pytest.mark.slow
+def test_whole_tree_is_clean():
+    """The lint gate itself: src/ + tests/ carry zero findings."""
+    findings = analyze_paths([os.path.join(REPO, "src"), os.path.join(REPO, "tests")])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+@pytest.mark.slow
+def test_cli_exit_codes(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    clean = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--baseline",
+         "analysis_baseline.json", "src", "tests"],
+        cwd=REPO, env=env, capture_output=True, text=True,
+    )
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text("def f(t_ms, n_bytes):\n    return t_ms + n_bytes\n")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(dirty)],
+        cwd=REPO, env=env, capture_output=True, text=True,
+    )
+    assert r.returncode == 1
+    assert "units/mixed-units" in r.stdout

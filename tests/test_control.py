@@ -148,9 +148,9 @@ def test_simulate_start_ms_offset_invariant_on_flat_and_static():
     for topo in (base, flat):
         for policy in ("varuna", "atlas"):
             r0 = simulate(spec, topo, policy=policy, n_pipelines=2,
-                          start_ms=0.0)
+                          start_ms=0.0, validate=True)
             r1 = simulate(spec, topo, policy=policy, n_pipelines=2,
-                          start_ms=9.9e8)
+                          start_ms=9.9e8, validate=True)
             V.check_equivalent(r0, r1)
 
 
@@ -315,11 +315,11 @@ def _horizon_pair(n_iterations=80, **ctrl_kw):
     fleet = {"a": 4, "b": 4, "c": 4}
     static = control.simulate_horizon(
         job, fleet, P=10, live_topo=live, planned_topo=world,
-        n_iterations=n_iterations, C=1)
+        n_iterations=n_iterations, C=1, validate=True)
     reactive = control.simulate_horizon(
         job, fleet, P=10, live_topo=live, planned_topo=world,
         n_iterations=n_iterations, C=1,
-        control=control.ControlConfig(**ctrl_kw))
+        control=control.ControlConfig(**ctrl_kw), validate=True)
     return world, live, job, static, reactive
 
 
@@ -367,7 +367,7 @@ def test_horizon_never_replans_on_planned_diurnal():
     r = control.simulate_horizon(
         _job(), {"a": 4, "b": 4, "c": 4}, P=10, live_topo=di,
         n_iterations=30, C=1,
-        control=control.ControlConfig(drift_threshold=0.15, hysteresis=2))
+        control=control.ControlConfig(drift_threshold=0.15, hysteresis=2), validate=True)
     assert r.replans == 0
     assert r.stats["drift_fires"] == 0
     assert r.stats["drift_iterations"] == 0
@@ -383,7 +383,7 @@ def test_horizon_reuse_differential_against_per_iteration_simulation():
     n = 24
     static = control.simulate_horizon(
         job, fleet, P=10, live_topo=live, planned_topo=world,
-        n_iterations=n, C=1)
+        n_iterations=n, C=1, validate=True)
     assert static.stats["iter_reused"] > 0  # the cache did engage
     assert static.stats["iter_sims"] + static.stats["iter_reused"] == n
     ep = static.epochs[0]
@@ -391,7 +391,7 @@ def test_horizon_reuse_differential_against_per_iteration_simulation():
     for _ in range(n):
         res = simulate(ep.spec, live, policy="atlas",
                        n_pipelines=ep.n_pipelines,
-                       dp_replicas_for_allreduce=ep.dp_replicas, start_ms=t)
+                       dp_replicas_for_allreduce=ep.dp_replicas, start_ms=t, validate=True)
         t += res.iteration_ms
     assert static.total_ms == pytest.approx(t, rel=1e-12)
     assert len(static.iteration_times) == n
@@ -414,12 +414,12 @@ def test_migration_cost_can_veto_a_switch():
     r = control.simulate_horizon(
         job, fleet, P=10, live_topo=live, planned_topo=world,
         n_iterations=40, C=1,
-        control=control.ControlConfig(min_gain_ms=1e12))
+        control=control.ControlConfig(min_gain_ms=1e12), validate=True)
     assert r.replans == 0
     assert r.stats["replans_declined"] >= 1
     s = control.simulate_horizon(
         job, fleet, P=10, live_topo=live, planned_topo=world,
-        n_iterations=40, C=1)
+        n_iterations=40, C=1, validate=True)
     assert r.total_ms == pytest.approx(s.total_ms, rel=1e-12)
 
 
@@ -429,7 +429,7 @@ def test_zero_iteration_horizon_simulates_nothing():
     world = _world()
     r = control.simulate_horizon(
         _job(), {"a": 4, "b": 4, "c": 4}, P=10, live_topo=world,
-        n_iterations=0, C=1)
+        n_iterations=0, C=1, validate=True)
     assert r.total_ms == 0.0
     assert r.iteration_times == []
     assert r.epochs[0].iterations == 0

@@ -52,7 +52,7 @@ def test_engine_matches_reference(policy, topo_name):
             r_ref = ref.simulate(spec, topo, policy=policy, n_pipelines=D,
                                  dp_replicas_for_allreduce=2)
             r_new = simulate(spec, topo, policy=policy, n_pipelines=D,
-                             dp_replicas_for_allreduce=2, fast_forward=False)
+                             dp_replicas_for_allreduce=2, fast_forward=False, validate=True)
             V.check_equivalent(r_ref, r_new)
             V.check_sim_result(r_new, spec, policy=policy)
 
@@ -66,7 +66,11 @@ def test_engine_matches_reference_tight_caps():
             spec = dataclasses.replace(_spec(GPT_B, 12), inflight_cap=cap)
             D = 2
             r_ref = ref.simulate(spec, topo, policy=policy, n_pipelines=D)
-            r_new = simulate(spec, topo, policy=policy, n_pipelines=D,
+            # gpipe under cap < M parks forwards forever (all-forwards-first
+            # cannot drain); the schedule is intentionally partial and the
+            # invariant checker would (correctly) reject it.  The assertion
+            # here is differential: both engines must park identically.
+            r_new = simulate(spec, topo, policy=policy, n_pipelines=D,  # lint: ok[api/validate-missing]
                              fast_forward=False)
             V.check_equivalent(r_ref, r_new)
 
@@ -75,7 +79,7 @@ def test_replicated_pipelines_identical():
     """Baseline policies simulate one pipeline and replicate: every
     pipeline's schedule must be identical (they share no resources)."""
     spec = _spec(GPT_B, 8)
-    res = simulate(spec, TOPOS["azure"], policy="varuna", n_pipelines=3)
+    res = simulate(spec, TOPOS["azure"], policy="varuna", n_pipelines=3, validate=True)
     for s in range(spec.num_stages):
         base = [(iv.start, iv.end, iv.kind, iv.micro) for iv in res.busy[(0, s)]]
         for p in (1, 2):
@@ -131,7 +135,7 @@ def test_fast_forward_falls_back_on_aperiodic_schedule():
 def test_fast_forward_disabled_below_probe_size():
     """M smaller than the probes: no fast-forward even when forced."""
     spec = _spec(GPT_B, 16)
-    res = simulate(spec, TOPOS["uniform"], policy="varuna", fast_forward=True)
+    res = simulate(spec, TOPOS["uniform"], policy="varuna", fast_forward=True, validate=True)
     assert res.stats["fast_forward"] is False
 
 
@@ -149,16 +153,16 @@ def test_fast_forward_auto_mode_used_by_default():
     topo = TOPOS["uniform"]
     res = simulate(spec, topo, policy="varuna", validate=True)
     assert res.stats["fast_forward"] is True
-    full = simulate(spec, topo, policy="varuna", fast_forward=False)
+    full = simulate(spec, topo, policy="varuna", fast_forward=False, validate=True)
     V.check_equivalent(res, full)
 
 
 def test_engine_stats_recorded():
     spec = _spec(GPT_A, 8)
-    res = simulate(spec, TOPOS["uniform"], policy="varuna", n_pipelines=2)
+    res = simulate(spec, TOPOS["uniform"], policy="varuna", n_pipelines=2, validate=True)
     assert res.stats["events"] > 0
     assert res.stats["replicated_pipelines"] == 2
-    at = simulate(spec, TOPOS["uniform"], policy="atlas", n_pipelines=2)
+    at = simulate(spec, TOPOS["uniform"], policy="atlas", n_pipelines=2, validate=True)
     assert at.stats["engine"] == "atlas-precomputed"
 
 
@@ -167,8 +171,8 @@ def test_engine_stats_recorded():
 
 def test_check_equivalent_detects_differences():
     spec = _spec(GPT_A, 6)
-    res_a = simulate(spec, TOPOS["uniform"], policy="varuna")
-    res_b = simulate(spec, TOPOS["uniform"], policy="varuna")
+    res_a = simulate(spec, TOPOS["uniform"], policy="varuna", validate=True)
+    res_b = simulate(spec, TOPOS["uniform"], policy="varuna", validate=True)
     V.check_equivalent(res_a, res_b)  # sanity: identical runs agree
     res_b.busy[(0, 1)][3].start += 0.5
     with pytest.raises(V.InvariantViolation):

@@ -99,8 +99,8 @@ def test_generate_same_seed_same_cascade():
         migration=MigrationModel(checkpoint=_ckpt()),
         control=ControlConfig(), failures=tr, **_KW,
     )
-    r1 = simulate_horizon(_job(), _fleet(), **kw)
-    r2 = simulate_horizon(_job(), _fleet(), **kw)
+    r1 = simulate_horizon(_job(), _fleet(), **kw, validate=True)
+    r2 = simulate_horizon(_job(), _fleet(), **kw, validate=True)
     assert r1.total_ms == r2.total_ms
     assert [(m.mode, m.reason, m.at_ms) for m in r1.migrations] == [
         (m.mode, m.reason, m.at_ms) for m in r2.migrations
@@ -144,7 +144,7 @@ def _run(trace, *, checkpoint=None):
         live_topo=world, planned_topo=world,
         migration=MigrationModel(checkpoint=checkpoint),
         control=ControlConfig(), failures=trace, **_KW,
-    )
+     validate=True)
 
 
 def test_dc_outage_forces_failover_off_dead_dc():
@@ -170,7 +170,7 @@ def test_checkpoint_restore_beats_live_shipment():
     static = simulate_horizon(
         _job(), _fleet(), live_topo=tr.apply_to_topology(world),
         planned_topo=world, **_KW,
-    )
+     validate=True)
     assert ship.samples == ckpt.samples == static.samples
     assert ckpt.total_ms < ship.total_ms < static.total_ms
     restores = [m for m in ckpt.migrations if m.mode == "restore"]
@@ -267,7 +267,7 @@ def test_negative_reservation_on_dead_resources_is_caught():
         name="a", job=_job(), gpus=_fleet(), P=12, n_iterations=48, C=2,
         control=ControlConfig(), checkpoint=_ckpt(),
     )]
-    fr = simulate_fleet(jobs, world, failures=tr)
+    fr = simulate_fleet(jobs, world, failures=tr, validate=True)
     topo = tr.apply_to_topology(world)
     check_fleet(fr, topo)  # clean before corruption
     dead = world.index_of("ussc")
@@ -296,3 +296,91 @@ def test_link_failure_trace_degrades_both_directions():
         base = world.link(a, b).bw_gbps
         assert s.bw_at(50_000.0) == pytest.approx(0.1 * base)
         assert s.bw_at(70_000.0) == pytest.approx(base)
+
+
+# ---------------------------------------------------------------------------
+# hash-order / seed stability (ISSUE 8: planners must not iterate sets in
+# hash order — failures.apply_to_topology walks its touched-pair set via
+# sorted(), and the whole plan->bake path must be PYTHONHASHSEED-stable)
+# ---------------------------------------------------------------------------
+
+
+def test_apply_to_topology_stable_under_event_permutation():
+    """Same events, any submission order (ties included): identical baked
+    topology.  Guards the sorted() walk over the touched-pair set."""
+    world = _world()
+    events = [
+        FailureEvent(at_ms=40_000.0, kind="link_failure",
+                     pair=("use", "usw"), recover_ms=20_000.0,
+                     residual_frac=0.1),
+        FailureEvent(at_ms=40_000.0, kind="link_failure",
+                     pair=("ussc", "asia"), recover_ms=10_000.0,
+                     residual_frac=0.2),
+        FailureEvent(at_ms=40_000.0, kind="dc_outage", dc="use",
+                     recover_ms=30_000.0, residual_frac=0.05),
+    ]
+    baked = [
+        FailureTrace(events=tuple(perm)).apply_to_topology(world)
+        for perm in (events, events[::-1], [events[1], events[2], events[0]])
+    ]
+    for other in baked[1:]:
+        assert set(other.bw_schedules) == set(baked[0].bw_schedules)
+        for pair, sched in baked[0].bw_schedules.items():
+            assert other.bw_schedules[pair] == sched, pair
+
+
+_HASHSEED_PROBE = r"""
+import json
+from repro.core.dc_selection import JobModel, algorithm1, best_plan
+from repro.core.failures import CheckpointPolicy, FailureEvent, FailureTrace
+from repro.core.topology import TopologyMatrix
+
+NAMES = ("use", "ussc", "usw", "asia")
+LAT = [[0, 30, 60, 150], [30, 0, 40, 170],
+       [60, 40, 0, 120], [150, 170, 120, 0]]
+world = TopologyMatrix.from_latency(LAT, dc_names=NAMES)
+tr = FailureTrace(events=(
+    FailureEvent(at_ms=40_000.0, kind="link_failure", pair=("use", "usw"),
+                 recover_ms=20_000.0, residual_frac=0.1),
+    FailureEvent(at_ms=40_000.0, kind="dc_outage", dc="ussc",
+                 recover_ms=30_000.0, residual_frac=0.05),
+))
+live = tr.apply_to_topology(world)
+job = JobModel(t_fwd_ms=10.0, act_bytes=1e7, partition_param_bytes=4e8,
+               microbatches=64, topology=live)
+plan = best_plan(algorithm1(job, {n: 6 for n in NAMES}, P=12, C=2))
+sched_digest = sorted(
+    (a, b, s.times_ms, s.bw_gbps) for (a, b), s in live.bw_schedules.items()
+)
+print(json.dumps({
+    "order": list(plan.dc_order),
+    "partitions": dict(sorted(plan.partitions.items())),
+    "total_ms": plan.total_ms,
+    "schedules": sched_digest,
+}, sort_keys=True))
+"""
+
+
+@pytest.mark.slow
+def test_plan_and_bake_stable_across_hash_seeds():
+    """The full trace->bake->Algorithm-1 path emits byte-identical output
+    under different PYTHONHASHSEED values (string DC names would expose
+    any remaining hash-order set walk)."""
+    import os
+    import subprocess
+    import sys
+
+    outs = []
+    for seed in ("0", "1", "31337"):
+        env = dict(os.environ, PYTHONHASHSEED=seed)
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (env.get("PYTHONPATH"), "src") if p
+        )
+        r = subprocess.run(
+            [sys.executable, "-c", _HASHSEED_PROBE],
+            capture_output=True, text=True, env=env,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout)
+    assert outs[0] == outs[1] == outs[2]

@@ -107,7 +107,7 @@ def test_demand_matches_engine_wan_bits():
             {"a": 2, "b": 2, "c": 2}, 6, C=1)),
         topo,
     )
-    res = simulate(spec, topo, policy="atlas", n_pipelines=2)
+    res = simulate(spec, topo, policy="atlas", n_pipelines=2, validate=True)
     sched = temporal.atlas_schedule(spec, topo, 2)
     rates = fleet.pair_demand_rates(spec, 2, 1000.0)
     bits = {p: r * 1000.0 * 1e6 for p, r in rates.items()}
@@ -129,7 +129,7 @@ def test_two_jobs_on_one_pair_see_fair_share_rates():
     duo, gpus = _duo()
     job = _job(act_bytes=2e8)
     solo = control.simulate_horizon(job, gpus, P=4, live_topo=duo,
-                                    n_iterations=8, C=1)
+                                    n_iterations=8, C=1, validate=True)
     fj = lambda n: fleet.FleetJob(n, job, gpus, P=4, n_iterations=8, C=1)  # noqa: E731
     fr = fleet.simulate_fleet([fj("A"), fj("B")], duo, validate=True)
     for name in ("A", "B"):
@@ -152,7 +152,7 @@ def test_temporal_sharing_beats_naive_fair_share():
     duo, gpus = _duo()
     job = _job(act_bytes=2e7)
     solo = control.simulate_horizon(job, gpus, P=4, live_topo=duo,
-                                    n_iterations=8, C=1)
+                                    n_iterations=8, C=1, validate=True)
     fj = lambda n: fleet.FleetJob(n, job, gpus, P=4, n_iterations=8, C=1)  # noqa: E731
     tmp = fleet.simulate_fleet([fj("A"), fj("B")], duo, validate=True)
     fair = fleet.simulate_fleet([fj("A"), fj("B")], duo,
@@ -180,7 +180,7 @@ def test_single_job_fleet_identical_to_simulate_horizon():
     for ctrl in (None, control.ControlConfig()):
         hr = control.simulate_horizon(
             job, gpus, P=10, live_topo=live, planned_topo=world,
-            n_iterations=40, C=1, control=ctrl)
+            n_iterations=40, C=1, control=ctrl, validate=True)
         fr = fleet.simulate_fleet(
             [fleet.FleetJob("solo", job, gpus, P=10, n_iterations=40, C=1,
                             planned_topo=world, control=ctrl)],
@@ -282,7 +282,7 @@ def test_check_fleet_rejects_oversubscribed_reservation():
     duo, gpus = _duo()
     job = _job(act_bytes=2e8)
     fj = lambda n: fleet.FleetJob(n, job, gpus, P=4, n_iterations=6, C=1)  # noqa: E731
-    fr = fleet.simulate_fleet([fj("A"), fj("B")], duo)
+    fr = fleet.simulate_fleet([fj("A"), fj("B")], duo, validate=True)
     V.check_fleet(fr, duo)  # honest ledger passes
     # claim one window ran at 10x its grant: the aggregate on that
     # channel now exceeds the capacity in force
@@ -295,7 +295,7 @@ def test_check_fleet_rejects_oversubscribed_reservation():
 def test_check_fleet_rejects_inverted_window():
     duo, gpus = _duo()
     fr = fleet.simulate_fleet(
-        [fleet.FleetJob("A", _job(), gpus, P=4, n_iterations=2, C=1)], duo)
+        [fleet.FleetJob("A", _job(), gpus, P=4, n_iterations=2, C=1)], duo, validate=True)
     fr.reservations[0].t1_ms = fr.reservations[0].t0_ms - 1.0
     with pytest.raises(V.InvariantViolation):
         V.check_fleet(fr, duo)
@@ -334,6 +334,6 @@ def test_contended_schedule_prices_transfers_slower():
     spec = control.plan_spec(job, plan, spec_topo)
     contended = spec_topo.with_rate_multipliers({(0, 1): 0.5, (1, 0): 0.5})
     for policy in ("varuna", "atlas"):
-        full = simulate(spec, spec_topo, policy=policy, n_pipelines=1)
-        half = simulate(spec, contended, policy=policy, n_pipelines=1)
+        full = simulate(spec, spec_topo, policy=policy, n_pipelines=1, validate=True)
+        half = simulate(spec, contended, policy=policy, n_pipelines=1, validate=True)
         assert half.iteration_ms > full.iteration_ms * 1.5

@@ -119,7 +119,7 @@ def test_fleet_prefill_deterministic(runs):
 def test_check_fleet_rejects_corrupted_kv_reservation(runs):
     world, _, _ = runs
     fr = fleet.simulate_fleet([_host(), _contender()], world,
-                              prefill=_service())
+                              prefill=_service(), validate=True)
     V.check_fleet(fr, world)  # honest ledger passes
     victim = next(r for r in fr.reservations if r.job == fleet.KV_JOB)
     victim.rate_gbps *= 50.0
@@ -133,7 +133,7 @@ def test_check_fleet_rejects_overlapping_kv_transfers(runs):
     fits under capacity."""
     world, _, _ = runs
     fr = fleet.simulate_fleet([_host(), _contender()], world,
-                              prefill=_service())
+                              prefill=_service(), validate=True)
     by_pair = {}
     for r in fr.reservations:
         if r.job == fleet.KV_JOB:

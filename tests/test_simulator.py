@@ -24,7 +24,7 @@ def test_single_tcp_utilization_under_5pct():
     """§3.2: with one TCP connection at 40 ms WAN, GPU util < 5%."""
     spec = _spec(GPT_B, M=4, P=6, dcs=(0, 0, 1, 1, 2, 2))
     topo = GeoTopology(wan_latency_ms=40.0, multi_tcp=False)
-    r = simulate(spec, topo, policy="varuna")
+    r = simulate(spec, topo, policy="varuna", validate=True)
     assert r.utilization < 0.05
 
 
@@ -33,7 +33,7 @@ def test_slowdown_grows_with_wan_latency():
     spec = _spec(GPT_B)
     times = [
         simulate(spec, GeoTopology(wan_latency_ms=lat, multi_tcp=False),
-                 policy="varuna").iteration_ms
+                 policy="varuna", validate=True).iteration_ms
         for lat in (10, 20, 30, 40)
     ]
     assert times == sorted(times)
@@ -53,10 +53,10 @@ def test_atlas_vs_baselines_fig9():
     spec = _spec(GPT_B, M=16)
     tb = GeoTopology(wan_latency_ms=40.0, multi_tcp=False)
     ta = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
-    gpipe = simulate(spec, tb, policy="gpipe").iteration_ms
-    megatron = simulate(spec, tb, policy="megatron").iteration_ms
-    varuna = simulate(spec, tb, policy="varuna").iteration_ms
-    atlas = simulate(spec, ta, policy="atlas", n_pipelines=3).iteration_ms
+    gpipe = simulate(spec, tb, policy="gpipe", validate=True).iteration_ms
+    megatron = simulate(spec, tb, policy="megatron", validate=True).iteration_ms
+    varuna = simulate(spec, tb, policy="varuna", validate=True).iteration_ms
+    atlas = simulate(spec, ta, policy="atlas", n_pipelines=3, validate=True).iteration_ms
     assert gpipe / atlas > 10
     assert megatron / atlas > 5
     assert varuna / atlas > 5
@@ -68,8 +68,8 @@ def test_temporal_sharing_helps_fill_drain():
     short-pipeline testbed (fill/drain dominated)."""
     spec = _spec(GPT_B, M=16)
     t = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
-    varuna = simulate(spec, t, policy="varuna").iteration_ms
-    atlas = simulate(spec, t, policy="atlas", n_pipelines=3).iteration_ms
+    varuna = simulate(spec, t, policy="varuna", validate=True).iteration_ms
+    atlas = simulate(spec, t, policy="atlas", n_pipelines=3, validate=True).iteration_ms
     assert atlas < varuna
 
 
@@ -78,10 +78,10 @@ def test_bubble_consolidation():
     bubbles — fewer, larger bubbles than Varuna at equal work."""
     spec = _spec(GPT_A, M=8)
     t = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
-    va = simulate(spec, t, policy="varuna")
+    va = simulate(spec, t, policy="varuna", validate=True)
     C = max(1, round(spec.act_bytes * 8 / (wan.NODE_PAIR_CAP_GBPS * 1e9) * 1e3
                      / spec.t_fwd_ms))
-    at = simulate(spec, t, policy="atlas", n_pipelines=min(C, 4))
+    at = simulate(spec, t, policy="atlas", n_pipelines=min(C, 4), validate=True)
     # compare bubble fragmentation on a mid-pipeline stage
     va_gaps = va.stage_bubbles(0, 2)
     at_gaps = at.stage_bubbles(0, 2)
@@ -94,7 +94,7 @@ def test_gpipe_barrier_semantics():
     """GPipe backwards start only after all forwards of the pipeline."""
     spec = _spec(GPT_A, M=4)
     t = GeoTopology(wan_latency_ms=10.0, multi_tcp=True)
-    r = simulate(spec, t, policy="gpipe")
+    r = simulate(spec, t, policy="gpipe", validate=True)
     last_stage = spec.num_stages - 1
     ivs = r.busy[(0, last_stage)]
     last_fwd_end = max(iv.end for iv in ivs if iv.kind == "fwd")
@@ -106,7 +106,7 @@ def test_all_microbatches_complete():
     spec = _spec(GPT_A, M=5)
     t = GeoTopology(wan_latency_ms=10.0, multi_tcp=True)
     for pol, D in (("gpipe", 1), ("megatron", 1), ("varuna", 1), ("atlas", 2)):
-        r = simulate(spec, t, policy=pol, n_pipelines=D)
+        r = simulate(spec, t, policy=pol, n_pipelines=D, validate=True)
         for p in range(D):
             for s in range(spec.num_stages):
                 ivs = r.busy[(p, s)]
@@ -118,7 +118,7 @@ def test_intra_dc_fast_baseline():
     """All stages in one DC -> near-ideal utilization for 1F1B."""
     spec = _spec(GPT_B, M=16, dcs=(0, 0, 0, 0))
     t = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
-    r = simulate(spec, t, policy="varuna")
+    r = simulate(spec, t, policy="varuna", validate=True)
     assert r.utilization > 0.4
 
 

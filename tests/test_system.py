@@ -49,10 +49,10 @@ def test_end_to_end_geo_training_story():
         stage_dc=stage_dc,
     )
     topo = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
-    atlas = simulate(spec, topo, policy="atlas", n_pipelines=2)
+    atlas = simulate(spec, topo, policy="atlas", n_pipelines=2, validate=True)
     varuna = simulate(
         spec, GeoTopology(wan_latency_ms=40.0, multi_tcp=False), policy="varuna"
-    )
+    , validate=True)
     assert atlas.iteration_ms < varuna.iteration_ms
 
     # 3) BubbleTea fills the bubbles

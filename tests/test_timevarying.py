@@ -14,6 +14,7 @@ Three nets (ISSUE 3):
 """
 import pytest
 
+from repro import units
 from repro.core import reference as ref
 from repro.core import temporal
 from repro.core import topology as tp
@@ -245,9 +246,9 @@ def test_flat_schedule_interval_identical_to_static(policy, base_name):
         spec = _spec(M=M)
         D = 3 if policy == "atlas" else 2
         r_static = simulate(spec, base, policy=policy, n_pipelines=D,
-                            dp_replicas_for_allreduce=2, fast_forward=False)
+                            dp_replicas_for_allreduce=2, fast_forward=False, validate=True)
         r_flat = simulate(spec, flat, policy=policy, n_pipelines=D,
-                          dp_replicas_for_allreduce=2, fast_forward=False)
+                          dp_replicas_for_allreduce=2, fast_forward=False, validate=True)
         V.check_equivalent(r_static, r_flat)
         r_ref = ref.simulate(spec, base, policy=policy, n_pipelines=D,
                              dp_replicas_for_allreduce=2)
@@ -275,14 +276,14 @@ def test_step_trace_shifts_iteration_and_validates(policy):
 def test_transfer_spans_step_boundary_exactly():
     """An event-engine transfer that straddles the step must occupy the
     channel for the integrated (two-segment) time, not either constant."""
-    act = 1.5e8
+    act_bytes = 1.5e8
     base = tp.azure_testbed()
     bw = base.link(0, 1).bw_gbps
-    ser_fast = act * 8.0 / (bw * 1e9) * 1e3  # 240 ms at 5 Gbps
+    ser_fast = units.serialization_ms(act_bytes, bw)  # 240 ms at 5 Gbps
     # place the step mid-way through the very first 0->1 transfer: the
     # first forward on stage 1 (DC 0 -> DC 1 boundary is at stages 1|2)
     spec = _spec(M=2, stage_dc=(0, 1, 1, 1))
-    r0 = simulate(spec, base, policy="varuna", fast_forward=False)
+    r0 = simulate(spec, base, policy="varuna", fast_forward=False, validate=True)
     first_arrival = min(
         iv.start for iv in r0.busy[(0, 1)] if iv.kind == "fwd")
     send_start = spec.t_fwd_ms  # stage 0 forward ends, transfer starts
@@ -315,10 +316,10 @@ def test_fast_forward_gated_off_by_time_varying_bandwidth():
     cannot see bandwidth changes beyond their horizon."""
     spec = _spec(M=200)
     topo = _step_topo()
-    res = simulate(spec, topo, policy="varuna", fast_forward=True)
+    res = simulate(spec, topo, policy="varuna", fast_forward=True, validate=True)
     assert res.stats["fast_forward"] is False
     assert res.stats["fast_forward_gate"] == GATE_TIME_VARYING
-    full = simulate(spec, topo, policy="varuna", fast_forward=False)
+    full = simulate(spec, topo, policy="varuna", fast_forward=False, validate=True)
     V.check_equivalent(res, full)
 
 
@@ -328,10 +329,10 @@ def test_fast_forward_engages_on_flat_schedules():
     base = tp.azure_testbed()
     flat = base.with_bandwidth_schedules(_flat_schedules(base))
     spec = _spec(M=200)
-    res = simulate(spec, flat, policy="varuna", fast_forward=True)
+    res = simulate(spec, flat, policy="varuna", fast_forward=True, validate=True)
     assert res.stats["fast_forward"] is True
     assert "fast_forward_gate" not in res.stats
-    full = simulate(spec, flat, policy="varuna", fast_forward=False)
+    full = simulate(spec, flat, policy="varuna", fast_forward=False, validate=True)
     V.check_equivalent(res, full)
 
 
@@ -342,12 +343,12 @@ def test_late_step_beyond_probe_horizon_not_extrapolated():
     base = tp.azure_testbed()
     bw = base.link(0, 1).bw_gbps
     spec = _spec(M=256)
-    r_static = simulate(spec, base, policy="varuna", fast_forward=False)
+    r_static = simulate(spec, base, policy="varuna", fast_forward=False, validate=True)
     late = base.with_bandwidth_schedules(
         {(0, 1): wan.BandwidthSchedule.step(
             bw, bw / 2.0, r_static.iteration_ms / 2.0)})
-    fast = simulate(spec, late, policy="varuna", fast_forward=True)
-    full = simulate(spec, late, policy="varuna", fast_forward=False)
+    fast = simulate(spec, late, policy="varuna", fast_forward=True, validate=True)
+    full = simulate(spec, late, policy="varuna", fast_forward=False, validate=True)
     V.check_equivalent(fast, full)
     assert full.iteration_ms > r_static.iteration_ms
 
@@ -369,7 +370,7 @@ def test_validate_rejects_over_bandwidth_segment_transfer():
     D = 2
     sched = temporal.atlas_schedule(spec, topo, D)
     V.check_schedule(sched, spec, topo)  # honest schedule passes
-    ser_nominal = spec.act_bytes * 8.0 / (bw * 1e9) * 1e3 / D
+    ser_nominal = units.serialization_ms(spec.act_bytes, bw) / D
     wan_b = 1  # stages 1|2 cross DC 0 -> DC 1
     tr = next(t for t in sched.transfers
               if t.boundary == wan_b and t.start > 1e-3)

@@ -34,8 +34,8 @@ def test_uniform_matrix_matches_geotopology():
             assert geo.link(a, b) == mat.link(a, b)
     spec = _spec([0, 0, 1, 2])
     for policy in ("gpipe", "megatron", "varuna", "atlas"):
-        r_geo = simulate(spec, geo, policy=policy, n_pipelines=2)
-        r_mat = simulate(spec, mat, policy=policy, n_pipelines=2)
+        r_geo = simulate(spec, geo, policy=policy, n_pipelines=2, validate=True)
+        r_mat = simulate(spec, mat, policy=policy, n_pipelines=2, validate=True)
         assert r_geo.iteration_ms == pytest.approx(r_mat.iteration_ms, rel=1e-12)
 
 
@@ -102,16 +102,16 @@ def test_skewed_topology_changes_iteration_time():
     crossing = _spec([0, 2, 1])  # boundary (0,2) is the slow pair
     avoiding = _spec([0, 1, 2])  # boundaries (0,1), (1,2) are fast
     for policy in ("varuna", "atlas"):
-        t_cross_u = simulate(crossing, uniform, policy=policy, n_pipelines=2,
-                             validate=True).iteration_ms
-        t_cross_s = simulate(crossing, skewed, policy=policy, n_pipelines=2,
-                             validate=True).iteration_ms
-        t_avoid_s = simulate(avoiding, skewed, policy=policy, n_pipelines=2,
-                             validate=True).iteration_ms
-        assert t_cross_s > 1.5 * t_cross_u  # skew hurts when crossed
-        assert t_avoid_s < t_cross_s  # and re-placement recovers it
-        assert t_avoid_s == pytest.approx(
-            simulate(avoiding, uniform, policy=policy, n_pipelines=2).iteration_ms,
+        t_cross_uni = simulate(crossing, uniform, policy=policy, n_pipelines=2,
+                               validate=True).iteration_ms
+        t_cross_skew = simulate(crossing, skewed, policy=policy, n_pipelines=2,
+                                validate=True).iteration_ms
+        t_avoid_skew = simulate(avoiding, skewed, policy=policy, n_pipelines=2,
+                                validate=True).iteration_ms
+        assert t_cross_skew > 1.5 * t_cross_uni  # skew hurts when crossed
+        assert t_avoid_skew < t_cross_skew  # and re-placement recovers it
+        assert t_avoid_skew == pytest.approx(
+            simulate(avoiding, uniform, policy=policy, n_pipelines=2, validate=True).iteration_ms,
             rel=0.01,
         )
 
@@ -165,8 +165,8 @@ def test_hetero_topology_in_closed_form_matches_simulator_direction():
     t_bad = get_latency_pp(job, part, ("dc0", "dc2", "dc1"), 1)
     assert t_good < t_bad
 
-    sim_good = simulate(_spec([0, 1, 2]), sk, policy="varuna").iteration_ms
-    sim_bad = simulate(_spec([0, 2, 1]), sk, policy="varuna").iteration_ms
+    sim_good = simulate(_spec([0, 1, 2]), sk, policy="varuna", validate=True).iteration_ms
+    sim_bad = simulate(_spec([0, 2, 1]), sk, policy="varuna", validate=True).iteration_ms
     assert sim_good < sim_bad
 
 
@@ -199,9 +199,9 @@ def test_asymmetric_links_price_gradients_on_reverse_link():
         2, {(0, 1): links[(0, 1)], (1, 0): links[(0, 1)]}, name="fast2")
     slow = tp.TopologyMatrix.from_links(
         2, {(0, 1): links[(1, 0)], (1, 0): links[(1, 0)]}, name="slow2")
-    t_fast = simulate(spec, fast, policy="varuna").iteration_ms
-    t_asym = simulate(spec, topo, policy="varuna").iteration_ms
-    t_slow = simulate(spec, slow, policy="varuna").iteration_ms
+    t_fast = simulate(spec, fast, policy="varuna", validate=True).iteration_ms
+    t_asym = simulate(spec, topo, policy="varuna", validate=True).iteration_ms
+    t_slow = simulate(spec, slow, policy="varuna", validate=True).iteration_ms
     assert t_fast < t_asym < t_slow
 
 

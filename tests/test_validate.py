@@ -44,7 +44,7 @@ def test_validate_flag_equivalent_to_helper():
     spec = _spec()
     topo = TOPOS["uniform"]
     r1 = simulate(spec, topo, policy="varuna", validate=True)
-    r2 = simulate(spec, topo, policy="varuna")
+    r2 = simulate(spec, topo, policy="varuna", validate=True)
     assert r1.iteration_ms == r2.iteration_ms
 
 
@@ -68,7 +68,7 @@ def test_inflight_cap_respected_by_atlas():
 
 def _valid_result(policy="varuna"):
     spec = _spec()
-    res = simulate(spec, TOPOS["uniform"], policy=policy)
+    res = simulate(spec, TOPOS["uniform"], policy=policy, validate=True)
     return spec, res
 
 

@@ -64,13 +64,13 @@ def test_sec67_compression_is_net_loss():
         layer_params=1.2e9, num_stages=4, microbatches=16, stage_dc=[0, 0, 1, 2],
     )
     t = GeoTopology(wan_latency_ms=40, multi_tcp=True)
-    atlas = simulate(spec, t, policy="atlas", n_pipelines=3).iteration_ms
+    atlas = simulate(spec, t, policy="atlas", n_pipelines=3, validate=True).iteration_ms
     comp_spec = PipelineSpec(**{
         **spec.__dict__,
         "act_bytes": spec.act_bytes * wan.COMPRESSION_RATIO,
         "t_fwd_ms": spec.t_fwd_ms * wan.COMPRESSION_COMPUTE_MULT,
     })
-    comp = simulate(comp_spec, t, policy="varuna").iteration_ms
+    comp = simulate(comp_spec, t, policy="varuna", validate=True).iteration_ms
     assert comp > 1.3 * atlas  # paper: ~2× slowdown; direction must hold
 
 
