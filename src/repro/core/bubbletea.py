@@ -40,7 +40,7 @@ import math
 import random
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro import units
+from repro import obs, units
 
 # hardware constants (A100 80GB testbed, paper §6)
 GPU_TFLOPS = 312.0  # A100 bf16 dense
@@ -341,8 +341,14 @@ class BubbleTeaController:
         pipeline_dc: Optional[Sequence[int]] = None,
         kv: Optional[object] = None,
         clock: Optional[Callable[[], float]] = None,
+        tracer: Optional[object] = None,
     ):
         self.lat = latency_model
+        # obs tracing (``repro.obs``): placements become spans on the
+        # ``prefill`` lane group, admission rejections and WAN KV
+        # handoffs become instants — all in sim time
+        self.tracer = tracer
+        self._tracing = tracer is not None and getattr(tracer, "enabled", False)
         self.pp = pp_degree
         self.guard = guard_ms  # paper §6.5: small residual gap so training
         # resumes without delay
@@ -455,6 +461,12 @@ class BubbleTeaController:
         if not cands:
             self.rejected.append(req.req_id)
             self._account(req, False, False, None)
+            if self._tracing:
+                self.tracer.instant(
+                    "reject_capacity", obs.CAT_PREFILL, "prefill",
+                    "admission", req.arrival_ms,
+                    req_id=req.req_id, tier=self._tier_of(req),
+                )
             return None
         slo = self._slo_for(req)
         chosen: Optional[Tuple[float, int, int, float, float, Optional[KVQuote]]] = None
@@ -484,6 +496,12 @@ class BubbleTeaController:
             self.rejected.append(req.req_id)
             self.rejected_slo.append(req.req_id)
             self._account(req, False, True, None)
+            if self._tracing:
+                self.tracer.instant(
+                    "reject_slo", obs.CAT_PREFILL, "prefill",
+                    "admission", req.arrival_ms,
+                    req_id=req.req_id, tier=self._tier_of(req),
+                )
             return None
         start, pi, wi, queue, ttft, quote = chosen
         if quote is not None:
@@ -504,6 +522,20 @@ class BubbleTeaController:
                       src_dc=quote.src_dc if quote else None)
         self.placements.append(p)
         self._account(req, True, False, ttft)
+        if self._tracing:
+            self.tracer.span(
+                "prefill", obs.CAT_PREFILL, "prefill", f"pipe{pi}",
+                start, start + dur,
+                req_id=req.req_id, tier=self._tier_of(req),
+                ttft_ms=ttft, queue_ms=queue, kv_ms=p.kv_ms, src_dc=p.src_dc,
+            )
+            if quote is not None and quote.payload is not None:
+                self.tracer.instant(
+                    "kv_handoff", obs.CAT_PREFILL, "prefill",
+                    "kv", start + dur,
+                    req_id=req.req_id, tier=self._tier_of(req),
+                    src_dc=quote.src_dc, kv_ms=quote.kv_ms,
+                )
         return p
 
     # -- reporting ---------------------------------------------------------
@@ -529,7 +561,9 @@ class BubbleTeaController:
                 "acceptance": s["placed"] / s["offered"] if s["offered"] else 0.0,
             }
             for pc in (50, 95, 99):
-                rep[f"ttft_p{pc}"] = _pctl(ttfts, pc / 100.0)
+                # unit-suffixed key (PR-8 grammar): these are millisecond
+                # percentiles, the schema registry enforces the name
+                rep[f"ttft_p{pc}_ms"] = _pctl(ttfts, pc / 100.0)
             out[tier] = rep
         return out
 

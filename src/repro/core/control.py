@@ -54,7 +54,7 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro import units
+from repro import obs, units
 from repro.core import fastforward
 from repro.core.dc_selection import JobModel, PlanEntry, algorithm1, best_plan
 from repro.core.failures import CheckpointPolicy, FailureTrace, OutageWindow
@@ -226,14 +226,16 @@ def link_deviation(
     worst = 0.0
     for a, b in live.wan_pairs():
         sched = live.bandwidth_schedule(a, b)
-        obs = sched.mean_bw_gbps(t0_ms, t1_ms) if sched else live.link(a, b).bw_gbps
+        delivered = (
+            sched.mean_bw_gbps(t0_ms, t1_ms) if sched else live.link(a, b).bw_gbps
+        )
         asm_sched = assumed.bandwidth_schedule(a, b)
         asm = (
             asm_sched.mean_bw_gbps(t0_ms, t1_ms)
             if asm_sched
             else assumed.link(a, b).bw_gbps
         )
-        worst = max(worst, abs(obs - asm) / asm)
+        worst = max(worst, abs(delivered - asm) / asm)
     return worst
 
 
@@ -489,6 +491,8 @@ class HorizonRunner:
         validate: bool = False,
         failures: Optional[FailureTrace] = None,
         checkpoint: Optional[CheckpointPolicy] = None,
+        tracer=None,
+        trace_label: str = "job",
     ):
         assert live_topo.dc_names, "control plane needs a named topology"
         planned = planned_topo if planned_topo is not None else live_topo
@@ -501,6 +505,19 @@ class HorizonRunner:
         self.mig_model = migration if migration is not None else MigrationModel()
         self.policy = policy
         self.validate = validate
+
+        # --- tracing: iteration spans are emitted from last_result as
+        # each iteration is booked (reused iterations replay the
+        # representative result's intervals at their own offset);
+        # migration / outage spans wait for _trace_flush because the
+        # fleet's admission barrier (defer_epoch_start) can extend a
+        # stall after advance() returned
+        self.tracer = tracer
+        self.trace_label = trace_label
+        self._tracing = tracer is not None and getattr(tracer, "enabled", False)
+        self._trace_flushed = False
+        self._last_dev: Optional[float] = None
+        self._last_tag: Optional[str] = None
 
         job0 = dataclasses.replace(job, topology=planned)
         if C is None:
@@ -629,6 +646,11 @@ class HorizonRunner:
             start_ms=t,
             fast_forward=False if gate is not None else None,
             validate=self.validate,
+            # tracing wants every result to carry its transfer log so a
+            # (possibly cache-reused) iteration re-anchors channel spans;
+            # the tracer itself is NOT passed down — emission happens
+            # once per *booked* iteration in advance(), not per sim call
+            record_transfers=True if self._tracing else None,
         )
         self.stats["iter_sims"] += 1
         if gate is not None:
@@ -643,6 +665,53 @@ class HorizonRunner:
     # -- one iteration + its control decision ------------------------------
 
     def advance(self, *, allow_replan: bool = True) -> str:
+        t0 = self.t
+        # the iteration runs under the *incumbent* epoch's placement —
+        # capture it now, a "migrated" tag swaps self.epoch before the
+        # trace is emitted
+        spec0 = self.epoch.spec
+        self._last_dev = None
+        tag = self._advance_inner(allow_replan=allow_replan)
+        if self._tracing:
+            self._trace_advance(t0, spec0, tag)
+        self._last_tag = tag
+        return tag
+
+    def _trace_advance(self, t0: float, spec0, tag: str) -> None:
+        """Emit the iteration just booked at its wall-clock start —
+        GPU / bubble / allreduce spans plus channel spans from the
+        result's transfer log — and the control-plane decision for it.
+        The final fractional iteration emits its full window: the
+        sample budget ends mid-flight, the spans show the flight."""
+        res = self.last_result
+        lbl = self.trace_label
+        obs.trace_sim_result(
+            self.tracer, res, spec0,
+            label=lbl, t0_ms=t0, dc_names=self.live_topo.dc_names,
+        )
+        pid = f"{lbl}/control"
+        t_end = t0 + res.iteration_ms  # decision time (pre-stall on "migrated")
+        self.tracer.counter("iteration_ms", pid, t_end, res.iteration_ms)
+        self.tracer.counter("utilization", pid, t_end, res.utilization)
+        emit = tag
+        if tag == "iter":
+            return
+        if tag == "calm":
+            if self._last_tag != "drift":
+                return  # plain calm iteration, not a drift streak clearing
+            emit = "drift_clear"
+        args: Dict = {}
+        if self._last_dev is not None:
+            args["deviation"] = self._last_dev
+        if tag == "migrated":
+            mig = self.migrations[-1]
+            args.update(
+                mode=mig.mode, reason=mig.reason, at_ms=mig.at_ms,
+                from_D=mig.from_D, to_D=mig.to_D,
+            )
+        self.tracer.instant(emit, obs.CAT_CONTROL, pid, "decisions", t_end, **args)
+
+    def _advance_inner(self, *, allow_replan: bool = True) -> str:
         assert not self._done, "horizon already exhausted"
         iter_ms = self._run_iteration()
         spi = self.epoch.samples_per_iteration
@@ -671,6 +740,7 @@ class HorizonRunner:
 
         control = self.control
         dev = link_deviation(self.topo, self.epoch.assumed, self.t - iter_ms, self.t)
+        self._last_dev = dev
         drifted = dev > control.drift_threshold
         self.stats["drift_iterations"] += int(drifted)
         if not self.detector.observe(dev):
@@ -815,10 +885,22 @@ class HorizonRunner:
             self._pending_cks.append(
                 (stamp + self._ck_write_ms, stamp, max(0.0, snap_samples))
             )
+            if self._tracing:
+                self.tracer.instant(
+                    "checkpoint_stamp", obs.CAT_CONTROL,
+                    f"{self.trace_label}/control", "checkpoints", stamp,
+                    samples=max(0.0, snap_samples),
+                )
             self._next_ck += ck.interval_ms
         while self._pending_cks and self._pending_cks[0][0] <= self.t + 1e-9:
-            _durable_at, stamp, s = self._pending_cks.pop(0)
+            durable_at, stamp, s = self._pending_cks.pop(0)
             self._last_durable = (stamp, s)
+            if self._tracing:
+                self.tracer.instant(
+                    "checkpoint_durable", obs.CAT_CONTROL,
+                    f"{self.trace_label}/control", "checkpoints", durable_at,
+                    stamp_ms=stamp, samples=s,
+                )
 
     # -- the re-plan attempt (drift, elasticity, and forced failover) ------
 
@@ -1018,8 +1100,49 @@ class HorizonRunner:
         self.t = new_t_ms
         self.epoch.start_ms = new_t_ms
 
+    def _trace_flush(self) -> None:
+        """One-shot end-of-run emission of everything whose extent is
+        only final at horizon end: migration stall spans (the fleet's
+        admission barrier may have extended them via
+        ``defer_epoch_start``), per-lane ``migration-stall`` GPU spans
+        on the *new* epoch's lane grid, and outage windows (still-open
+        windows clamp to the horizon end)."""
+        if not self._tracing or self._trace_flushed:
+            return
+        self._trace_flushed = True
+        tr = self.tracer
+        lbl = self.trace_label
+        pid = f"{lbl}/control"
+        # migration i opened epoch i+1 — its stall stands on that
+        # epoch's lane grid (n_pipelines × stages matches busy keys on
+        # every engine path)
+        for mig, ep in zip(self.migrations, self.epochs[1:]):
+            t1 = mig.at_ms + mig.duration_ms
+            tr.span(
+                f"migration:{mig.mode}", obs.CAT_CONTROL, pid, "migrations",
+                mig.at_ms, t1,
+                reason=mig.reason, from_D=mig.from_D, to_D=mig.to_D,
+                moves=len(mig.moves), wan_bytes=mig.wan_bytes,
+                replay_samples=mig.replay_samples,
+                projected_gain_ms=mig.projected_gain_ms,
+                duration_ms=mig.duration_ms,
+            )
+            for p in range(ep.n_pipelines):
+                for s in range(ep.spec.num_stages):
+                    tr.span(
+                        "migration-stall", obs.CAT_GPU, f"{lbl}/gpu",
+                        f"p{p}/s{s}", mig.at_ms, t1, dc=ep.spec.stage_dc[s],
+                    )
+        for w in self.outages:
+            t1 = self.t if math.isinf(w.t1_ms) else w.t1_ms
+            tr.span(
+                f"outage:{w.kind}", obs.CAT_CONTROL, pid, "failures",
+                w.t0_ms, t1, **w.trace_args(self.live_topo),
+            )
+
     def result(self) -> HorizonResult:
         self.epoch.end_ms = self.t
+        self._trace_flush()
         return HorizonResult(
             total_ms=self.t,
             samples=self.samples,
@@ -1047,6 +1170,8 @@ def simulate_horizon(
     validate: bool = False,
     failures: Optional[FailureTrace] = None,
     checkpoint: Optional[CheckpointPolicy] = None,
+    tracer=None,
+    trace_label: str = "job",
 ) -> HorizonResult:
     """Co-simulate ``n_iterations`` (of the initial plan's global batch)
     against the live WAN, optionally with the reactive control plane.
@@ -1087,6 +1212,8 @@ def simulate_horizon(
         validate=validate,
         failures=failures,
         checkpoint=checkpoint,
+        tracer=tracer,
+        trace_label=trace_label,
     )
     while not runner.done:
         runner.advance()

@@ -156,6 +156,22 @@ class OutageWindow:
     dc: Optional[str] = None
     pair: Optional[Tuple[str, str]] = None
 
+    def trace_args(self, topo: Optional[TopologyMatrix] = None) -> Dict:
+        """Span args for the tracing layer: the named dc/pair plus their
+        topology indices (when resolvable), so a trace validator can
+        match outage windows against GPU-span ``dc`` indices without a
+        name table."""
+        out: Dict = {}
+        if self.dc is not None:
+            out["dc"] = self.dc
+            if topo is not None and topo.dc_names:
+                out["dc_index"] = topo.index_of(self.dc)
+        if self.pair is not None:
+            out["pair"] = list(self.pair)
+            if topo is not None and topo.dc_names:
+                out["pair_index"] = [topo.index_of(d) for d in self.pair]
+        return out
+
 
 @dataclasses.dataclass(frozen=True)
 class FailureTrace:

@@ -75,7 +75,7 @@ import math
 from collections import deque
 from typing import Deque, Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
-from repro import units
+from repro import obs, units
 from repro.core.bubbletea import (
     NVLINK_GBPS_BYTES,
     BubbleTeaController,
@@ -497,6 +497,7 @@ def simulate_fleet(
     validate: bool = False,
     prefill: Optional[PrefillService] = None,
     failures: Optional[FailureTrace] = None,
+    tracer=None,
 ) -> FleetResult:
     """Co-simulate every job of the fleet over the shared live WAN.
 
@@ -527,8 +528,16 @@ def simulate_fleet(
     migration re-enters the normal cascade plumbing (segment close,
     admission barrier, cascade budget) like a drift migration would.
     Planners still price the raw WAN — failures are always unplanned.
+
+    ``tracer`` (see ``repro.obs``) is shared across every runner: each
+    job's iteration/migration/outage spans land under its own
+    ``{name}/gpu`` / ``{name}/wan`` / ``{name}/control`` lane groups,
+    allocator grant/throttle instants under ``fleet/alloc``, and — at
+    horizon end — one span per ledger ``ChannelReservation`` (training
+    grants *and* ``~prefill`` KV handoffs) under ``fleet/wan``.
     """
     cfg = config if config is not None else FleetConfig()
+    tracing = tracer is not None and getattr(tracer, "enabled", False)
     names = [j.name for j in jobs]
     assert len(set(names)) == len(names), "fleet job names must be unique"
     assert KV_JOB not in names, f"{KV_JOB!r} is reserved for KV handoff"
@@ -553,6 +562,8 @@ def simulate_fleet(
             validate=validate,
             failures=failures,
             checkpoint=j.checkpoint,
+            tracer=tracer,
+            trace_label=j.name,
         )
         for j in jobs
     }
@@ -740,6 +751,7 @@ def simulate_fleet(
             ttft_slo_ms=prefill.ttft_slo_ms,
             tiers=prefill.tiers,
             kv=kvflows,
+            tracer=tracer,
         )
 
     def process_window(t0: float, t1: float, res, spec) -> None:
@@ -827,6 +839,13 @@ def simulate_fleet(
             pj = stats["per_job"][name]
             pj["throttled_iterations"] += 1
             pj["throttled_ms"] += t_end - t0
+        if tracing and reserved and t_end > t0:
+            tracer.instant(
+                "throttle" if throttled else "grant",
+                obs.CAT_FLEET, "fleet/alloc", name, t0,
+                pairs=len(reserved),
+                min_mult=min(mults.values()) if mults else 1.0,
+            )
         if (prefill is not None and name == prefill.host_job
                 and t_end > t0 and r.last_result is not None):
             # queue the window; it is processed only once the fleet's
@@ -909,6 +928,17 @@ def simulate_fleet(
                 busy, span, ctrl
             ),
         }
+    if tracing:
+        # the ledger is final only now: migrations extend holds via
+        # coalescing and KV segments append out of wall-clock order
+        dcn = live_topo.dc_names
+        for hold in reservations:
+            tracer.span(
+                hold.job, obs.CAT_FLEET, "fleet/wan",
+                obs.pair_lane(hold.pair, dcn),
+                hold.t0_ms, hold.t1_ms,
+                rate_gbps=hold.rate_gbps, mult=hold.mult,
+            )
     out = FleetResult(
         jobs=results,
         reservations=reservations,

@@ -116,6 +116,13 @@ class SimResult:
     allreduce_ms: float
     n_pipelines: int
     stats: Optional[Dict] = None  # engine accounting: events, fast_forward, ...
+    # per-transfer WAN channel log (``temporal.Transfer`` records,
+    # iteration-local times), recorded only when a tracer is attached or
+    # ``record_transfers=True`` — the raw material for channel-lane spans
+    # and the ``repro.obs`` second-witness wan_bits cross-check.  For the
+    # replicated baseline path the log covers the one simulated pipeline;
+    # ``stats["replicated_pipelines"]`` scales its accounting.
+    transfers: Optional[List] = None
 
     def stage_bubbles(self, pipeline: int, stage: int) -> List[Tuple[float, float]]:
         return self.bubbles[(pipeline, stage)]
@@ -181,6 +188,9 @@ def simulate(
     validate: bool = False,
     fast_forward: Optional[bool] = None,
     start_ms: float = 0.0,
+    tracer=None,
+    trace_label: str = "sim",
+    record_transfers: Optional[bool] = None,
 ) -> SimResult:
     """Simulate one minibatch (iteration) of ``n_pipelines`` DP pipelines.
 
@@ -212,23 +222,41 @@ def simulate(
     re-integrates the remainder at the new rate.  Intervals stay in
     iteration-local time; static and flat pairs are offset-invariant.
     The horizon co-simulator (``repro.core.control``) drives this.
+
+    ``tracer`` (``repro.obs.Tracer``) records the run as structured
+    sim-time events: GPU spans per busy interval / bubble / allreduce
+    on ``{trace_label}/gpu`` lanes and one channel span per WAN
+    transfer on ``{trace_label}/wan`` lanes, anchored at ``start_ms``.
+    A recording tracer (or ``record_transfers=True``) keeps the
+    per-transfer log on ``SimResult.transfers`` and disables the
+    fast-forward — its analytic extrapolation synthesizes intervals
+    without replaying transfers, and the emitted timeline must show
+    what actually moved on the wire (results are interval-identical by
+    design either way).  ``None``/``NullTracer`` leave the hot path
+    untouched (see the ``trace_overhead`` bench cell).
     """
     assert policy in POLICIES
+    recording = tracer is not None and getattr(tracer, "enabled", False)
+    if record_transfers is None:
+        record_transfers = recording
     D = n_pipelines
     # Baselines: the D pipelines share nothing (per-pipeline channels,
     # GPUs, barriers) — simulate one and replicate.  Atlas pipelines pool
     # WAN channels per cell and must be simulated together.
     replicate = D if (policy != "atlas" and D > 1) else 1
     engine_D = 1 if policy != "atlas" else D
+    transfer_log: Optional[List] = [] if record_transfers else None
 
     def run_raw(s: PipelineSpec):
         if policy == "atlas":
-            return _run_atlas(s, topo, D, start_ms)
-        return _run_events(s, topo, policy, engine_D, start_ms)
+            return _run_atlas(s, topo, D, start_ms, transfer_log=transfer_log)
+        return _run_events(
+            s, topo, policy, engine_D, start_ms, transfer_log=transfer_log
+        )
 
     raw = None
     ff_gate = None
-    if fast_forward is not False:
+    if fast_forward is not False and not record_transfers:
         from repro.core import fastforward
 
         ff_gate = fastforward.fast_forward_gate(spec, topo)
@@ -257,7 +285,20 @@ def simulate(
             for (_, s), ivs in busy.items()
         }
     res = _finalize(spec, topo, busy, pp_end, D, dp_replicas_for_allreduce, stats)
-    return _maybe_validate(res, spec, policy, validate)
+    res.transfers = transfer_log
+    res = _maybe_validate(res, spec, policy, validate)
+    if recording:
+        from repro import obs
+
+        obs.trace_sim_result(
+            tracer,
+            res,
+            spec,
+            label=trace_label,
+            t0_ms=start_ms,
+            dc_names=getattr(topo, "dc_names", None),
+        )
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -266,9 +307,20 @@ def simulate(
 
 
 def _run_events(
-    spec: PipelineSpec, topo, policy: str, D: int, start_ms: float = 0.0
+    spec: PipelineSpec,
+    topo,
+    policy: str,
+    D: int,
+    start_ms: float = 0.0,
+    transfer_log: Optional[List] = None,
 ) -> Tuple[Dict, float, Dict]:
-    """Raw event replay: returns (busy, pipeline end time, engine stats)."""
+    """Raw event replay: returns (busy, pipeline end time, engine stats).
+
+    ``transfer_log`` (a list, or ``None`` to skip) collects one
+    ``temporal.Transfer`` per channel occupancy — the hot path pays one
+    ``is not None`` test per transfer when disabled."""
+    if transfer_log is not None:
+        from repro.core.temporal import Transfer as _Transfer
     P, M = spec.num_stages, spec.microbatches
     recompute = spec.recompute and policy in ("gpipe", "varuna", "atlas")
     inflight_cap = spec.inflight_cap
@@ -386,6 +438,13 @@ def _run_events(
         if sched is not None:
             ser = sched.transfer_ms(spec.act_bytes, start_ms + now)
         chan_free[key] = now + ser
+        if transfer_log is not None:
+            transfer_log.append(
+                _Transfer(
+                    p, min(s_from, s_to), direction, m,
+                    now, now + ser, now + ser + delay,
+                )
+            )
         push(now + ser + delay, "arrive", (p, s_to, direction, m))
         push(now + ser, "chan_free", (key,))
 
@@ -422,13 +481,19 @@ def _run_events(
 
 
 def _run_atlas(
-    spec: PipelineSpec, topo, n_pipelines: int, start_ms: float = 0.0
+    spec: PipelineSpec,
+    topo,
+    n_pipelines: int,
+    start_ms: float = 0.0,
+    transfer_log: Optional[List] = None,
 ) -> Tuple[Dict, float, Dict]:
     from repro.core import temporal
 
     sched = temporal.atlas_schedule(
         spec, topo, n_pipelines, inflight_cap=spec.inflight_cap, start_ms=start_ms
     )
+    if transfer_log is not None:
+        transfer_log.extend(sched.transfers)
     busy: Dict[Tuple[int, int], List[Interval]] = {
         (p, s): [] for p in range(n_pipelines) for s in range(spec.num_stages)
     }

@@ -104,13 +104,21 @@ def atlas_schedule(
     *,
     inflight_cap: Optional[int] = None,
     start_ms: float = 0.0,
+    tracer=None,
 ) -> Schedule:
     """Precompute one iteration's schedule.  ``start_ms`` anchors the
     iteration at an absolute wall-clock offset: time-varying transfers
     are priced against the bandwidth segments in force at
     ``start_ms + (local start)`` — a transfer straddling a segment
     boundary keeps its sent bits and re-integrates the remainder at the
-    new rate.  Task/transfer times stay iteration-local."""
+    new rate.  Task/transfer times stay iteration-local.
+
+    ``tracer`` (``repro.obs.Tracer``, recording) emits the raw schedule
+    as sim-time spans — one GPU span per task on ``atlas/gpu`` lanes,
+    one channel span per WAN transfer on ``atlas/wan`` lanes, anchored
+    at ``start_ms``.  Callers going through ``simulate(policy="atlas")``
+    should pass the tracer there instead: the wrapped result adds the
+    bubble/allreduce accounting and the second-witness expectation."""
     P, M, D = spec.num_stages, spec.microbatches, n_pipelines
     t_f = spec.t_fwd_ms
     t_b = spec.bwd_mult * t_f
@@ -305,4 +313,12 @@ def atlas_schedule(
     makespan = max(t.end for t in tasks)
     if transfers:
         makespan = max(makespan, max(tr.arrive for tr in transfers))
-    return Schedule(tasks, transfers, makespan, P, D)
+    sched = Schedule(tasks, transfers, makespan, P, D)
+    if tracer is not None and getattr(tracer, "enabled", False):
+        from repro import obs
+
+        obs.trace_schedule(
+            tracer, sched, spec, t0_ms=start_ms,
+            dc_names=getattr(topo, "dc_names", None),
+        )
+    return sched

@@ -589,6 +589,22 @@ def check_equivalent(res_a, res_b, *, eps: float = EPS) -> None:
             _fail("bubbles differ", g)
 
 
+def check_trace(tracer) -> int:
+    """Second-witness trace check as an engine invariant: re-derive
+    utilization / bubble / allreduce / wan_bits totals from the spans a
+    :class:`repro.obs.RecordingTracer` collected and compare against the
+    expectations the engines registered at emission time.  Wraps
+    ``obs.crosscheck`` so trace mismatches surface as the same
+    ``InvariantViolation`` family every other checker raises.  Returns
+    the number of iteration windows verified."""
+    from repro import obs
+
+    try:
+        return obs.verify_trace(tracer)
+    except obs.TraceMismatch as e:
+        _fail(f"trace crosscheck failed: {e}")
+
+
 def check_fast_forward(spec, topo, policy: str, n_pipelines: int = 1):
     """Cross-check the steady-state fast-forward against full event
     replay: both paths must produce interval-identical results (and both

@@ -209,7 +209,9 @@ def build_lowerable(arch: str, shape: str, multi_pod: bool, boundary: str = "str
 def wan_projection(dcn_bytes: float, topo,
                    drift: Optional[str] = None,
                    fleet_jobs: int = 0,
-                   fail: Optional[str] = None) -> Dict[str, Any]:
+                   fail: Optional[str] = None,
+                   tracer=None,
+                   trace_label: Optional[str] = None) -> Dict[str, Any]:
     """Project the measured inter-pod DCN bytes onto a WAN topology: the
     per-iteration transfer time if the pod boundary ran over the given
     (possibly heterogeneous) WAN instead of the datacenter DCN.  Uses the
@@ -235,7 +237,13 @@ def wan_projection(dcn_bytes: float, topo,
     boundary transfer is priced three ways — keep riding the dead DC at
     residual rate (static), haul the live state off it over the same
     residual links (ship), or pull the last async checkpoint between
-    healthy DCs at full rate (checkpoint-aware restore)."""
+    healthy DCs at full rate (checkpoint-aware restore).
+
+    ``tracer`` (``repro.obs.Tracer``) additionally *simulates* one
+    iteration of a pipeline whose boundary transfers carry the measured
+    DCN bytes over this WAN, recording GPU and channel spans under the
+    ``trace_label`` lane group — the closed-form projections above as an
+    inspectable Perfetto timeline (exported by ``--trace``)."""
     from repro.core import wan as _wan
     from repro.core.topology import TopologyMatrix
 
@@ -332,6 +340,35 @@ def wan_projection(dcn_bytes: float, topo,
             "restore_s": restore_s,
             "restore_speedup": residual_s / restore_s if restore_s else None,
         }
+    if tracer is not None and getattr(tracer, "enabled", False):
+        import dataclasses as _dc
+
+        from repro.core.control import plan_spec
+        from repro.core.dc_selection import JobModel, algorithm1, best_plan
+        from repro.core.simulator import simulate as _simulate
+
+        sim_topo = topo
+        if not sim_topo.dc_names:
+            sim_topo = _dc.replace(
+                topo, dc_names=tuple(f"dc{i}" for i in range(topo.n_dcs)))
+        # one microbatch's boundary activation carries an even share of
+        # the measured per-step DCN bytes; a nominal 10 ms compute keeps
+        # the bubbles visible next to the WAN transfers
+        m = 8
+        proj_job = JobModel(
+            t_fwd_ms=10.0, act_bytes=max(dcn_bytes, 1.0) / m,
+            partition_param_bytes=2e8, microbatches=m, topology=sim_topo)
+        plan = best_plan(algorithm1(
+            proj_job, {d: 8 for d in sim_topo.dc_names}, P=8, C=1))
+        res = _simulate(plan_spec(proj_job, plan, sim_topo), sim_topo,
+                        validate=True, tracer=tracer,
+                        trace_label=trace_label or "wanproj")
+        out["trace"] = {
+            "label": trace_label or "wanproj",
+            "iteration_ms": res.iteration_ms,
+            "dc_order": [d for d in plan.dc_order
+                         if plan.partitions.get(d, 0)],
+        }
     return out
 
 
@@ -340,7 +377,8 @@ def run_one(arch: str, shape: str, mesh_name: str, boundary: str = "striped",
             wan_preset: Optional[str] = None,
             wan_drift: Optional[str] = None,
             wan_fleet: int = 0,
-            wan_fail: Optional[str] = None) -> Dict[str, Any]:
+            wan_fail: Optional[str] = None,
+            tracer=None, trace_label: Optional[str] = None) -> Dict[str, Any]:
     multi_pod = mesh_name == "multi"
     ok, why = shp.shape_supported(arch, shape)
     if not ok:
@@ -412,7 +450,8 @@ def run_one(arch: str, shape: str, mesh_name: str, boundary: str = "striped",
     }
     if wan_preset:
         result["wan"] = wan_projection(coll["dcn"], wan_preset, drift=wan_drift,
-                                       fleet_jobs=wan_fleet, fail=wan_fail)
+                                       fleet_jobs=wan_fleet, fail=wan_fail,
+                                       tracer=tracer, trace_label=trace_label)
     return result
 
 
@@ -446,9 +485,22 @@ def main():
                          "transfer priced static vs ship-live vs "
                          "checkpoint-aware restore (repro.core.failures); "
                          "e.g. --fail us-west@600")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="with --wan-preset: record the WAN-projection "
+                         "simulations of every combo this run executes and "
+                         "export one Perfetto-loadable Chrome trace "
+                         "(repro.obs; lanes are grouped per combo tag)")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--out", default=OUT_DIR)
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace:
+        if not args.wan_preset:
+            ap.error("--trace requires --wan-preset (it records the WAN-"
+                     "projection simulation)")
+        from repro import obs
+        tracer = obs.RecordingTracer()
 
     os.makedirs(args.out, exist_ok=True)
     archs = [canon(args.arch)] if args.arch else ARCHS[:10]  # assigned 10
@@ -471,7 +523,8 @@ def main():
                                   wan_preset=args.wan_preset,
                                   wan_drift=args.wan_drift,
                                   wan_fleet=args.fleet,
-                                  wan_fail=args.fail)
+                                  wan_fail=args.fail,
+                                  tracer=tracer, trace_label=tag)
                 except Exception as e:
                     res = {"arch": arch, "shape": shape, "mesh": mesh_name,
                            "boundary": args.boundary, "status": "error",
@@ -487,6 +540,18 @@ def main():
                              f"coll={r['collective_s']:.4f}s dcn={r['dcn_bytes']/1e6:.1f}MB "
                              f"compile={res['compile_s']}s")
                 print(f"[{status}] {tag}{extra}", flush=True)
+
+    if tracer is not None:
+        if tracer.n_events:
+            from repro import obs
+            from repro.core.validate import check_trace
+
+            n_windows = check_trace(tracer)  # second witness before export
+            obs.write_chrome_trace(tracer, args.trace, label="dryrun-wan")
+            print(f"[trace] {tracer.n_events} events ({n_windows} windows "
+                  f"crosschecked) -> {args.trace}")
+        else:
+            print("[trace] nothing recorded (all combos cached? use --force)")
 
 
 if __name__ == "__main__":

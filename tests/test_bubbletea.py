@@ -414,9 +414,9 @@ def test_tier_acceptance_monotone_in_slo_slack():
     rep = ctrl.tier_report()
     assert sum(rep[t]["offered"] for t in slos) == len(reqs)
     for t, slo in slos.items():
-        assert rep[t]["ttft_p50"] <= rep[t]["ttft_p95"] <= rep[t]["ttft_p99"]
+        assert rep[t]["ttft_p50_ms"] <= rep[t]["ttft_p95_ms"] <= rep[t]["ttft_p99_ms"]
         if rep[t]["placed"]:
-            assert rep[t]["ttft_p99"] <= slo
+            assert rep[t]["ttft_p99_ms"] <= slo
     assert (rep["tight"]["acceptance"] <= rep["mid"]["acceptance"]
             <= rep["loose"]["acceptance"])
     assert rep["tight"]["acceptance"] < rep["loose"]["acceptance"]

@@ -1,0 +1,321 @@
+"""Unified observability layer (ISSUE 9) — structured tracing, export,
+crosscheck, metrics, schema.
+
+Nets:
+  * Null-tracer differential: attaching a ``NullTracer`` changes no
+    engine output (iteration-identical to the no-tracer call shape).
+  * Second witness: for every engine (single-iteration sim, control
+    horizon, multi-job fleet + prefill) the busy/bubble/allreduce/
+    utilization/wan_bits totals re-derived from the emitted spans agree
+    with the engine's own ``SimResult.stats`` accounting
+    (``obs.verify_trace`` / ``validate.check_trace``) — and a corrupted
+    span set *fails* it (the witness is falsifiable).
+  * Byte determinism: the exported Chrome trace is byte-identical
+    across two in-process runs and across a ``PYTHONHASHSEED``-varied
+    subprocess; ``read_chrome_trace`` round-trips event counts.
+  * CLI: ``python -m repro.obs validate`` accepts a good trace, rejects
+    a busy span planted inside a dead-DC outage window; ``report``
+    emits deterministic JSON metrics.
+  * Schema: the stats-key registry conforms to the units-suffix grammar
+    and every key each engine actually emits is registered — including
+    the PR-9 ``ttft_p{50,95,99}_ms`` rename (regression-tested).
+"""
+import dataclasses
+import hashlib
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import obs
+from repro.core import control, fleet as fl
+from repro.core import topology as tp
+from repro.core import validate as V
+from repro.core import wan
+from repro.core.bubbletea import (ArrivalProcess, InferenceModelSpec,
+                                  PromptMix)
+from repro.core.dc_selection import JobModel, algorithm1, best_plan
+from repro.core.simulator import simulate
+
+
+def _world():
+    lat = [[0.0, 20.0, 20.0], [20.0, 0.0, 20.0], [20.0, 20.0, 0.0]]
+    return tp.TopologyMatrix.from_latency(
+        lat, multi_tcp=True, dc_names=("a", "b", "c"))
+
+
+def _job(**kw):
+    kw.setdefault("t_fwd_ms", 10.0)
+    kw.setdefault("act_bytes", 1e7)
+    kw.setdefault("partition_param_bytes", 2e8)
+    kw.setdefault("microbatches", 24)
+    return JobModel(**kw)
+
+
+def _spec(job, world):
+    plan = best_plan(algorithm1(
+        dataclasses.replace(job, topology=world),
+        {d: 4 for d in world.dc_names}, P=6, C=1))
+    return control.plan_spec(job, plan, world)
+
+
+def _outage_live(world, start_ms=10_000.0, end_ms=200_000.0, factor=10.0):
+    bw = world.link(0, 1).bw_gbps
+    return world.with_bandwidth_schedules({
+        (0, 1): wan.BandwidthSchedule.outage(bw, start_ms, end_ms, bw / factor),
+        (1, 0): wan.BandwidthSchedule.flat(bw),
+    })
+
+
+def _traced_sim(world=None, tracer=None, label="sim"):
+    world = world or _world()
+    tracer = tracer or obs.RecordingTracer()
+    job = _job()
+    res = simulate(_spec(job, world), world, validate=True,
+                   tracer=tracer, trace_label=label)
+    return tracer, res
+
+
+def _traced_fleet(tracer=None, n_iterations=4):
+    """Host + contender + prefill service: the busiest emission path."""
+    world = _world()
+    tracer = tracer or obs.RecordingTracer()
+    job = _job(act_bytes=6e7)
+    arr = ArrivalProcess(rate_per_s=15.0, horizon_ms=15_000.0, seed=7)
+    reqs = arr.generate(PromptMix(lengths=(512, 1024), weights=(0.5, 0.5)),
+                        tiers={"gold": 0.3, "best_effort": 0.7})
+    svc = fl.PrefillService(
+        host_job="A", arrivals=reqs,
+        model=InferenceModelSpec("m", num_params=8e9,
+                                 kv_bytes_per_token=16384.0),
+        decode_dc="c", tiers={"gold": 1_200.0, "best_effort": 8_000.0})
+    fr = fl.simulate_fleet(
+        [fl.FleetJob("A", job, {"a": 2, "b": 2, "c": 2}, P=6,
+                     n_iterations=n_iterations, C=1),
+         fl.FleetJob("B", job, {"a": 2, "b": 2}, P=4,
+                     n_iterations=n_iterations, C=1)],
+        world, prefill=svc, validate=True, tracer=tracer)
+    return tracer, fr
+
+
+# ------------------------------------------------------------- tracer core
+
+
+def test_null_tracer_is_differentially_invisible():
+    world = _world()
+    spec = _spec(_job(), world)
+    bare = simulate(spec, world, validate=True)
+    nulled = simulate(spec, world, validate=True, tracer=obs.NullTracer())
+    assert nulled.iteration_ms == bare.iteration_ms
+    assert nulled.stats["wan_bits"] == bare.stats["wan_bits"]
+    assert nulled.transfers is None  # no silent recording
+
+
+def test_recording_does_not_change_the_answer():
+    world = _world()
+    spec = _spec(_job(), world)
+    bare = simulate(spec, world, validate=True, fast_forward=False)
+    tr = obs.RecordingTracer()
+    rec = simulate(spec, world, validate=True, tracer=tr)
+    assert rec.iteration_ms == bare.iteration_ms
+    assert tr.n_events > 0 and rec.transfers is not None
+
+
+def test_sim_second_witness_passes():
+    tr, res = _traced_sim()
+    assert obs.verify_trace(tr) == 1
+    # the registered expectation is the engine's own accounting
+    (exp,) = tr.expectations
+    assert exp.t1_ms - exp.t0_ms == pytest.approx(res.iteration_ms)
+
+
+def test_horizon_second_witness_and_control_instants():
+    world = _world()
+    tr = obs.RecordingTracer()
+    hz = control.simulate_horizon(
+        _job(), {d: 4 for d in world.dc_names}, P=10,
+        live_topo=_outage_live(world), planned_topo=world,
+        n_iterations=30, C=1, control=control.ControlConfig(),
+        validate=True, tracer=tr, trace_label="jobA")
+    assert obs.verify_trace(tr) == 30
+    names = {i.name for i in tr.instants}
+    assert "drift" in names and "migrated" in names
+    if hz.migrations:
+        stalls = [s for s in tr.spans if s.name == "migration-stall"]
+        migs = [s for s in tr.spans if s.name.startswith("migration:")]
+        assert stalls and len(migs) == len(hz.migrations)
+
+
+def test_fleet_second_witness_ledger_and_prefill_spans():
+    tr, fr = _traced_fleet()
+    assert obs.verify_trace(tr) > 0
+    ledger = [s for s in tr.spans if s.pid == "fleet/wan"]
+    assert len(ledger) == len(fr.reservations)
+    placed = [s for s in tr.spans if s.pid == "prefill" and s.name == "prefill"]
+    assert len(placed) == fr.stats["prefill"]["placed"]
+    kv = [i for i in tr.instants if i.name == "kv_handoff"]
+    assert len(kv) == fr.stats["prefill"]["kv_wan_transfers"]
+
+
+def test_corrupted_span_fails_the_crosscheck():
+    tr, _ = _traced_sim()
+    victim = next(i for i, s in enumerate(tr.spans)
+                  if s.name in obs.BUSY_KINDS)
+    sp = tr.spans[victim]
+    tr.spans[victim] = dataclasses.replace(sp, t1_ms=sp.t1_ms + 7.0)
+    with pytest.raises(obs.TraceMismatch):
+        obs.verify_trace(tr)
+    with pytest.raises(V.InvariantViolation):
+        V.check_trace(tr)
+
+
+# ---------------------------------------------------------------- export
+
+
+def test_export_is_byte_identical_across_runs():
+    a = obs.dump_chrome_trace(_traced_sim()[0], label="golden")
+    b = obs.dump_chrome_trace(_traced_sim()[0], label="golden")
+    assert a == b
+
+
+def test_export_is_byte_identical_across_hashseeds(tmp_path):
+    prog = (
+        "import dataclasses, hashlib, sys\n"
+        "from repro import obs\n"
+        "from repro.core import control, topology as tp\n"
+        "from repro.core.dc_selection import JobModel, algorithm1, best_plan\n"
+        "from repro.core.simulator import simulate\n"
+        "lat = [[0.0, 20.0, 20.0], [20.0, 0.0, 20.0], [20.0, 20.0, 0.0]]\n"
+        "world = tp.TopologyMatrix.from_latency(\n"
+        "    lat, multi_tcp=True, dc_names=('a', 'b', 'c'))\n"
+        "job = JobModel(t_fwd_ms=10.0, act_bytes=1e7,\n"
+        "               partition_param_bytes=2e8, microbatches=24,\n"
+        "               topology=world)\n"
+        "plan = best_plan(algorithm1(job, {d: 4 for d in world.dc_names},\n"
+        "                            P=6, C=1))\n"
+        "tr = obs.RecordingTracer()\n"
+        "simulate(control.plan_spec(job, plan, world), world, validate=True,\n"
+        "         tracer=tr, trace_label='sim')\n"
+        "payload = obs.dump_chrome_trace(tr, label='golden')\n"
+        "sys.stdout.write(hashlib.sha256(payload.encode()).hexdigest())\n"
+    )
+    digests = set()
+    for seed in ("0", "1234"):
+        env = dict(os.environ, PYTHONHASHSEED=seed,
+                   PYTHONPATH=os.pathsep.join(sys.path))
+        out = subprocess.run([sys.executable, "-c", prog], env=env,
+                             capture_output=True, text=True, check=True)
+        digests.add(out.stdout.strip())
+    assert len(digests) == 1
+    # and the subprocesses agree with this process
+    local = obs.dump_chrome_trace(_traced_sim()[0], label="golden")
+    assert hashlib.sha256(local.encode()).hexdigest() in digests
+
+
+def test_read_chrome_trace_round_trip(tmp_path):
+    tr, _ = _traced_sim()
+    path = str(tmp_path / "t.json")
+    obs.write_chrome_trace(tr, path)
+    back = obs.read_chrome_trace(path)
+    assert len(back.spans) == len(tr.spans)
+    assert len(back.instants) == len(tr.instants)
+    assert len(back.counters) == len(tr.counters)
+    assert {s.pid for s in back.spans} == {s.pid for s in tr.spans}
+
+
+# ------------------------------------------------------------------- CLI
+
+
+def test_cli_validate_and_report(tmp_path, capsys):
+    from repro.obs.__main__ import main as cli, report
+    tr, _ = _traced_fleet(n_iterations=2)
+    path = str(tmp_path / "fleet.json")
+    obs.write_chrome_trace(tr, path)
+    assert cli(["validate", path]) == 0
+    assert cli(["report", path]) == 0
+    capsys.readouterr()
+    # report twice -> identical bytes (deterministic summary)
+    assert report(path) == report(path)
+    snap = json.loads(report(path))
+    assert any(k.endswith("/busy_ms") for k in snap["counters"])
+
+
+def test_cli_validate_rejects_busy_span_in_outage(tmp_path):
+    from repro.obs.__main__ import validate_trace_file
+    tr = obs.RecordingTracer()
+    # a dead-DC window and a busy span planted fully inside it
+    tr.span("outage:dc_outage", obs.CAT_CONTROL, "job/control", "failures",
+            1000.0, 5000.0, dc="b", dc_index=1)
+    tr.span("fwd", obs.CAT_GPU, "job/gpu", "p0/s0", 2000.0, 2500.0,
+            pipeline=0, stage=0, dc=1)
+    path = str(tmp_path / "bad.json")
+    obs.write_chrome_trace(tr, path)
+    errors = validate_trace_file(path)
+    assert errors and any("dead dc" in e for e in errors)
+
+
+# ---------------------------------------------------------------- schema
+
+
+def test_schema_registry_conforms_to_units_grammar():
+    assert obs.conformance_errors() == []
+
+
+def test_sim_stats_keys_all_registered():
+    world = _world()
+    res = simulate(_spec(_job(), world), world, validate=True)
+    assert obs.unregistered_keys(res.stats, "sim") == []
+    # the fast-forward path emits extra keys — they must be registered too
+    big = _job(microbatches=256)
+    res_ff = simulate(_spec(big, world), world, validate=True,
+                      fast_forward=True)
+    assert res_ff.stats["fast_forward"] is True
+    assert obs.unregistered_keys(res_ff.stats, "sim") == []
+
+
+def test_horizon_stats_keys_all_registered():
+    world = _world()
+    hz = control.simulate_horizon(
+        _job(), {d: 4 for d in world.dc_names}, P=10,
+        live_topo=_outage_live(world), planned_topo=world,
+        n_iterations=20, C=1, control=control.ControlConfig(),
+        validate=True)
+    assert obs.unregistered_keys(hz.stats, "horizon") == []
+
+
+def test_fleet_stats_keys_all_registered_and_ttft_units_fixed():
+    _, fr = _traced_fleet(n_iterations=2)
+    assert obs.unregistered_keys(fr.stats, "fleet") == []
+    for tier in fr.stats["prefill"]["per_tier"].values():
+        # PR-9 rename: TTFT percentiles carry their unit suffix now
+        assert {"ttft_p50_ms", "ttft_p95_ms", "ttft_p99_ms"} <= set(tier)
+        assert not {"ttft_p50", "ttft_p95", "ttft_p99"} & set(tier)
+
+
+def test_unregistered_key_is_reported():
+    assert obs.unregistered_keys({"definitely_not_a_key": 1}, "sim") == [
+        "definitely_not_a_key"
+    ]
+
+
+# --------------------------------------------------------------- metrics
+
+
+def test_metrics_snapshot_and_diff():
+    tr, res = _traced_sim()
+    snap = obs.metrics_from_tracer(tr).snapshot()
+    label_busy = dict(snap.counters)["sim/gpu/busy_ms"]
+    assert label_busy > 0
+    frac = dict(snap.gauges)["sim/gpu/bubble_frac"]
+    assert 0.0 <= frac <= 1.0
+    # diff against a second identical run is empty
+    tr2, _ = _traced_sim()
+    snap2 = obs.metrics_from_tracer(tr2).snapshot()
+    assert snap.diff(snap2) == {}  # unchanged entries are omitted
+    # diff against a perturbed registry localizes the change
+    reg = obs.MetricsRegistry()
+    reg.count("sim/gpu/busy_ms", label_busy + 5.0)
+    d2 = snap.diff(reg.snapshot())
+    assert "sim/gpu/busy_ms" in d2["counters"]

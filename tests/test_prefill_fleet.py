@@ -105,7 +105,7 @@ def test_gold_tier_meets_tighter_ttft(runs):
     for tier, slo in TIER_SLO.items():
         assert per[tier]["offered"] > 0
         if per[tier]["placed"]:
-            assert per[tier]["ttft_p99"] <= slo
+            assert per[tier]["ttft_p99_ms"] <= slo
 
 
 def test_fleet_prefill_deterministic(runs):
