@@ -1,20 +1,33 @@
 """``repro.analysis`` — static enforcement of the simulator's invariants.
 
-Four AST passes over ``src/`` and ``tests/`` (run as
-``python -m repro.analysis``):
+Seven passes over ``src/`` and ``tests/`` (run as
+``python -m repro.analysis``), the stateful ones built on a shared
+per-function CFG (:mod:`repro.analysis.cfg`) and forward dataflow
+solver (:mod:`repro.analysis.dataflow`) so facts survive branches,
+loops and call boundaries:
 
-* **units** (``units/*``) — dimensional analysis over identifier
-  suffixes; conversions must go through ``repro.units``.
+* **units** (``units/*``) — flow-sensitive dimensional analysis over
+  identifier suffixes; conversions must go through ``repro.units``.
 * **determinism** (``det/*``) — ``repro.core`` is wall-clock-free,
   seeded-RNG-only, and never iterates sets in hash order.
 * **concurrency** (``conc/*``) — queue/thread discipline in threaded
   modules.
 * **api** (``api/*``) — engine calls in tests validate, no exact float
   equality on computed ``_ms`` arithmetic, no mutable defaults.
+* **taint** (``taint/*``) — wall-clock/RNG values never flow
+  (interprocedurally) into tracer events, stats dicts or exports.
+* **resource safety** (``res/*``) — files/locks/threads released on
+  the exceptional path, not just the fall-through one.
+* **schema** (``schema/*``) — literal stats keys are registered in
+  ``repro.obs.schema`` before an engine can emit them.
 
-Silence one finding with ``# lint: ok[rule]`` on its line; the
-baseline file (``analysis_baseline.json``) is shipped empty and CI
-fails on any new finding.
+Silence one finding with ``# lint: ok[rule]`` on its line — audited:
+a suppression that silences nothing (``lint/unused-suppression``) or
+names a nonexistent rule (``lint/unknown-rule``) is itself a finding.
+``--fix`` applies the mechanical remediations; ``--sarif`` exports for
+code-scanning annotations.  The baseline file
+(``analysis_baseline.json``) is shipped empty and CI fails on any new
+finding.
 """
 from repro.analysis.base import (  # noqa: F401
     Finding,

@@ -1,8 +1,15 @@
-"""CLI: ``python -m repro.analysis [--baseline FILE] [paths...]``.
+"""CLI: ``python -m repro.analysis [options] [paths...]``.
 
 Exit status 0 when every finding is baselined (or none exist), 1 when
 new findings are present, 2 on usage errors.  Default paths are
 ``src`` and ``tests`` relative to the current directory.
+
+``--fix`` rewrites the mechanical findings in place (``sorted()`` wrap
+for ``det/set-iteration``, ``None``-sentinel for
+``api/mutable-default``) and re-lints; ``--sarif FILE`` writes the
+(post-baseline) findings as SARIF 2.1.0 for code-scanning ingestion.
+The whole-tree signature registry is cached per file-content hash in
+``.repro_analysis_cache.json`` (untracked; delete freely).
 """
 from __future__ import annotations
 
@@ -12,13 +19,23 @@ import os
 import sys
 from typing import List
 
-from repro.analysis import all_rules, analyze_paths, load_baseline
+from repro.analysis import all_rules, load_baseline
+from repro.analysis.base import (
+    build_signature_registry_cached,
+    load_modules,
+    run_passes,
+)
+from repro.analysis.fix import apply_fixes
+from repro.analysis.sarif import sarif_payload
+
+CACHE_PATH = ".repro_analysis_cache.json"
 
 
 def main(argv: List[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="units/determinism/concurrency/API lint over the repo",
+        description="units/determinism/concurrency/API/taint/resource/schema "
+        "lint over the repo",
     )
     ap.add_argument("paths", nargs="*", help="files or directories (default: src tests)")
     ap.add_argument(
@@ -28,13 +45,29 @@ def main(argv: List[str] | None = None) -> int:
     )
     ap.add_argument("--json", action="store_true", help="emit findings as JSON")
     ap.add_argument(
+        "--sarif",
+        metavar="FILE",
+        help="write findings as SARIF 2.1.0 (GitHub code-scanning format)",
+    )
+    ap.add_argument(
+        "--fix",
+        action="store_true",
+        help="rewrite mechanical findings in place "
+        "(det/set-iteration, api/mutable-default), then re-lint",
+    )
+    ap.add_argument(
+        "--no-cache",
+        action="store_true",
+        help="skip the signature-registry content-hash cache",
+    )
+    ap.add_argument(
         "--list-rules", action="store_true", help="print every rule id and exit"
     )
     args = ap.parse_args(argv)
 
     if args.list_rules:
         for rule, desc in sorted(all_rules().items()):
-            print(f"{rule:28s} {desc}")
+            print(f"{rule:32s} {desc}")
         return 0
 
     paths = args.paths or [p for p in ("src", "tests") if os.path.isdir(p)]
@@ -42,14 +75,37 @@ def main(argv: List[str] | None = None) -> int:
         print("error: no paths given and no src/ or tests/ here", file=sys.stderr)
         return 2
 
-    findings = analyze_paths(paths)
+    known = set()
     if args.baseline:
         try:
             known = load_baseline(args.baseline)
         except (OSError, ValueError, KeyError) as e:
             print(f"error: cannot read baseline {args.baseline}: {e}", file=sys.stderr)
             return 2
-        findings = [f for f in findings if f.fingerprint() not in known]
+
+    def analyze():
+        modules = load_modules(paths)
+        if args.no_cache:
+            registry = None  # run_passes builds it uncached
+        else:
+            registry = build_signature_registry_cached(modules, CACHE_PATH)
+        found = run_passes(modules, registry)
+        return modules, [f for f in found if f.fingerprint() not in known]
+
+    modules, findings = analyze()
+
+    if args.fix:
+        rewrites = apply_fixes(modules, findings)
+        for path, new_source in rewrites.items():
+            with open(path, "w", encoding="utf-8") as fh:
+                fh.write(new_source)
+            print(f"fixed: {path}", file=sys.stderr)
+        if rewrites:
+            modules, findings = analyze()  # re-lint the rewritten tree
+
+    if args.sarif:
+        with open(args.sarif, "w", encoding="utf-8") as fh:
+            json.dump(sarif_payload(findings), fh, indent=2)
 
     if args.json:
         print(

@@ -39,6 +39,48 @@ class Finding:
         return (self.rule, self.path, self.line)
 
 
+class ModuleIndex:
+    """Facts every pass needs, collected in ONE recursive walk of the
+    tree (several passes used to re-walk the whole module each)."""
+
+    __slots__ = ("functions", "called_names", "from_imports", "import_roots")
+
+    def __init__(self, tree: ast.Module) -> None:
+        self.functions: List[ast.AST] = []  # every (nested) function def
+        #: id(fn) -> names called directly in fn's own body (innermost
+        #: attribution: nested defs keep their own call sets)
+        self.called_names: Dict[int, Set[str]] = {}
+        self.from_imports: Dict[str, str] = {}  # local name -> "module.orig"
+        self.import_roots: Set[str] = set()  # top-level imported module names
+        self._walk(tree, None)
+
+    def _walk(self, node: ast.AST, fn_calls: Optional[Set[str]]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions.append(child)
+                calls: Set[str] = set()
+                self.called_names[id(child)] = calls
+                self._walk(child, calls)
+                continue
+            if isinstance(child, ast.Call) and fn_calls is not None:
+                f = child.func
+                if isinstance(f, ast.Name):
+                    fn_calls.add(f.id)
+                elif isinstance(f, ast.Attribute):
+                    fn_calls.add(f.attr)
+            elif isinstance(child, ast.Import):
+                self.import_roots.update(
+                    a.name.split(".")[0] for a in child.names
+                )
+            elif isinstance(child, ast.ImportFrom):
+                if child.module:
+                    self.import_roots.add(child.module.split(".")[0])
+                    for a in child.names:
+                        local = a.asname or a.name
+                        self.from_imports[local] = f"{child.module}.{a.name}"
+            self._walk(child, fn_calls)
+
+
 @dataclasses.dataclass
 class Module:
     """A parsed source file plus everything passes need to scope rules."""
@@ -47,6 +89,30 @@ class Module:
     source: str
     tree: ast.Module
     suppressions: Dict[int, Set[str]]  # line -> suppressed rule names/prefixes
+    _index: Optional[ModuleIndex] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _cfg_cache: Dict[int, object] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+
+    @property
+    def index(self) -> ModuleIndex:
+        if self._index is None:
+            self._index = ModuleIndex(self.tree)
+        return self._index
+
+    def cfg(self, body):
+        """Shared per-body CFG, memoized so the dataflow passes build
+        each function's graph once (keyed by the body list's identity —
+        the tree outlives the Module, so ids are stable)."""
+        from repro.analysis.cfg import build_cfg
+
+        key = id(body)
+        g = self._cfg_cache.get(key)
+        if g is None:
+            g = self._cfg_cache[key] = build_cfg(body)
+        return g
 
     @property
     def is_core(self) -> bool:
@@ -81,7 +147,10 @@ class Module:
 
 def _parse_suppressions(source: str) -> Dict[int, Set[str]]:
     out: Dict[int, Set[str]] = {}
-    # tokenize so string literals containing "# lint: ok[...]" don't count
+    if "lint:" not in source:
+        return out  # tokenizing is ~half of parse cost; skip when clean
+    # tokenize so suppression-shaped text inside string literals (test
+    # fixtures!) doesn't count — only real comments do
     try:
         import io
 
@@ -137,9 +206,7 @@ SignatureRegistry = Dict[str, Optional[Tuple[str, ...]]]
 def build_signature_registry(modules: Sequence[Module]) -> SignatureRegistry:
     reg: SignatureRegistry = {}
     for mod in modules:
-        for node in ast.walk(mod.tree):
-            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                continue
+        for node in mod.index.functions:
             a = node.args
             if a.vararg or a.kwarg or a.posonlyargs:
                 params: Optional[Tuple[str, ...]] = None
@@ -152,6 +219,65 @@ def build_signature_registry(modules: Sequence[Module]) -> SignatureRegistry:
                 reg[node.name] = None  # ambiguous across defs
             else:
                 reg[node.name] = params
+    return reg
+
+
+def _merge_signatures(
+    reg: SignatureRegistry, file_sigs: Dict[str, Optional[List[str]]]
+) -> None:
+    for name, params in file_sigs.items():
+        tup = tuple(params) if params is not None else None
+        if name in reg and reg[name] != tup:
+            reg[name] = None
+        else:
+            reg[name] = tup
+
+
+def build_signature_registry_cached(
+    modules: Sequence[Module], cache_path: str
+) -> SignatureRegistry:
+    """Whole-tree registry with a per-file cache keyed by source hash.
+
+    The registry is a pure function of each file's function signatures,
+    so per-file results are cached under the file's content hash and the
+    whole-tree merge is recomputed from the (cheap) per-file maps.  The
+    cache lives outside version control (see .gitignore) so CI's
+    ``--fix`` no-diff gate never sees it.  A corrupt or stale cache is
+    ignored, never trusted.
+    """
+    import hashlib
+
+    try:
+        with open(cache_path, encoding="utf-8") as f:
+            cache = json.load(f)
+        if not isinstance(cache, dict):
+            cache = {}
+    except (OSError, ValueError):
+        cache = {}
+
+    fresh: Dict[str, Dict] = {}
+    reg: SignatureRegistry = {}
+    dirty = False
+    for mod in modules:
+        digest = hashlib.sha256(mod.source.encode("utf-8")).hexdigest()
+        entry = cache.get(mod.path)
+        if entry is not None and entry.get("hash") == digest:
+            file_sigs = entry["signatures"]
+        else:
+            per_file = build_signature_registry([mod])
+            file_sigs = {
+                name: (list(params) if params is not None else None)
+                for name, params in per_file.items()
+            }
+            dirty = True
+        fresh[mod.path] = {"hash": digest, "signatures": file_sigs}
+        _merge_signatures(reg, file_sigs)
+    if dirty or set(cache) != set(fresh):
+        try:
+            with open(cache_path, "w", encoding="utf-8") as f:
+                json.dump(fresh, f)
+        except OSError:
+            pass  # caching is best-effort; the registry is already built
     return reg
 
 
@@ -169,25 +295,99 @@ def load_baseline(path: str) -> Set[Tuple[str, str, int]]:
     return out
 
 
-def run_passes(modules: Sequence[Module]) -> List[Finding]:
-    """Run every pass over ``modules``; inline suppressions applied."""
-    from repro.analysis import api_pass, concurrency_pass, determinism_pass, units_pass
+def _pass_modules():
+    from repro.analysis import (
+        api_pass,
+        concurrency_pass,
+        determinism_pass,
+        res_pass,
+        schema_pass,
+        taint_pass,
+        units_pass,
+    )
 
-    registry = build_signature_registry(modules)
+    return (
+        units_pass,
+        determinism_pass,
+        concurrency_pass,
+        api_pass,
+        taint_pass,
+        res_pass,
+        schema_pass,
+    )
+
+
+#: meta-rules emitted by the driver itself (suppression hygiene); they
+#: are not themselves suppressible — fix the comment instead
+META_RULES = {
+    "lint/unused-suppression": "`# lint: ok[...]` comment that silences "
+    "nothing on its line (the finding was fixed, or the rule never fired "
+    "here) — delete it",
+    "lint/unknown-rule": "`# lint: ok[...]` names a rule or pass that "
+    "does not exist",
+}
+
+
+def _suppression_findings(
+    modules: Sequence[Module], raw: Sequence[Finding]
+) -> List[Finding]:
+    """Suppression-rot audit: a ``# lint: ok[...]`` that matches no
+    finding on its line is dead weight, and one naming a nonexistent
+    rule never worked at all."""
+    rules = all_rules()
+    prefixes = {r.split("/", 1)[0] for r in rules}
+    by_line: Dict[Tuple[str, int], List[Finding]] = {}
+    for f in raw:
+        by_line.setdefault((f.path, f.line), []).append(f)
+    out: List[Finding] = []
+    for mod in modules:
+        for line, tokens in sorted(mod.suppressions.items()):
+            hits = by_line.get((mod.path, line), [])
+            for tok in sorted(tokens):
+                if tok not in rules and tok not in prefixes:
+                    out.append(
+                        Finding(
+                            "lint/unknown-rule", mod.path, line, 0,
+                            f"suppression names unknown rule {tok!r} "
+                            "(see --list-rules)",
+                        )
+                    )
+                    continue
+                used = any(
+                    f.rule == tok or f.rule.startswith(tok + "/") for f in hits
+                )
+                if not used:
+                    out.append(
+                        Finding(
+                            "lint/unused-suppression", mod.path, line, 0,
+                            f"suppression for {tok!r} matches no finding "
+                            "on this line; delete it",
+                        )
+                    )
+    return out
+
+
+def run_passes(
+    modules: Sequence[Module], registry: Optional[SignatureRegistry] = None
+) -> List[Finding]:
+    """Run every pass over ``modules``; inline suppressions applied and
+    audited (dead or misspelled suppressions are themselves findings)."""
+    if registry is None:
+        registry = build_signature_registry(modules)
     findings: List[Finding] = []
     by_path = {m.path: m for m in modules}
-    for pass_mod in (units_pass, determinism_pass, concurrency_pass, api_pass):
+    for pass_mod in _pass_modules():
         findings.extend(pass_mod.run(modules, registry))
     kept = [f for f in findings if not by_path[f.path].suppressed(f)]
+    kept.extend(_suppression_findings(modules, findings))
     kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
     return kept
 
 
 def all_rules() -> Dict[str, str]:
     """rule id -> one-line description, aggregated from every pass."""
-    from repro.analysis import api_pass, concurrency_pass, determinism_pass, units_pass
-
     out: Dict[str, str] = {}
-    for pass_mod in (units_pass, determinism_pass, concurrency_pass, api_pass):
+    for pass_mod in _pass_modules():
         out.update(pass_mod.RULES)
+    out.update(META_RULES)
     return out

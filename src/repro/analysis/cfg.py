@@ -1,0 +1,222 @@
+"""Per-function control-flow graphs for the dataflow passes.
+
+PR-8's per-statement walkers processed ``if``/``else`` bodies
+*sequentially* against one mutable environment: the last branch's
+bindings leaked into the fall-through state, loop bodies were seen
+exactly once (no back edge), and facts established before a branch were
+silently overwritten by facts that only hold inside it.  The dataflow
+passes need the real shape: a graph of basic blocks whose edges carry
+abstract states, joined at merge points and iterated to a fixpoint
+around loops (:mod:`repro.analysis.dataflow`).
+
+The CFG is statement-granular and deliberately small:
+
+* A :class:`Block` holds a list of :class:`Element`\\ s — simple
+  statements plus synthetic elements for the *evaluated parts* of
+  compound statements (an ``if``/``while`` test, a ``for`` iterable and
+  its target binding, a ``with`` context expression).
+* ``if``/``else`` fork and re-join; ``while``/``for`` get a loop-header
+  block with a back edge from the body end (and from ``continue``);
+  ``break`` jumps to the loop exit; ``return``/``raise`` edge to the
+  single exit block.
+* ``try`` is approximated conservatively: every block of the protected
+  body (and the state *before* the try) edges to every handler entry —
+  an exception may fire before any given statement completes, so the
+  handler must join all of them.  ``finally`` runs after the body,
+  ``orelse`` and every handler.
+* ``match`` forks per case and re-joins (plus a no-case-matched edge).
+
+Unreachable code (statements after a terminator) still gets blocks so
+the report sweep can check it; those blocks simply have no predecessors
+and start from the initial state.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+#: element kinds — what the transfer function is asked to interpret
+STMT = "stmt"  # a simple statement, interpreted whole
+TEST = "test"  # the test expression of an if/while (evaluate only)
+FOR = "for"  # a for-statement header: evaluate iter, bind target
+WITH = "with"  # a with-statement header: evaluate items, bind as-names
+
+
+@dataclasses.dataclass
+class Element:
+    kind: str
+    node: ast.AST
+
+
+@dataclasses.dataclass
+class Block:
+    id: int
+    elements: List[Element] = dataclasses.field(default_factory=list)
+    succs: List[int] = dataclasses.field(default_factory=list)
+    preds: List[int] = dataclasses.field(default_factory=list)
+    is_loop_header: bool = False
+
+
+@dataclasses.dataclass
+class CFG:
+    blocks: List[Block]
+    entry: int
+    exit: int
+
+    def block(self, bid: int) -> Block:
+        return self.blocks[bid]
+
+
+class _Builder:
+    def __init__(self) -> None:
+        self.blocks: List[Block] = []
+        #: (header_id, after_id) per enclosing loop, innermost last
+        self.loop_stack: List[Tuple[int, int]] = []
+
+    def new_block(self, *, loop_header: bool = False) -> int:
+        b = Block(id=len(self.blocks), is_loop_header=loop_header)
+        self.blocks.append(b)
+        return b.id
+
+    def edge(self, a: int, b: int) -> None:
+        if b not in self.blocks[a].succs:
+            self.blocks[a].succs.append(b)
+            self.blocks[b].preds.append(a)
+
+    def build(self, body: Sequence[ast.stmt]) -> CFG:
+        entry = self.new_block()
+        exit_id = self.new_block()
+        self.exit = exit_id
+        end = self.body(body, entry)
+        if end is not None:
+            self.edge(end, exit_id)
+        return CFG(self.blocks, entry, exit_id)
+
+    # ------------------------------------------------------------------
+
+    def body(self, stmts: Sequence[ast.stmt], cur: Optional[int]) -> Optional[int]:
+        """Append ``stmts`` starting at block ``cur``; return the open
+        block at the end, or None if every path terminated."""
+        for stmt in stmts:
+            if cur is None:
+                # unreachable code: give it a block anyway so the report
+                # sweep still checks it
+                cur = self.new_block()
+            cur = self.stmt(stmt, cur)
+        return cur
+
+    def stmt(self, stmt: ast.stmt, cur: int) -> Optional[int]:
+        blocks = self.blocks
+        if isinstance(stmt, (ast.Return, ast.Raise)):
+            blocks[cur].elements.append(Element(STMT, stmt))
+            self.edge(cur, self.exit)
+            return None
+        if isinstance(stmt, ast.Break):
+            if self.loop_stack:
+                self.edge(cur, self.loop_stack[-1][1])
+            return None
+        if isinstance(stmt, ast.Continue):
+            if self.loop_stack:
+                self.edge(cur, self.loop_stack[-1][0])
+            return None
+        if isinstance(stmt, ast.If):
+            blocks[cur].elements.append(Element(TEST, stmt.test))
+            after = self.new_block()
+            then_entry = self.new_block()
+            self.edge(cur, then_entry)
+            then_end = self.body(stmt.body, then_entry)
+            if then_end is not None:
+                self.edge(then_end, after)
+            if stmt.orelse:
+                else_entry = self.new_block()
+                self.edge(cur, else_entry)
+                else_end = self.body(stmt.orelse, else_entry)
+                if else_end is not None:
+                    self.edge(else_end, after)
+            else:
+                self.edge(cur, after)
+            return after if blocks[after].preds else None
+        if isinstance(stmt, (ast.While, ast.For, ast.AsyncFor)):
+            header = self.new_block(loop_header=True)
+            self.edge(cur, header)
+            if isinstance(stmt, ast.While):
+                blocks[header].elements.append(Element(TEST, stmt.test))
+            else:
+                blocks[header].elements.append(Element(FOR, stmt))
+            after = self.new_block()
+            body_entry = self.new_block()
+            self.edge(header, body_entry)
+            self.edge(header, after)
+            self.loop_stack.append((header, after))
+            body_end = self.body(stmt.body, body_entry)
+            self.loop_stack.pop()
+            if body_end is not None:
+                self.edge(body_end, header)
+            if stmt.orelse:
+                return self.body(stmt.orelse, after)
+            return after
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            blocks[cur].elements.append(Element(WITH, stmt))
+            return self.body(stmt.body, cur)
+        if isinstance(stmt, ast.Try):
+            body_entry = self.new_block()
+            self.edge(cur, body_entry)
+            mark = len(blocks)
+            body_end = self.body(stmt.body, body_entry)
+            body_blocks = [body_entry] + [b.id for b in blocks[mark:]]
+            handler_ends: List[int] = []
+            handler_entries: List[int] = []
+            for h in stmt.handlers:
+                h_entry = self.new_block()
+                handler_entries.append(h_entry)
+                if h.name is not None:
+                    # bind the exception name: synthesize a no-value stmt
+                    blocks[h_entry].elements.append(Element(STMT, h))
+                h_end = self.body(h.body, h_entry)
+                if h_end is not None:
+                    handler_ends.append(h_end)
+            # an exception can fire before any statement of the body
+            # completes: handlers join the pre-try state and every
+            # body-block out-state
+            for h_entry in handler_entries:
+                self.edge(cur, h_entry)
+                for bb in body_blocks:
+                    self.edge(bb, h_entry)
+            if stmt.orelse and body_end is not None:
+                body_end = self.body(stmt.orelse, body_end)
+            norm_ends = [e for e in [body_end] + handler_ends if e is not None]
+            if stmt.finalbody:
+                final_entry = self.new_block()
+                for e in norm_ends:
+                    self.edge(e, final_entry)
+                if not norm_ends:
+                    # every path raised/returned; finally still runs
+                    self.edge(cur, final_entry)
+                return self.body(stmt.finalbody, final_entry)
+            if not norm_ends:
+                return None
+            after = self.new_block()
+            for e in norm_ends:
+                self.edge(e, after)
+            return after
+        if isinstance(stmt, ast.Match):
+            blocks[cur].elements.append(Element(TEST, stmt.subject))
+            after = self.new_block()
+            self.edge(cur, after)  # no case matched
+            for case in stmt.cases:
+                c_entry = self.new_block()
+                self.edge(cur, c_entry)
+                c_end = self.body(case.body, c_entry)
+                if c_end is not None:
+                    self.edge(c_end, after)
+            return after
+        # simple statement (incl. nested FunctionDef/ClassDef, which the
+        # passes recurse into independently)
+        blocks[cur].elements.append(Element(STMT, stmt))
+        return cur
+
+
+def build_cfg(body: Sequence[ast.stmt]) -> CFG:
+    """CFG over a statement list (a function body or a module body)."""
+    return _Builder().build(body)

@@ -1,0 +1,185 @@
+"""Generic forward dataflow solver over :mod:`repro.analysis.cfg`.
+
+A pass supplies a :class:`ForwardAnalysis` — an initial state, a
+per-element transfer function and a join — and gets back the fixpoint
+entry state of every block.  States are plain ``dict``\\ s (variable →
+abstract value); the solver treats them opaquely apart from equality.
+
+Termination: the worklist iterates until no entry state changes.  Joins
+must be monotone (the solver *accumulates* — a block's new entry state
+is ``join(old, incoming)``, never a recomputation from scratch), and a
+widening hook bounds loops whose abstract values keep refining: after
+``WIDEN_AFTER`` visits of the same block, any key still changing is
+forced to the analysis' top value.  With the passes' finite-height
+value lattices widening is a safety net, not the common path.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+from repro.analysis.cfg import CFG, Block, Element
+
+State = Dict[str, object]
+
+#: visits of one block before the solver starts widening its entry state
+WIDEN_AFTER = 16
+#: hard per-block visit bound (defense in depth; unreachable in practice)
+VISIT_LIMIT = 64
+
+
+class ForwardAnalysis:
+    """Interface a dataflow pass implements.  ``transfer_element`` must
+    return a *new or mutated copy* — the solver hands it a private
+    copy — and must be deterministic."""
+
+    #: the analysis' ⊤ (forced by widening); None is a safe default for
+    #: passes whose UNKNOWN is None
+    TOP: object = None
+
+    def initial(self) -> State:
+        return {}
+
+    def copy(self, state: State) -> State:
+        return dict(state)
+
+    def transfer_element(self, state: State, elem: Element, report: bool) -> State:
+        raise NotImplementedError
+
+    def join_value(self, a: object, b: object) -> object:
+        raise NotImplementedError
+
+    def missing_value(self, name: str) -> object:
+        """Value of a variable absent from one side of a join (e.g. the
+        name's declared unit, or the analysis' bottom)."""
+        return self.TOP
+
+    def join(self, a: State, b: State) -> State:
+        out: State = {}
+        for k in a.keys() | b.keys():
+            av = a[k] if k in a else self.missing_value(k)
+            bv = b[k] if k in b else self.missing_value(k)
+            out[k] = self.join_value(av, bv)
+        return out
+
+    def widen(self, old: State, new: State) -> State:
+        """Force every key that is still changing to TOP."""
+        out = dict(new)
+        for k, v in out.items():
+            if old.get(k, self.missing_value(k)) != v:
+                out[k] = self.TOP
+        return out
+
+
+def transfer_block(
+    analysis: ForwardAnalysis, state: State, block: Block, report: bool
+) -> State:
+    for elem in block.elements:
+        state = analysis.transfer_element(state, elem, report)
+    return state
+
+
+def _reverse_postorder(cfg: CFG) -> Optional[List[int]]:
+    """Blocks reachable from the entry in reverse post-order, or None
+    when the reachable subgraph has a cycle (a loop back edge)."""
+    color: Dict[int, int] = {cfg.entry: 1}  # 1 = on stack, 2 = done
+    stack: List[list] = [[cfg.entry, iter(cfg.block(cfg.entry).succs)]]
+    post: List[int] = []
+    while stack:
+        frame = stack[-1]
+        pushed = False
+        for s in frame[1]:
+            c = color.get(s)
+            if c == 1:
+                return None  # back edge
+            if c is None:
+                color[s] = 1
+                stack.append([s, iter(cfg.block(s).succs)])
+                pushed = True
+                break
+        if not pushed:
+            color[frame[0]] = 2
+            post.append(frame[0])
+            stack.pop()
+    post.reverse()
+    return post
+
+
+def solve(cfg: CFG, analysis: ForwardAnalysis) -> Dict[int, State]:
+    """Fixpoint entry state per block id.  Blocks unreachable from the
+    entry keep the initial state (the report sweep still checks them)."""
+    if len(cfg.blocks) == 2:
+        # entry + exit only: a straight-line body with no joins — the
+        # fixpoint is the initial state, no transfer evaluation needed
+        # (the report sweep will run the transfers exactly once)
+        return {cfg.entry: analysis.initial()}
+    rpo = _reverse_postorder(cfg)
+    if rpo is not None:
+        # acyclic: one pass in topological order IS the fixpoint — every
+        # predecessor's out-state is final before its successors join it
+        reachable = set(rpo)
+        entry_states = {cfg.entry: analysis.initial()}
+        outs: Dict[int, State] = {}
+        for bid in rpo:
+            if bid == cfg.entry:
+                state = entry_states[cfg.entry]
+            else:
+                state = None
+                for p in cfg.block(bid).preds:
+                    if p not in reachable:
+                        continue  # dead pred: the worklist never ran it
+                    state = (
+                        analysis.copy(outs[p]) if state is None
+                        else analysis.join(state, outs[p])
+                    )
+                entry_states[bid] = state
+            outs[bid] = transfer_block(
+                analysis, analysis.copy(state), cfg.block(bid), report=False
+            )
+        return entry_states
+    entry_states = {cfg.entry: analysis.initial()}
+    visits: Dict[int, int] = {}
+    work = deque([cfg.entry])
+    queued = {cfg.entry}
+    while work:
+        bid = work.popleft()
+        queued.discard(bid)
+        n = visits.get(bid, 0) + 1
+        visits[bid] = n
+        if n > VISIT_LIMIT:
+            continue
+        block = cfg.block(bid)
+        out = transfer_block(
+            analysis, analysis.copy(entry_states[bid]), block, report=False
+        )
+        for succ in block.succs:
+            old = entry_states.get(succ)
+            if old is None:
+                merged = analysis.copy(out)
+            else:
+                merged = analysis.join(old, out)
+                if visits.get(succ, 0) >= WIDEN_AFTER:
+                    merged = analysis.widen(old, merged)
+            if old is None or merged != old:
+                entry_states[succ] = merged
+                if succ not in queued:
+                    work.append(succ)
+                    queued.add(succ)
+    return entry_states
+
+
+def report_sweep(
+    cfg: CFG,
+    analysis: ForwardAnalysis,
+    entry_states: Dict[int, State],
+    on_block: Optional[Callable[[Block, State], None]] = None,
+) -> None:
+    """One emission pass: every block visited exactly once with its
+    fixpoint entry state (initial state when unreachable), transfer run
+    with ``report=True`` so checks fire exactly once per site."""
+    for block in cfg.blocks:
+        state = entry_states.get(block.id)
+        state = analysis.initial() if state is None else analysis.copy(state)
+        if on_block is not None:
+            on_block(block, state)
+        transfer_block(analysis, state, block, report=True)

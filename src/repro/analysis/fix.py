@@ -1,0 +1,171 @@
+"""Autofixes for the mechanical rules (``--fix``).
+
+Two rules have a single canonical remediation and get one:
+
+* ``det/set-iteration`` — wrap the iterated set expression in
+  ``sorted(...)``.  ``sorted`` is the sanctioned order; the wrap is
+  behavior-defining, not behavior-preserving, which is exactly the
+  point.
+* ``api/mutable-default`` — replace the mutable default with ``None``
+  and materialize it at call time behind an ``if param is None:`` guard
+  inserted at the top of the function body (after the docstring).
+
+Fixes are driven by the *filtered* finding list — suppressed or
+baselined findings are never rewritten — and edits are applied
+bottom-up so earlier spans stay valid.  Running ``--fix`` twice is a
+no-op by construction: a wrapped iteration is no longer set-valued to
+the determinism pass, and a ``None`` default is no longer mutable.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.base import Finding, Module
+
+FIXABLE_RULES = ("det/set-iteration", "api/mutable-default")
+
+# one edit: replace [start, end) (line/col, 1-based lines) with text
+Edit = Tuple[int, int, int, int, str]
+
+
+def _segment(lines: List[str], n: ast.expr) -> str:
+    if n.lineno == n.end_lineno:
+        return lines[n.lineno - 1][n.col_offset:n.end_col_offset]
+    parts = [lines[n.lineno - 1][n.col_offset:]]
+    parts.extend(lines[i] for i in range(n.lineno, n.end_lineno - 1))
+    parts.append(lines[n.end_lineno - 1][:n.end_col_offset])
+    return "\n".join(parts)
+
+
+def _iter_exprs(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            yield node.iter
+        elif isinstance(node, ast.comprehension):
+            yield node.iter
+
+
+def _defaults_with_params(fn) -> List[Tuple[str, ast.expr]]:
+    a = fn.args
+    out: List[Tuple[str, ast.expr]] = []
+    pos = list(a.posonlyargs) + list(a.args)
+    for arg, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        out.append((arg.arg, default))
+    for arg, default in zip(a.kwonlyargs, a.kw_defaults):
+        if default is not None:
+            out.append((arg.arg, default))
+    return out
+
+
+def _body_insert_point(fn, lines: List[str]) -> Tuple[int, str]:
+    """(1-based line to insert before, indent string) for a guard at the
+    top of ``fn``'s body, skipping the docstring."""
+    body = fn.body
+    first = body[0]
+    if (
+        isinstance(first, ast.Expr)
+        and isinstance(first.value, ast.Constant)
+        and isinstance(first.value.value, str)
+        and len(body) > 1
+    ):
+        first = body[1]
+    indent = lines[first.lineno - 1][: first.col_offset]
+    return first.lineno, indent
+
+
+def fix_module(mod: Module, findings: Sequence[Finding]) -> str:
+    """New source for ``mod`` with every fixable finding remediated."""
+    lines = mod.source.splitlines()
+    edits: List[Edit] = []
+
+    set_iter_sites = {
+        (f.line, f.col) for f in findings if f.rule == "det/set-iteration"
+    }
+    for it in _iter_exprs(mod.tree):
+        if (it.lineno, it.col_offset) in set_iter_sites:
+            edits.append(
+                (
+                    it.lineno, it.col_offset, it.end_lineno, it.end_col_offset,
+                    f"sorted({_segment(lines, it)})",
+                )
+            )
+
+    default_sites = {
+        (f.line, f.col) for f in findings if f.rule == "api/mutable-default"
+    }
+    if default_sites:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            guards: List[str] = []
+            for param, default in _defaults_with_params(node):
+                if (default.lineno, default.col_offset) not in default_sites:
+                    continue
+                literal = _segment(lines, default)
+                edits.append(
+                    (
+                        default.lineno, default.col_offset,
+                        default.end_lineno, default.end_col_offset,
+                        "None",
+                    )
+                )
+                guards.append((param, literal))
+            if guards:
+                at, indent = _body_insert_point(node, lines)
+                text = "".join(
+                    f"{indent}if {param} is None:\n"
+                    f"{indent}    {param} = {literal}\n"
+                    for param, literal in guards
+                )
+                edits.append((at, 0, at, 0, text))
+
+    return _apply(lines, edits)
+
+
+def _apply(lines: List[str], edits: List[Edit]) -> str:
+    text = "\n".join(lines) + "\n"
+    # to flat offsets
+    starts: List[int] = []
+    off = 0
+    for ln in lines:
+        starts.append(off)
+        off += len(ln) + 1
+
+    def flat(line: int, col: int) -> int:
+        return starts[line - 1] + col
+
+    spans = sorted(
+        ((flat(a, b), flat(c, d), rep) for a, b, c, d, rep in edits),
+        key=lambda e: (e[0], e[1]),
+        reverse=True,
+    )
+    last_start = None
+    for s, e, rep in spans:
+        if last_start is not None and e > last_start:
+            continue  # overlapping edit (shouldn't happen); keep the later one
+        text = text[:s] + rep + text[e:]
+        last_start = s
+    return text
+
+
+def apply_fixes(
+    modules: Sequence[Module], findings: Sequence[Finding]
+) -> Dict[str, str]:
+    """path -> new source, for every module with at least one fixable
+    finding.  Pure: the caller writes files (and re-lints if it wants
+    proof of convergence)."""
+    by_path: Dict[str, List[Finding]] = {}
+    for f in findings:
+        if f.rule in FIXABLE_RULES:
+            by_path.setdefault(f.path, []).append(f)
+    out: Dict[str, str] = {}
+    mods = {m.path: m for m in modules}
+    for path, fs in sorted(by_path.items()):
+        mod = mods.get(path)
+        if mod is None:
+            continue
+        new = fix_module(mod, fs)
+        if new != mod.source:
+            out[path] = new
+    return out

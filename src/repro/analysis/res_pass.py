@@ -1,0 +1,315 @@
+"""Resource-safety pass: acquisitions must survive exceptional paths.
+
+The PR-7 checkpointer shipped a worker thread whose queue sentinel was
+posted *outside* ``finally`` — one exception between ``start()`` and
+``join()`` and the interpreter hung on a non-daemon thread.  That bug
+class is purely structural: a resource is acquired, and the release is
+reachable only on the fall-through path.  These checks flag the
+structure, before runtime and regardless of whether a test happens to
+take the exceptional path:
+
+``res/file-no-close``
+    A file handle (``open``/``os.fdopen``/``tempfile.*``) bound to a
+    local variable outside a ``with`` and not closed in a ``finally``.
+    Any statement between the open and the ``.close()`` can raise, so a
+    bare close is a leak on the exceptional path.  Handles that *escape*
+    — returned, yielded, stored on an attribute or into a container,
+    passed to another call — are someone else's lifetime and exempt.
+
+``res/lock-no-release``
+    ``.acquire()`` on a lock-named receiver with no matching
+    ``.release()`` in a ``finally`` block.  ``with lock:`` is the
+    sanctioned form.
+
+``res/thread-leak-on-raise``
+    A non-daemon ``threading.Thread`` bound to a local, started, and
+    either never joined or joined only on the fall-through side of an
+    explicit ``raise``.  Attribute-stored threads (``self._thread``)
+    have object-lifetime management and are exempt, as are threads that
+    escape into containers/calls.
+
+Scoped to ``src/repro`` excluding tests; the lock/thread rules further
+require the module to import ``threading`` (same gate as the
+concurrency pass).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set
+
+from repro.analysis.base import Finding, Module, SignatureRegistry
+
+RULES = {
+    "res/file-no-close": "file handle opened outside `with` and not closed "
+    "in a finally (leaks on the exceptional path)",
+    "res/lock-no-release": "lock .acquire() without .release() in a finally "
+    "(use `with lock:`)",
+    "res/thread-leak-on-raise": "thread started but not joined on every "
+    "path (join in a finally, or store the thread on the object)",
+}
+
+_OPEN_FUNCS = {"open"}
+_OPEN_ATTRS = {
+    ("os", "fdopen"),
+    ("tempfile", "NamedTemporaryFile"),
+    ("tempfile", "TemporaryFile"),
+    ("tempfile", "SpooledTemporaryFile"),
+    ("io", "open"),
+    ("gzip", "open"),
+    ("bz2", "open"),
+    ("lzma", "open"),
+}
+
+
+def _is_open_call(node: ast.expr) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id in _OPEN_FUNCS
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+        return (f.value.id, f.attr) in _OPEN_ATTRS
+    return False
+
+
+def _is_thread_ctor(node: ast.expr) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    if isinstance(f, ast.Name) and f.id == "Thread":
+        return True
+    return (
+        isinstance(f, ast.Attribute)
+        and f.attr == "Thread"
+        and isinstance(f.value, ast.Name)
+        and f.value.id == "threading"
+    )
+
+
+def _is_daemon_thread(node: ast.Call) -> bool:
+    for kw in node.keywords:
+        if kw.arg == "daemon" and isinstance(kw.value, ast.Constant):
+            return bool(kw.value.value)
+    return False
+
+
+#: quick source prescan — a module whose text contains none of these
+#: cannot trigger any res/* rule, so skip its AST entirely
+_PRESCAN_TOKENS = ("open(", ".acquire(", "Thread(", "TemporaryFile(", "fdopen(")
+
+
+class _MethodCalls(ast.NodeVisitor):
+    """All ``<name>.<method>()`` statements on local-name receivers,
+    plus escape facts per local name."""
+
+    def __init__(self) -> None:
+        self.calls: List[ast.Call] = []  # name.method(...) calls
+        self.escaped: Set[str] = set()
+        self.finally_depth = 0
+        self.in_finally: List[ast.Call] = []  # calls lexically inside a finalbody
+        self._raises: List[ast.Raise] = []
+
+    def visit_Try(self, node: ast.Try) -> None:
+        for part in (node.body, node.handlers, node.orelse):
+            for child in part:
+                self.visit(child)
+        self.finally_depth += 1
+        for child in node.finalbody:
+            self.visit(child)
+        self.finally_depth -= 1
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if isinstance(node.func, ast.Attribute) and isinstance(
+            node.func.value, ast.Name
+        ):
+            self.calls.append(node)
+            if self.finally_depth:
+                self.in_finally.append(node)
+        # a local passed as an argument escapes this function's control
+        for a in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(a, ast.Name):
+                self.escaped.add(a.id)
+        self.generic_visit(node)
+
+    def visit_Return(self, node: ast.Return) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name):
+                self.escaped.add(sub.id)
+        self.generic_visit(node)
+
+    def visit_Yield(self, node: ast.Yield) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name):
+                self.escaped.add(sub.id)
+
+    def visit_Raise(self, node: ast.Raise) -> None:
+        self._raises.append(node)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        # x stored into an attribute/subscript/tuple escapes
+        value_names = {
+            s.id for s in ast.walk(node.value) if isinstance(s, ast.Name)
+        }
+        for t in node.targets:
+            if not isinstance(t, ast.Name):
+                self.escaped.update(value_names)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        pass  # nested defs are separate scopes
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        pass
+
+
+def _local_binds(body: Sequence[ast.stmt], pred) -> List:
+    """(name, value_call, assign_node) for each local ``x = <pred-call>``
+    in this scope, skipping nested function/class bodies."""
+    out = []
+
+    class V(ast.NodeVisitor):
+        def visit_Assign(self, node: ast.Assign) -> None:
+            if (
+                len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and pred(node.value)
+            ):
+                out.append((node.targets[0].id, node.value, node))
+            self.generic_visit(node)
+
+        def visit_FunctionDef(self, node):
+            pass
+
+        visit_AsyncFunctionDef = visit_FunctionDef
+
+        def visit_Lambda(self, node):
+            pass
+
+    v = V()
+    for stmt in body:
+        v.visit(stmt)
+    return out
+
+
+class _ScopeChecker:
+    def __init__(self, mod: Module, threaded: bool):
+        self.mod = mod
+        self.threaded = threaded
+        self.findings: List[Finding] = []
+
+    def emit(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(
+            Finding(rule, self.mod.path, node.lineno, node.col_offset, message)
+        )
+
+    def check_scope(self, body: Sequence[ast.stmt]) -> None:
+        mc = _MethodCalls()
+        for stmt in body:
+            mc.visit(stmt)
+        self._check_files(body, mc)
+        if self.threaded:
+            self._check_locks(mc)
+            self._check_threads(body, mc)
+
+    # --- files ------------------------------------------------------------
+
+    def _check_files(self, body: Sequence[ast.stmt], mc: _MethodCalls) -> None:
+        for name, call, assign in _local_binds(body, _is_open_call):
+            if name in mc.escaped:
+                continue
+            closed_in_finally = any(
+                c.func.attr == "close" and c.func.value.id == name
+                for c in mc.in_finally
+            )
+            if closed_in_finally:
+                continue
+            self.emit(
+                "res/file-no-close",
+                assign,
+                f"{name} = open(...) outside `with`; a raise before "
+                f"{name}.close() leaks the handle — use `with` or "
+                "close in a finally",
+            )
+
+    # --- locks ------------------------------------------------------------
+
+    def _check_locks(self, mc: _MethodCalls) -> None:
+        released_in_finally = {
+            c.func.value.id for c in mc.in_finally if c.func.attr == "release"
+        }
+        for c in mc.calls:
+            if c.func.attr != "acquire":
+                continue
+            recv = c.func.value.id
+            if recv in released_in_finally:
+                continue
+            self.emit(
+                "res/lock-no-release",
+                c,
+                f"{recv}.acquire() without {recv}.release() in a finally; "
+                f"use `with {recv}:`",
+            )
+
+    # --- threads ----------------------------------------------------------
+
+    def _check_threads(self, body: Sequence[ast.stmt], mc: _MethodCalls) -> None:
+        for name, ctor, assign in _local_binds(body, _is_thread_ctor):
+            if name in mc.escaped or _is_daemon_thread(ctor):
+                continue
+            started = [
+                c for c in mc.calls
+                if c.func.attr == "start" and c.func.value.id == name
+            ]
+            if not started:
+                continue
+            joins = [
+                c for c in mc.calls
+                if c.func.attr == "join" and c.func.value.id == name
+            ]
+            if not joins:
+                self.emit(
+                    "res/thread-leak-on-raise",
+                    assign,
+                    f"thread {name} is started but never joined in this "
+                    "scope; join it (in a finally) or store it on the object",
+                )
+                continue
+            join_in_finally = any(c in mc.in_finally for c in joins)
+            if join_in_finally:
+                continue
+            start_line = min(c.lineno for c in started)
+            join_line = max(c.lineno for c in joins)
+            risky = [
+                r for r in mc._raises if start_line < r.lineno < join_line
+            ]
+            if risky:
+                self.emit(
+                    "res/thread-leak-on-raise",
+                    risky[0],
+                    f"raise between {name}.start() and {name}.join() "
+                    f"skips the join; move the join into a finally",
+                )
+
+
+def run(modules: Sequence[Module], registry: SignatureRegistry) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in modules:
+        if mod.is_tests or mod.is_analysis_module:
+            continue
+        norm = mod.path.replace("\\", "/")
+        if "repro/" not in norm and not norm.startswith("src/"):
+            continue
+        if not any(tok in mod.source for tok in _PRESCAN_TOKENS):
+            continue
+        threaded = "threading" in mod.index.import_roots
+        checker = _ScopeChecker(mod, threaded)
+        # one scope per function plus the module top level; `with open()
+        # as f` binds no Assign node, so managed handles never enter
+        checker.check_scope(mod.tree.body)
+        for node in mod.index.functions:
+            checker.check_scope(node.body)
+        findings.extend(checker.findings)
+    return findings

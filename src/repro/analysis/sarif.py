@@ -1,0 +1,73 @@
+"""SARIF 2.1.0 export (``--sarif out.sarif``).
+
+One run, one driver (``repro.analysis``), one result per finding, in
+the subset of SARIF that GitHub code scanning ingests: ``ruleId`` +
+``ruleIndex`` into the driver's rule table, a ``physicalLocation`` with
+``%SRCROOT%``-relative URI, and a stable ``partialFingerprints`` entry
+matching the baseline fingerprint (rule, path, line) so annotations
+survive unrelated diffs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from repro.analysis.base import Finding, all_rules
+
+SARIF_VERSION = "2.1.0"
+SARIF_SCHEMA = "https://json.schemastore.org/sarif-2.1.0.json"
+
+
+def sarif_payload(findings: Sequence[Finding]) -> Dict:
+    rules = all_rules()
+    rule_ids = sorted(rules)
+    index = {r: i for i, r in enumerate(rule_ids)}
+    return {
+        "$schema": SARIF_SCHEMA,
+        "version": SARIF_VERSION,
+        "runs": [
+            {
+                "tool": {
+                    "driver": {
+                        "name": "repro.analysis",
+                        "informationUri": "https://example.invalid/repro",
+                        "rules": [
+                            {
+                                "id": r,
+                                "shortDescription": {"text": rules[r]},
+                                "defaultConfiguration": {"level": "error"},
+                            }
+                            for r in rule_ids
+                        ],
+                    }
+                },
+                "results": [_result(f, index) for f in findings],
+            }
+        ],
+    }
+
+
+def _result(f: Finding, index: Dict[str, int]) -> Dict:
+    return {
+        "ruleId": f.rule,
+        "ruleIndex": index.get(f.rule, -1),
+        "level": "error",
+        "message": {"text": f.message},
+        "locations": [
+            {
+                "physicalLocation": {
+                    "artifactLocation": {
+                        "uri": f.path.replace("\\", "/"),
+                        "uriBaseId": "%SRCROOT%",
+                    },
+                    "region": {
+                        "startLine": f.line,
+                        # SARIF columns are 1-based; ast cols are 0-based
+                        "startColumn": f.col + 1,
+                    },
+                }
+            }
+        ],
+        "partialFingerprints": {
+            "reproAnalysisFingerprint/v1": f"{f.rule}:{f.path}:{f.line}",
+        },
+    }

@@ -1,0 +1,194 @@
+"""Schema pass: stats keys are registered before they are emitted.
+
+PR-9 added :mod:`repro.obs.schema` — every key an engine writes into
+``SimResult.stats`` / ``HorizonResult.stats`` / ``FleetResult.stats``
+must be registered with a unit — and enforces it with a *runtime* audit
+(``unregistered_keys`` over a live stats dict, asserted empty by the
+test suite).  That audit only sees keys on code paths the tests
+exercise; the ``ttft_p99`` bare-unit key shipped exactly that way.
+
+This pass moves the first line of defense to lint time: every *string
+literal* used as a key in a stats-dict write is checked against the
+union of path segments registered in :data:`repro.obs.schema.REGISTRY`.
+Checked write forms:
+
+* ``stats["key"] = ...`` / ``stats["a"]["b"] += ...`` (every literal
+  segment in the subscript chain),
+* ``stats = {"key": ...}`` / ``self.stats = {...}`` / ``stats["k"] =
+  {...}`` — dict-literal keys, recursively (nested dicts and the value
+  dicts of dict comprehensions),
+* ``stats.update(key=..., ...)`` / ``stats.update({"key": ...})`` /
+  ``stats.setdefault("key", ...)``,
+* ``SomeResult(..., stats={...})`` keyword payloads.
+
+The check is *segment*-based, not path-based: a static pass cannot
+reconstruct the dotted path through loops and helper calls, so a
+literal key is accepted if it appears as any non-wildcard segment of
+any registered path in any domain.  That is deliberately one-sided —
+it can miss a registered name used at the wrong nesting level (the
+runtime audit still catches those) but it can never false-positive on
+a correctly registered name.  Variable keys (``stats[name]``) are map
+keys matched by ``*`` registrations and are skipped.
+
+Scope: ``repro/core/`` and ``repro/obs/`` (the engines and exporters),
+excluding tests.  Only receivers literally named ``stats`` (bare or
+attribute) are checked — scratch dicts like ``svc_state`` or
+``_tier_stats`` are internal accounting, not the public surface.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence, Set
+
+from repro.analysis.base import Finding, Module, SignatureRegistry
+
+RULES = {
+    "schema/unregistered-stats-key": "string-literal stats key not registered "
+    "in repro.obs.schema.REGISTRY (register it with a unit first)",
+}
+
+
+def registered_segments() -> Optional[Set[str]]:
+    """Union of non-wildcard path segments across every domain registry,
+    or None when the schema module is unavailable (standalone lint of a
+    single file outside the repo)."""
+    try:
+        from repro.obs.schema import REGISTRY
+    except Exception:
+        return None
+    segs: Set[str] = set()
+    for reg in REGISTRY.values():
+        for path in reg:
+            segs.update(s for s in path.split(".") if s != "*")
+    return segs
+
+
+def _is_stats_chain(node: ast.expr) -> bool:
+    """``stats`` / ``self.stats`` / ``result.stats``, possibly under
+    further subscripts (``stats["a"]["b"]``)."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute):
+        return node.attr == "stats"
+    return isinstance(node, ast.Name) and node.id == "stats"
+
+
+def _literal_key(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, mod: Module, segments: Set[str]):
+        self.mod = mod
+        self.segments = segments
+        self.findings: List[Finding] = []
+
+    def _check_key(self, node: ast.expr) -> None:
+        key = _literal_key(node)
+        if key is not None and key not in self.segments:
+            self.findings.append(
+                Finding(
+                    "schema/unregistered-stats-key",
+                    self.mod.path,
+                    node.lineno,
+                    node.col_offset,
+                    f"stats key {key!r} is not registered in "
+                    "repro.obs.schema.REGISTRY",
+                )
+            )
+
+    def _check_subscript_chain(self, node: ast.expr) -> None:
+        while isinstance(node, ast.Subscript):
+            self._check_key(node.slice)
+            node = node.value
+
+    def _check_dict_value(self, node: ast.expr) -> None:
+        """Literal keys of a dict expression flowing into stats,
+        recursively through nested dict literals and comprehensions."""
+        if isinstance(node, ast.Dict):
+            for k, v in zip(node.keys, node.values):
+                if k is not None:
+                    self._check_key(k)
+                self._check_dict_value(v)
+        elif isinstance(node, ast.DictComp):
+            # {name: {...} for name in jobs}: the outer keys are map
+            # data (wildcard-registered); the value shape is schema
+            self._check_dict_value(node.value)
+        elif isinstance(node, ast.IfExp):
+            self._check_dict_value(node.body)
+            self._check_dict_value(node.orelse)
+
+    def _is_stats_name(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Attribute):
+            return node.attr == "stats"
+        return isinstance(node, ast.Name) and node.id == "stats"
+
+    # --- write forms ------------------------------------------------------
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Subscript) and _is_stats_chain(tgt):
+                self._check_subscript_chain(tgt)
+                self._check_dict_value(node.value)
+            elif self._is_stats_name(tgt):
+                self._check_dict_value(node.value)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            if isinstance(node.target, ast.Subscript) and _is_stats_chain(node.target):
+                self._check_subscript_chain(node.target)
+                self._check_dict_value(node.value)
+            elif self._is_stats_name(node.target):
+                self._check_dict_value(node.value)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if isinstance(node.target, ast.Subscript) and _is_stats_chain(node.target):
+            self._check_subscript_chain(node.target)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        f = node.func
+        if isinstance(f, ast.Attribute) and _is_stats_chain(f.value):
+            if f.attr == "update":
+                for kw in node.keywords:
+                    if kw.arg is not None:
+                        # kwarg names are the keys; reuse the finding
+                        # location of the value expression
+                        if kw.arg not in self.segments:
+                            self._check_key(
+                                ast.copy_location(ast.Constant(kw.arg), kw.value)
+                            )
+                    else:
+                        self._check_dict_value(kw.value)
+                for a in node.args:
+                    self._check_dict_value(a)
+            elif f.attr == "setdefault" and node.args:
+                self._check_key(node.args[0])
+                if len(node.args) > 1:
+                    self._check_dict_value(node.args[1])
+        # result constructors: SimResult(..., stats={...})
+        for kw in node.keywords:
+            if kw.arg == "stats":
+                self._check_dict_value(kw.value)
+        self.generic_visit(node)
+
+
+def run(modules: Sequence[Module], registry: SignatureRegistry) -> List[Finding]:
+    segments = registered_segments()
+    if segments is None:
+        return []
+    findings: List[Finding] = []
+    for mod in modules:
+        if mod.is_tests or mod.is_analysis_module:
+            continue
+        norm = mod.path.replace("\\", "/")
+        if "repro/core/" not in norm and "repro/obs/" not in norm:
+            continue
+        checker = _Checker(mod, segments)
+        checker.visit(mod.tree)
+        findings.extend(checker.findings)
+    return findings

@@ -1,0 +1,520 @@
+"""Taint pass: wall-clock and unseeded-RNG values never reach sim outputs.
+
+PR-9's observability layer made "simulated milliseconds only" a
+*convention*: tracer event timestamps, ``SimResult.stats`` values and
+exported payloads must be functions of the event clock, never of the
+host's wall clock (or of the global RNG, which is just wall time with
+extra steps).  The determinism pass bans wall-clock *reads* inside
+``repro.core``; this pass checks the *flow*: a wall-derived value
+produced anywhere (a launch script, a serving shim, a helper) must not
+reach a sim-time sink, no matter how many assignments or call
+boundaries it crosses on the way.
+
+Sources (``taint/wall-time``):
+
+* ``time.time()`` / ``perf_counter()`` / ``monotonic()`` / ... and
+  their ``from time import ...`` aliases,
+* ``datetime.now()`` / ``utcnow()`` / ``today()``,
+* global-RNG ``random.*`` calls and unseeded ``random.Random()``.
+
+Sinks:
+
+* tracer event constructors (``SpanEvent``/``InstantEvent``/
+  ``CounterEvent``) and ``.span()``/``.instant()``/``.counter()``
+  method calls on tracer-named receivers,
+* writes into ``stats``-named dicts (subscript assignment and
+  ``.update()``/``.setdefault()``),
+* export payloads: ``json.dump``/``json.dumps`` arguments.
+
+Taint is tracked per local variable with the CFG dataflow engine
+(:mod:`repro.analysis.dataflow`): the abstract value is the set of
+taint tokens — ``<wall>`` plus the function's own parameter names — and
+joins are set union.  Interprocedural flow uses whole-tree summaries
+iterated to a fixpoint: for every function we compute (a) which tokens
+reach its return value and (b) which of its parameters reach a sink in
+its body (directly or through further calls).  A call site then maps
+argument taint through the callee summary via the shared signature
+registry, so ``record(helper(time.time()))`` is flagged even when the
+source, the hop and the sink live in three different functions.
+
+Scope: ``src/repro`` minus ``repro/launch`` (operator-facing scripts
+report real wall time by design) and minus tests/fixtures.  The
+``repro/obs`` exporters sit inside the sink set, not the scope cut:
+they may *format* sim-time payloads but never inject wall time.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import dataflow
+from repro.analysis.base import Finding, Module, SignatureRegistry
+from repro.analysis.cfg import FOR, STMT, TEST, WITH, Element, build_cfg
+from repro.analysis.determinism_pass import (
+    _GLOBAL_RNG_FUNCS,
+    _WALL_CLOCK_DATETIME_ATTRS,
+    _WALL_CLOCK_TIME_ATTRS,
+    _dotted,
+)
+
+RULES = {
+    "taint/wall-time": "wall-clock/global-RNG-derived value flows into a "
+    "sim-time sink (tracer event, stats dict, export payload)",
+}
+
+#: the taint token for a wall-clock/RNG source
+WALL = "<wall>"
+
+Taint = FrozenSet[str]
+EMPTY: Taint = frozenset()
+_WALL_TAINT: Taint = frozenset((WALL,))
+
+#: tracer event dataclass constructors — all timestamp/value arguments
+#: are sim-time by contract
+_EVENT_CTORS = {"SpanEvent", "InstantEvent", "CounterEvent"}
+#: tracer emit methods, checked when the receiver chain mentions a tracer
+_TRACER_METHODS = {"span", "instant", "counter", "expect"}
+#: export entry points whose payload must be sim-time-pure
+_EXPORT_FUNCS = {"dump", "dumps", "write_chrome_trace"}
+
+
+def _is_wall_source(node: ast.Call, from_imports: Dict[str, str]) -> bool:
+    dotted = _dotted(node.func)
+    if dotted is None:
+        return False
+    parts = dotted.split(".")
+    if len(parts) >= 2 and parts[-2] == "time" and parts[-1] in _WALL_CLOCK_TIME_ATTRS:
+        return True
+    if parts[-1] in _WALL_CLOCK_DATETIME_ATTRS and "datetime" in parts[:-1]:
+        return True
+    if len(parts) == 2 and parts[0] == "random" and parts[1] in _GLOBAL_RNG_FUNCS:
+        return True
+    if dotted == "random.Random" and not node.args and not node.keywords:
+        return True
+    if len(parts) == 1 and parts[0] in from_imports:
+        mod, _, name = from_imports[parts[0]].rpartition(".")
+        if mod == "time" and name in _WALL_CLOCK_TIME_ATTRS:
+            return True
+        if mod == "random" and name in _GLOBAL_RNG_FUNCS:
+            return True
+    return False
+
+
+def _receiver_is_tracer(node: ast.expr) -> bool:
+    """Does the attribute chain mention a tracer (``self.tracer.span``,
+    ``trace.instant``)?"""
+    while isinstance(node, ast.Attribute):
+        if "trace" in node.attr.lower():
+            return True
+        node = node.value
+    return isinstance(node, ast.Name) and "trace" in node.id.lower()
+
+
+def _is_stats_target(node: ast.expr) -> bool:
+    """``stats[...]`` / ``self.stats[...]`` / ``result.stats[...]`` —
+    possibly nested (``stats["a"]["b"]``)."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute):
+        return node.attr == "stats"
+    return isinstance(node, ast.Name) and node.id == "stats"
+
+
+class Summary:
+    """Interprocedural facts for one function name."""
+
+    __slots__ = ("ret", "sink_params")
+
+    def __init__(self) -> None:
+        self.ret: Taint = EMPTY  # tokens reaching the return value
+        self.sink_params: Set[str] = set()  # params reaching a sink
+
+
+class _TaintAnalysis(dataflow.ForwardAnalysis):
+    TOP = EMPTY  # taint is a may-analysis; the union lattice is finite
+
+    def __init__(self, checker: "_FunctionTaint", init_env: Dict[str, object]):
+        self.checker = checker
+        self.init_env = init_env
+
+    def initial(self):
+        return dict(self.init_env)
+
+    def transfer_element(self, state, elem: Element, report: bool):
+        self.checker._report = report
+        self.checker._transfer(state, elem)
+        return state
+
+    def join_value(self, a, b):
+        return (a or EMPTY) | (b or EMPTY)
+
+    def join(self, a, b):
+        # hot path: most variables are untainted on both sides, so the
+        # generic per-key join_value round-trip is pure overhead
+        out = dict(a)
+        for k, v in b.items():
+            cur = out.get(k, EMPTY)
+            out[k] = v if not cur else (cur if not v or v == cur else cur | v)
+        return out
+
+    def missing_value(self, name: str):
+        return EMPTY
+
+    def widen(self, old, new):
+        return new  # finite lattice: union converges without widening
+
+
+class _FunctionTaint:
+    """Taint dataflow over one code body (function or module scope)."""
+
+    def __init__(
+        self,
+        mod: Module,
+        registry: SignatureRegistry,
+        summaries: Dict[str, Summary],
+        from_imports: Dict[str, str],
+        fname: str,
+        findings: Optional[List[Finding]],
+    ) -> None:
+        self.mod = mod
+        self.registry = registry
+        self.summaries = summaries
+        self.from_imports = from_imports
+        self.fname = fname
+        self.findings = findings  # None during the summary phase
+        self._report = False
+        self.ret_taint: Taint = EMPTY
+        self.sink_params: Set[str] = set()
+        self.would_emit = False  # a wall token reached a sink this run
+
+    # --- driving ----------------------------------------------------------
+
+    def run(
+        self,
+        body: Sequence[ast.stmt],
+        params: Sequence[str],
+        g=None,
+        entry_states=None,
+    ):
+        env: Dict[str, object] = {
+            p: frozenset((p,)) for p in params if p not in ("self", "cls")
+        }
+        if g is None:
+            g = build_cfg(body)
+        analysis = _TaintAnalysis(self, env)
+        if entry_states is None:
+            entry_states = dataflow.solve(g, analysis)
+        # the sweep always runs: during the summary phase (findings is
+        # None) it is what accumulates ret_taint/sink_params for bodies
+        # whose solve() took the straight-line shortcut; emissions stay
+        # gated on findings
+        dataflow.report_sweep(g, analysis, entry_states)
+        return entry_states
+
+    def emit(self, node: ast.AST, what: str) -> None:
+        self.would_emit = True
+        if self.findings is None or not self._report:
+            return
+        self.findings.append(
+            Finding(
+                "taint/wall-time",
+                self.mod.path,
+                node.lineno,
+                node.col_offset,
+                f"wall-clock/RNG-derived value reaches {what} "
+                "(sim outputs must be functions of the event clock)",
+            )
+        )
+
+    # --- transfer ---------------------------------------------------------
+
+    def _transfer(self, env: Dict[str, object], elem: Element) -> None:
+        node = elem.node
+        if elem.kind == TEST:
+            if self._report:  # tests bind nothing (no walrus in-tree)
+                self.taint_of(node, env)
+        elif elem.kind == FOR:
+            t = self.taint_of(node.iter, env)
+            self._bind(node.target, t, env)
+        elif elem.kind == WITH:
+            for item in node.items:
+                t = self.taint_of(item.context_expr, env)
+                if item.optional_vars is not None:
+                    self._bind(item.optional_vars, t, env)
+        else:
+            self._stmt(node, env)
+
+    def _stmt(self, stmt: ast.stmt, env: Dict[str, object]) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # nested defs are separate code bodies (run() per def)
+        if not self._report and not isinstance(
+            stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign, ast.ExceptHandler)
+        ):
+            # solve phase: non-binding statements cannot change the state;
+            # sinks and return/summary accumulation happen in the report
+            # sweep, which always runs over the fixpoint states
+            return
+        if isinstance(stmt, ast.Assign):
+            t = self.taint_of(stmt.value, env)
+            for tgt in stmt.targets:
+                self._check_store(tgt, stmt.value, t, env)
+                self._bind(tgt, t, env)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                t = self.taint_of(stmt.value, env)
+                self._check_store(stmt.target, stmt.value, t, env)
+                self._bind(stmt.target, t, env)
+        elif isinstance(stmt, ast.AugAssign):
+            t = self.taint_of(stmt.value, env)
+            if isinstance(stmt.target, ast.Name):
+                cur = env.get(stmt.target.id, EMPTY) or EMPTY
+                env[stmt.target.id] = cur | t
+            else:
+                self._check_store(stmt.target, stmt.value, t, env)
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self.ret_taint |= self.taint_of(stmt.value, env)
+        elif isinstance(stmt, ast.Expr):
+            self.taint_of(stmt.value, env)
+        elif isinstance(stmt, (ast.Assert, ast.Raise, ast.Delete)):
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self.taint_of(child, env)
+        elif isinstance(stmt, ast.ExceptHandler):
+            if stmt.name is not None:
+                env[stmt.name] = EMPTY
+
+    def _bind(self, tgt: ast.expr, t: Taint, env: Dict[str, object]) -> None:
+        if isinstance(tgt, ast.Name):
+            env[tgt.id] = t
+        elif isinstance(tgt, ast.Starred):
+            self._bind(tgt.value, t, env)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for e in tgt.elts:
+                self._bind(e, t, env)
+        # attribute/subscript stores: untracked (attributes are opaque)
+
+    def _check_store(
+        self, tgt: ast.expr, value: ast.expr, t: Taint, env: Dict[str, object]
+    ) -> None:
+        """A subscript store into a stats dict is a sink."""
+        if isinstance(tgt, ast.Subscript) and _is_stats_target(tgt):
+            self._sink(value, t, "a stats dict entry")
+
+    def _sink(self, node: ast.AST, t: Taint, what: str) -> None:
+        if WALL in t:
+            self.emit(node, what)
+        for tok in t:
+            if tok != WALL:
+                self.sink_params.add(tok)
+
+    # --- expression taint -------------------------------------------------
+
+    def taint_of(self, node: ast.expr, env: Dict[str, object]) -> Taint:
+        if isinstance(node, ast.Constant):
+            return EMPTY
+        if isinstance(node, ast.Name):
+            v = env.get(node.id, EMPTY)
+            return v if isinstance(v, frozenset) else EMPTY
+        if isinstance(node, ast.Call):
+            return self._call(node, env)
+        if isinstance(node, (ast.Attribute, ast.Subscript)):
+            # element/attribute of a tainted object is tainted
+            out = self.taint_of(node.value, env)
+            if isinstance(node, ast.Subscript):
+                out |= self.taint_of(node.slice, env)
+            return out
+        if isinstance(node, (ast.Lambda,)):
+            return EMPTY
+        out = EMPTY
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                out |= self.taint_of(child, env)
+            elif isinstance(child, ast.comprehension):
+                out |= self.taint_of(child.iter, env)
+        return out
+
+    def _call(self, node: ast.Call, env: Dict[str, object]) -> Taint:
+        if _is_wall_source(node, self.from_imports):
+            return _WALL_TAINT
+
+        arg_taints = [self.taint_of(a, env) for a in node.args]
+        kw_taints = [
+            (kw.arg, self.taint_of(kw.value, env)) for kw in node.keywords
+        ]
+        all_args: Taint = EMPTY
+        for t in arg_taints:
+            all_args |= t
+        for _, t in kw_taints:
+            all_args |= t
+
+        fname: Optional[str] = None
+        if isinstance(node.func, ast.Name):
+            fname = node.func.id
+        elif isinstance(node.func, ast.Attribute):
+            fname = node.func.attr
+            all_args |= self.taint_of(node.func.value, env)
+
+        # --- sinks --------------------------------------------------------
+        if fname in _EVENT_CTORS:
+            for a, t in zip(node.args, arg_taints):
+                self._sink(a, t, f"a {fname} field")
+            for kw, (_, t) in zip(node.keywords, kw_taints):
+                self._sink(kw.value, t, f"a {fname} field")
+        elif (
+            fname in _TRACER_METHODS
+            and isinstance(node.func, ast.Attribute)
+            and _receiver_is_tracer(node.func.value)
+        ):
+            for a, t in zip(node.args, arg_taints):
+                self._sink(a, t, f"tracer .{fname}()")
+            for kw, (_, t) in zip(node.keywords, kw_taints):
+                self._sink(kw.value, t, f"tracer .{fname}()")
+        elif fname in _EXPORT_FUNCS:
+            is_json = not isinstance(node.func, ast.Attribute) or (
+                isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "json"
+            )
+            if fname == "write_chrome_trace" or is_json:
+                for a, t in zip(node.args, arg_taints):
+                    self._sink(a, t, f"export payload ({fname})")
+                for kw, (_, t) in zip(node.keywords, kw_taints):
+                    if kw.arg is None or kw.arg in ("obj", "fp", "events"):
+                        self._sink(kw.value, t, f"export payload ({fname})")
+        elif (
+            fname in ("update", "setdefault")
+            and isinstance(node.func, ast.Attribute)
+            and _is_stats_target(node.func.value)
+        ):
+            for a, t in zip(node.args, arg_taints):
+                self._sink(a, t, "a stats dict entry")
+            for kw, (_, t) in zip(node.keywords, kw_taints):
+                self._sink(kw.value, t, "a stats dict entry")
+
+        # --- interprocedural flow through the summary ---------------------
+        summary = self.summaries.get(fname) if fname else None
+        if summary is None:
+            # unknown callee: conservatively pass argument taint through
+            return all_args
+        out: Taint = summary.ret & _WALL_TAINT
+        params = self.registry.get(fname) if fname else None
+        bound = self._bind_args(node, params, arg_taints, kw_taints)
+        for p, t in bound.items():
+            if p in summary.ret:
+                out |= t
+            if p in summary.sink_params:
+                self._sink(node, t, f"a sink inside {fname}()")
+        if params is None and (summary.ret - _WALL_TAINT or summary.sink_params):
+            # callee uses its params but the signature is ambiguous:
+            # treat every argument as potentially flowing through
+            if summary.ret - _WALL_TAINT:
+                out |= all_args
+            if summary.sink_params:
+                self._sink(node, all_args, f"a sink inside {fname}()")
+        return out
+
+    @staticmethod
+    def _bind_args(
+        node: ast.Call,
+        params: Optional[Tuple[str, ...]],
+        arg_taints: List[Taint],
+        kw_taints: List[Tuple[Optional[str], Taint]],
+    ) -> Dict[str, Taint]:
+        if not params:
+            return {}
+        bound: Dict[str, Taint] = {}
+        for i, t in enumerate(arg_taints):
+            if i < len(params):
+                bound[params[i]] = bound.get(params[i], EMPTY) | t
+        for name, t in kw_taints:
+            if name in params:
+                bound[name] = bound.get(name, EMPTY) | t
+        return bound
+
+
+def _param_names(node) -> List[str]:
+    a = node.args
+    return [
+        arg.arg
+        for arg in list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+    ]
+
+
+def _in_scope(mod: Module) -> bool:
+    norm = mod.path.replace("\\", "/")
+    if mod.is_tests or mod.is_analysis_module:
+        return False
+    if "repro/launch/" in norm:
+        return False  # operator scripts report real wall time by design
+    return "repro/" in norm or norm.startswith("src/")
+
+
+def run(modules: Sequence[Module], registry: SignatureRegistry) -> List[Finding]:
+    from collections import deque
+
+    in_scope = [m for m in modules if _in_scope(m)]
+    if not in_scope:
+        return []
+    imports = {m.path: m.index.from_imports for m in in_scope}
+
+    funcs = []  # (mod, fn, params)
+    for mod in in_scope:
+        for fn in mod.index.functions:
+            funcs.append((mod, fn, _param_names(fn)))
+    summaries: Dict[str, Summary] = {}
+    for _, fn, _ in funcs:
+        summaries.setdefault(fn.name, Summary())
+
+    # Phase A: whole-tree summaries to a fixpoint, worklist-driven — a
+    # function re-runs only when a callee's summary grew.  Summaries
+    # only grow over a finite token set, so this terminates.
+    cfgs = {i: mod.cfg(fn.body) for i, (mod, fn, _) in enumerate(funcs)}
+    callers: Dict[str, List[int]] = {}
+    for i, (mod, fn, _) in enumerate(funcs):
+        for name in mod.index.called_names[id(fn)]:
+            callers.setdefault(name, []).append(i)
+    work = deque(range(len(funcs)))
+    queued = set(work)
+    states: Dict[int, Dict] = {}
+    would_emit: Dict[int, bool] = {}
+    while work:
+        i = work.popleft()
+        queued.discard(i)
+        mod, fn, params = funcs[i]
+        ft = _FunctionTaint(
+            mod, registry, summaries, imports[mod.path], fn.name, None
+        )
+        states[i] = ft.run(fn.body, params, cfgs[i])
+        would_emit[i] = ft.would_emit
+        s = summaries[fn.name]
+        new_ret = s.ret | ft.ret_taint
+        new_sinks = s.sink_params | ft.sink_params
+        if new_ret != s.ret or new_sinks != s.sink_params:
+            s.ret = new_ret
+            s.sink_params = set(new_sinks)
+            for j in callers.get(fn.name, ()):
+                if j not in queued:
+                    work.append(j)
+                    queued.add(j)
+
+    # Phase B: per-function + module-scope check sweep.  A function's
+    # last Phase-A run already used the final summaries (it re-enqueues
+    # whenever a callee grows), so its fixpoint entry states are final —
+    # reuse them instead of solving again.
+    findings: List[Finding] = []
+    for i, (mod, fn, params) in enumerate(funcs):
+        if not would_emit.get(i):
+            # the function's final Phase-A run (same entry states, same
+            # summaries) saw no wall token reach a sink — the report
+            # sweep would emit nothing, so skip it
+            continue
+        ft = _FunctionTaint(
+            mod, registry, summaries, imports[mod.path], fn.name, findings
+        )
+        ft.run(fn.body, params, cfgs[i], states.get(i))
+    for mod in in_scope:
+        top = _FunctionTaint(
+            mod, registry, summaries, imports[mod.path], "<module>", findings
+        )
+        top.run(mod.tree.body, [], mod.cfg(mod.tree.body))
+    return findings

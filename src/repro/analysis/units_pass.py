@@ -1,4 +1,4 @@
-"""Units pass: dimensional analysis over identifier suffixes.
+"""Units pass: flow-sensitive dimensional analysis over identifier suffixes.
 
 Every quantity in the repo carries its unit in its name (``_ms``,
 ``_bytes``, ``_gbps``, ...).  This pass turns that convention into a
@@ -23,6 +23,24 @@ Under this algebra the sanctioned conversions come out exactly right —
 ms).  Unknown names poison an expression to *unknown* and suppress all
 checks — the pass only speaks when every operand is known.
 
+Since ISSUE 10 the pass runs on the per-function CFG
+(:mod:`repro.analysis.cfg`) under the forward dataflow solver
+(:mod:`repro.analysis.dataflow`) instead of a single top-down sweep, so
+unit facts are *flow-sensitive*:
+
+* **if/else joins** — a variable assigned different units on different
+  branches carries the *set* of alternatives (:class:`UnitAlt`) past
+  the join; a later use that conflicts with any alternative is a bug on
+  that path (PR-8's sweep kept only the last branch's binding).
+* **loops** — bodies are iterated to a fixpoint, so a unit carried
+  around the back edge (reassigned at the bottom of the loop, used at
+  the top) is visible on the second abstract iteration.
+* **tuple unpacking** — ``a_ms, b = f()`` binds ``a_ms`` to its
+  declared unit (PR-8 bound it to *unknown*, shadowing the suffix).
+* **augmented assignment** — ``x *= 8.0`` folds the conversion constant
+  into the scale like ``x = x * 8.0`` always did (PR-8 treated the
+  multiplier as dimensionless and kept the stale scale).
+
 Checks:
 
 ``units/mixed-units``     cross-dimension ``+``/``-``/``%``/comparison
@@ -40,10 +58,13 @@ from __future__ import annotations
 
 import ast
 import dataclasses
+import functools
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.analysis import dataflow
 from repro.analysis.base import Finding, Module, SignatureRegistry
+from repro.analysis.cfg import FOR, STMT, TEST, WITH, Element, build_cfg
 
 RULES = {
     "units/mixed-units": "addition/comparison across different dimensions",
@@ -71,12 +92,27 @@ class Unit:
 DIMLESS = Unit(_NONE, 1.0)
 
 
+@dataclasses.dataclass(frozen=True)
+class UnitAlt:
+    """Path-dependent value: one of ``members`` depending on which CFG
+    path reached this point.  Produced by joins, consumed by checks
+    (any conflicting member is a bug on that member's path)."""
+
+    members: frozenset  # of Unit
+
+    def __post_init__(self):
+        assert len(self.members) > 1
+
+
 class _Neutral:
     """A zero literal (or empty accumulator): unifies with any unit."""
 
 
 NEUTRAL = _Neutral()
 UNKNOWN = None
+
+#: alternatives tracked per variable before a join degrades to UNKNOWN
+ALT_CAP = 4
 
 #: suffix token -> unit.  Canonical: time=ms, data=bit, samples=sample.
 SUFFIX_UNITS: Dict[str, Unit] = {
@@ -121,13 +157,17 @@ _UNIT_NAMES = {
 }
 
 
-def describe(u: Unit) -> str:
+def describe(u: object) -> str:
+    if isinstance(u, UnitAlt):
+        return "|".join(sorted(describe(m) for m in u.members))
+    assert isinstance(u, Unit)
     for (dims, scale), name in _UNIT_NAMES.items():
         if u.dims == dims and math.isclose(u.scale, scale, rel_tol=1e-9):
             return name
     return f"dims(time,data,samples)={u.dims} scale={u.scale:g}"
 
 
+@functools.lru_cache(maxsize=4096)
 def unit_of_name(name: str) -> Optional[Unit]:
     """Unit implied by an identifier, or UNKNOWN."""
     low = name.lower()
@@ -151,14 +191,6 @@ def unit_of_name(name: str) -> Optional[Unit]:
     if len(name) == 1 and name.isupper():
         return DIMLESS  # D, P, M, ... — loop/shape counts by convention
     return UNKNOWN
-
-
-def _is_zero(node: ast.AST) -> bool:
-    return (
-        isinstance(node, ast.Constant)
-        and isinstance(node.value, (int, float))
-        and node.value == 0
-    )
 
 
 def _const_value(node: ast.AST) -> Optional[float]:
@@ -194,26 +226,99 @@ def _is_conversion_const(v: float, table=CONVERSION_CONSTANTS) -> bool:
     return any(math.isclose(abs(v), c, rel_tol=1e-12) for c in table)
 
 
+def _members(v: object) -> frozenset:
+    if isinstance(v, UnitAlt):
+        return v.members
+    assert isinstance(v, Unit)
+    return frozenset((v,))
+
+
+def _units_close(a: Unit, b: Unit) -> bool:
+    return a.dims == b.dims and math.isclose(a.scale, b.scale, rel_tol=1e-9)
+
+
+def join_units(a: object, b: object) -> object:
+    """Lattice join of two abstract values at a CFG merge point."""
+    if a is UNKNOWN or b is UNKNOWN:
+        return UNKNOWN
+    if a is NEUTRAL:
+        return b
+    if b is NEUTRAL:
+        return a
+    if a == b:
+        return a
+    merged: List[Unit] = []
+    for m in sorted(_members(a) | _members(b), key=lambda u: (u.dims, u.scale)):
+        if not any(_units_close(m, kept) for kept in merged):
+            merged.append(m)
+    if len(merged) == 1:
+        return merged[0]
+    if len(merged) > ALT_CAP:
+        return UNKNOWN
+    return UnitAlt(frozenset(merged))
+
+
+class _UnitsAnalysis(dataflow.ForwardAnalysis):
+    """Adapter: the dataflow solver drives one :class:`FileChecker`
+    over one code body (module, function or class)."""
+
+    TOP = UNKNOWN
+
+    def __init__(self, checker: "FileChecker", init_env: Dict[str, object]):
+        self.checker = checker
+        self.init_env = init_env
+
+    def initial(self) -> Dict[str, object]:
+        return dict(self.init_env)
+
+    def transfer_element(self, state, elem: Element, report: bool):
+        self.checker._report = report
+        self.checker._transfer(state, elem)
+        return state
+
+    def join_value(self, a, b):
+        return join_units(a, b)
+
+    def missing_value(self, name: str):
+        return unit_of_name(name)
+
+
 class FileChecker:
     def __init__(self, mod: Module, registry: SignatureRegistry):
         self.mod = mod
         self.registry = registry
         self.findings: List[Finding] = []
+        self._report = False
+        self._ret_unit: object = UNKNOWN
+        self._ret_name: str = ""
 
     def emit(self, rule: str, node: ast.AST, message: str) -> None:
+        if not self._report:
+            return
         self.findings.append(
             Finding(rule, self.mod.path, node.lineno, node.col_offset, message)
         )
 
     def check(self) -> List[Finding]:
-        self._check_scope(self.mod.tree.body, {})
+        self._check_code(self.mod.tree.body, {}, UNKNOWN, "")
         return self.findings
 
-    # --- scopes -----------------------------------------------------------
+    # --- code bodies (one CFG + fixpoint each) ----------------------------
 
-    def _check_scope(self, body: Sequence[ast.stmt], env: Dict[str, object]) -> None:
-        for stmt in body:
-            self._stmt(stmt, env)
+    def _check_code(
+        self,
+        body: Sequence[ast.stmt],
+        init_env: Dict[str, object],
+        ret_unit: object,
+        ret_name: str,
+    ) -> None:
+        outer = (self._report, self._ret_unit, self._ret_name)
+        self._ret_unit, self._ret_name = ret_unit, ret_name
+        g = self.mod.cfg(body)  # shared with the taint pass
+        analysis = _UnitsAnalysis(self, init_env)
+        entry_states = dataflow.solve(g, analysis)
+        dataflow.report_sweep(g, analysis, entry_states)
+        self._report, self._ret_unit, self._ret_name = outer
 
     def _function(self, node: ast.FunctionDef) -> None:
         env: Dict[str, object] = {}
@@ -222,19 +327,45 @@ class FileChecker:
             u = unit_of_name(arg.arg)
             if u is not UNKNOWN:
                 env[arg.arg] = u
-        self._ret_unit = unit_of_name(node.name)
-        self._ret_name = node.name
-        self._check_scope(node.body, env)
+        self._check_code(node.body, env, unit_of_name(node.name), node.name)
+
+    # --- CFG element transfer ---------------------------------------------
+
+    def _transfer(self, env: Dict[str, object], elem: Element) -> None:
+        node = elem.node
+        if elem.kind == TEST:
+            if self._report:  # tests bind nothing (no walrus in-tree)
+                self.eval(node, env)
+        elif elem.kind == FOR:
+            it = self._iter_element_unit(node.iter, env)
+            self.eval(node.iter, env)
+            self._bind_loop_target(node.target, node.iter, it, env)
+        elif elem.kind == WITH:
+            for item in node.items:
+                self.eval(item.context_expr, env)
+                if item.optional_vars is not None:
+                    self._bind_opaque(item.optional_vars, env)
+        else:
+            self._stmt(node, env)
 
     # --- statements -------------------------------------------------------
 
     def _stmt(self, stmt: ast.stmt, env: Dict[str, object]) -> None:
+        if not self._report and not isinstance(
+            stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign, ast.ExceptHandler)
+        ):
+            # solve phase: statements that bind no name cannot change the
+            # abstract state, so their (expensive) evaluation waits for
+            # the single report sweep
+            return
         if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            outer = (getattr(self, "_ret_unit", UNKNOWN), getattr(self, "_ret_name", ""))
-            self._function(stmt)
-            self._ret_unit, self._ret_name = outer
+            if self._report:  # nested defs are independent code bodies
+                self._function(stmt)
+                self._report = True
         elif isinstance(stmt, ast.ClassDef):
-            self._check_scope(stmt.body, {})
+            if self._report:
+                self._check_code(stmt.body, {}, UNKNOWN, "")
+                self._report = True
         elif isinstance(stmt, ast.Assign):
             rhs = self.eval(stmt.value, env)
             for tgt in stmt.targets:
@@ -244,59 +375,84 @@ class FileChecker:
                 rhs = self.eval(stmt.value, env)
                 self._bind_target(stmt.target, stmt.value, rhs, env)
         elif isinstance(stmt, ast.AugAssign):
-            cur = self._load_unit(stmt.target, env)
-            rhs = self.eval(stmt.value, env)
-            if isinstance(stmt.op, (ast.Add, ast.Sub)):
-                # literal adjustments (x_ms += 5.0) make no unit claim
-                if _const_value(stmt.value) is not None:
-                    rhs = NEUTRAL
-                res = self._unify(cur, rhs, stmt, "augmented assignment")
-            elif isinstance(stmt.op, (ast.Mult, ast.Div)):
-                res = self._combine_mult(cur, rhs, isinstance(stmt.op, ast.Div))
-            else:
-                res = UNKNOWN
-            if isinstance(stmt.target, ast.Name):
-                env[stmt.target.id] = res
+            self._aug_assign(stmt, env)
         elif isinstance(stmt, ast.Return):
             if stmt.value is not None:
                 u = self.eval(stmt.value, env)
-                ret = getattr(self, "_ret_unit", UNKNOWN)
-                if ret is not UNKNOWN and ret is not None:
+                if self._ret_unit is not UNKNOWN:
                     self._require(
-                        ret, u, stmt,
-                        f"return from {getattr(self, '_ret_name', '?')}()",
+                        self._ret_unit, u, stmt, f"return from {self._ret_name}()"
                     )
-        elif isinstance(stmt, ast.For):
-            it = self._iter_element_unit(stmt.iter, env)
-            self.eval(stmt.iter, env)
-            self._bind_loop_target(stmt.target, stmt.iter, it, env)
-            self._check_scope(stmt.body, env)
-            self._check_scope(stmt.orelse, env)
-        elif isinstance(stmt, (ast.While, ast.If)):
-            self.eval(stmt.test, env)
-            self._check_scope(stmt.body, env)
-            self._check_scope(stmt.orelse, env)
-        elif isinstance(stmt, ast.With):
-            for item in stmt.items:
-                self.eval(item.context_expr, env)
-            self._check_scope(stmt.body, env)
-        elif isinstance(stmt, ast.Try):
-            self._check_scope(stmt.body, env)
-            for h in stmt.handlers:
-                self._check_scope(h.body, env)
-            self._check_scope(stmt.orelse, env)
-            self._check_scope(stmt.finalbody, env)
         elif isinstance(stmt, ast.Assert):
             self.eval(stmt.test, env)
             if stmt.msg is not None:
                 self.eval(stmt.msg, env)
         elif isinstance(stmt, ast.Expr):
             self.eval(stmt.value, env)
+        elif isinstance(stmt, ast.ExceptHandler):
+            if stmt.name is not None:
+                env[stmt.name] = UNKNOWN
         elif isinstance(stmt, (ast.Raise, ast.Delete)):
             for child in ast.iter_child_nodes(stmt):
                 if isinstance(child, ast.expr):
                     self.eval(child, env)
-        # imports, pass, break, continue, global, nonlocal: nothing to do
+        # imports, pass, global, nonlocal: nothing to do
+
+    def _aug_assign(self, stmt: ast.AugAssign, env: Dict[str, object]) -> None:
+        cur = self._load_unit(stmt.target, env)
+        rhs = self.eval(stmt.value, env)
+        if isinstance(stmt.op, (ast.Add, ast.Sub)):
+            # literal adjustments (x_ms += 5.0) make no unit claim
+            if _const_value(stmt.value) is not None:
+                rhs = NEUTRAL
+            res = self._unify(cur, rhs, stmt, "augmented assignment")
+        elif isinstance(stmt.op, (ast.Mult, ast.Div)):
+            div = isinstance(stmt.op, ast.Div)
+            c = _const_value(stmt.value)
+            if c is not None and c != 0 and _is_conversion_const(c):
+                # ``x *= 8.0`` is a unit conversion: the value grew by
+                # c, the quantity didn't — fold c into the scale exactly
+                # as the ``x = x * 8.0`` spelling always did
+                res = self._scale_adjust(cur, c, div)
+                if (
+                    _is_conversion_const(c, INLINE_CONVERSION_CONSTANTS)
+                    and self._is_data_dimmed(cur)
+                    and self.mod.is_core
+                    and not self.mod.is_units_module
+                ):
+                    self.emit(
+                        "units/inline-conversion",
+                        stmt.value,
+                        "inline unit-conversion arithmetic; "
+                        "use a repro.units helper",
+                    )
+            else:
+                res = self._combine_mult(cur, rhs, div)
+        else:
+            res = UNKNOWN
+        if isinstance(stmt.target, ast.Name):
+            env[stmt.target.id] = res
+
+    @staticmethod
+    def _is_data_dimmed(v: object) -> bool:
+        if v is UNKNOWN or v is NEUTRAL:
+            return False
+        return any(m.dims[1] != 0 or m.dims == _RATE for m in _members(v))
+
+    @staticmethod
+    def _scale_adjust(cur: object, c: float, div: bool) -> object:
+        if cur is UNKNOWN or cur is NEUTRAL:
+            return cur
+
+        def adj(u: Unit) -> Unit:
+            if u.dims == _NONE:
+                return DIMLESS  # pure number: scale bookkeeping ends here
+            return Unit(u.dims, u.scale * abs(c) if div else u.scale / abs(c))
+
+        adjusted = frozenset(adj(m) for m in _members(cur))
+        if len(adjusted) == 1:
+            return next(iter(adjusted))
+        return UnitAlt(adjusted)
 
     def _bind_target(
         self, tgt: ast.expr, value_node: ast.expr, rhs: object, env: Dict[str, object]
@@ -314,21 +470,42 @@ class FileChecker:
                 self._require(declared, rhs, value_node, f"assignment to .{tgt.attr}")
         elif isinstance(tgt, (ast.Tuple, ast.List)):
             elts = tgt.elts
-            if isinstance(value_node, (ast.Tuple, ast.List)) and len(
-                value_node.elts
-            ) == len(elts):
+            if (
+                isinstance(value_node, (ast.Tuple, ast.List))
+                and len(value_node.elts) == len(elts)
+                and not any(isinstance(e, ast.Starred) for e in elts)
+                and not any(isinstance(e, ast.Starred) for e in value_node.elts)
+            ):
                 for t, v in zip(elts, value_node.elts):
                     self._bind_target(t, v, self.eval(v, env), env)
             else:
+                # opaque unpack (``a_ms, b = f()``): the suffix *is* the
+                # declaration — bind it so later uses are checked
                 for t in elts:
-                    if isinstance(t, ast.Name):
-                        env[t.id] = UNKNOWN
+                    self._bind_opaque(t, env)
+        elif isinstance(tgt, ast.Starred):
+            self._bind_opaque(tgt.value, env)
+
+    def _bind_opaque(self, tgt: ast.expr, env: Dict[str, object]) -> None:
+        """Bind a target whose value is unknown: suffixed names keep
+        their declared unit, everything else goes unknown."""
+        if isinstance(tgt, ast.Name):
+            declared = unit_of_name(tgt.id)
+            env[tgt.id] = declared if declared is not DIMLESS else DIMLESS
+        elif isinstance(tgt, ast.Starred):
+            self._bind_opaque(tgt.value, env)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for t in tgt.elts:
+                self._bind_opaque(t, env)
 
     def _bind_loop_target(
         self, tgt: ast.expr, iter_node: ast.expr, elt_unit: object, env: Dict[str, object]
     ) -> None:
         if isinstance(tgt, ast.Name):
-            env[tgt.id] = elt_unit
+            if elt_unit is UNKNOWN:
+                self._bind_opaque(tgt, env)
+            else:
+                env[tgt.id] = elt_unit
         elif isinstance(tgt, (ast.Tuple, ast.List)):
             # zip(xs_ms, ys_bytes) binds pairwise
             if (
@@ -341,8 +518,7 @@ class FileChecker:
                     self._bind_loop_target(t, src, self._iter_element_unit(src, env), env)
             else:
                 for t in tgt.elts:
-                    if isinstance(t, ast.Name):
-                        env[t.id] = UNKNOWN
+                    self._bind_opaque(t, env)
 
     def _iter_element_unit(self, node: ast.expr, env: Dict[str, object]) -> object:
         """Unit of one element when iterating ``node``.  Containers keep
@@ -401,11 +577,7 @@ class FileChecker:
             self.eval(node.test, env)
             a = self.eval(node.body, env)
             b = self.eval(node.orelse, env)
-            if a is NEUTRAL:
-                return b
-            if b is NEUTRAL:
-                return a
-            return a if a == b else UNKNOWN
+            return join_units(a, b)  # a conditional expression IS a join
         if isinstance(node, ast.BoolOp):
             for v in node.values:
                 self.eval(v, env)
@@ -499,7 +671,9 @@ class FileChecker:
             if u is NEUTRAL:
                 zero = True
                 continue
-            if u is UNKNOWN:
+            if u is UNKNOWN or isinstance(u, UnitAlt):
+                # path-dependent factors poison the product: alternative
+                # scales cannot be folded into one running scale
                 known = False
                 continue
             if u.dims != (0, 0, 0):
@@ -533,6 +707,8 @@ class FileChecker:
             return UNKNOWN
         if a is NEUTRAL or b is NEUTRAL:
             return NEUTRAL
+        if isinstance(a, UnitAlt) or isinstance(b, UnitAlt):
+            return UNKNOWN  # alternative scales cannot multiply through
         sign = -1 if div else 1
         dims = tuple(x + sign * y for x, y in zip(a.dims, b.dims))
         scale = a.scale * (b.scale ** sign)
@@ -633,6 +809,37 @@ class FileChecker:
             return b
         if b is NEUTRAL:
             return a
+        amem, bmem = _members(a), _members(b)
+        if isinstance(a, UnitAlt) and isinstance(b, UnitAlt):
+            # two path-dependent values may be correlated (both set by
+            # the same branch): only a conflict on EVERY pairing is a
+            # definite bug
+            kinds = {self._conflict(x, y) for x in amem for y in bmem}
+            if None not in kinds:
+                self.emit(
+                    "units/mixed-units" if "mixed" in kinds
+                    else "units/scale-mismatch",
+                    node,
+                    f"{where} mixes {describe(a)} and {describe(b)} "
+                    "on every path",
+                )
+            return UNKNOWN
+        if isinstance(a, UnitAlt) or isinstance(b, UnitAlt):
+            alt, single = (a, b) if isinstance(a, UnitAlt) else (b, a)
+            assert isinstance(single, Unit)
+            kinds = {
+                self._conflict(m, single) for m in alt.members
+            } - {None}
+            if kinds:
+                self.emit(
+                    "units/mixed-units" if "mixed" in kinds
+                    else "units/scale-mismatch",
+                    node,
+                    f"{where} mixes {describe(alt)} (path-dependent) "
+                    f"and {describe(single)}",
+                )
+                return UNKNOWN
+            return single
         assert isinstance(a, Unit) and isinstance(b, Unit)
         if a is DIMLESS and b is DIMLESS:
             return DIMLESS
@@ -652,24 +859,31 @@ class FileChecker:
             return UNKNOWN
         return a
 
+    @staticmethod
+    def _conflict(u: Unit, v: Unit) -> Optional[str]:
+        if u.dims != v.dims:
+            return "mixed"
+        if not math.isclose(u.scale, v.scale, rel_tol=1e-9):
+            return "scale"
+        return None
+
     def _require(self, declared: Unit, got: object, node: ast.AST, where: str) -> None:
         if got is UNKNOWN or got is NEUTRAL or got is DIMLESS:
             return  # unknowns and bare numbers make no unit claim
-        assert isinstance(got, Unit)
-        if got.dims == (0, 0, 0):
+        for member in _members(got):
+            if member.dims == (0, 0, 0):
+                continue
+            kind = self._conflict(member, declared)
+            if kind is None:
+                continue
+            suffix = " on some path" if isinstance(got, UnitAlt) else ""
+            self.emit(
+                "units/mixed-units" if kind == "mixed" else "units/scale-mismatch",
+                node,
+                f"{where} expects {describe(declared)}, got "
+                f"{describe(member)}{suffix}",
+            )
             return
-        if got.dims != declared.dims:
-            self.emit(
-                "units/mixed-units",
-                node,
-                f"{where} expects {describe(declared)}, got {describe(got)}",
-            )
-        elif not math.isclose(got.scale, declared.scale, rel_tol=1e-9):
-            self.emit(
-                "units/scale-mismatch",
-                node,
-                f"{where} expects {describe(declared)}, got {describe(got)}",
-            )
 
 
 def run(modules: Sequence[Module], registry: SignatureRegistry) -> List[Finding]:

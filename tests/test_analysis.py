@@ -137,6 +137,98 @@ def test_units_zero_and_epsilon_literals_are_neutral():
     assert lint(good) == []
 
 
+# ------------------------------------- units pass: flow-sensitive (CFG) cases
+# Each of these is invisible to a per-statement walk: the defect only
+# exists in the *join* of two paths, across a loop back edge, through a
+# tuple unpacking, or after an augmented reassignment.
+
+
+def test_units_if_else_join_flags_mixed_paths():
+    bad = """
+        def pick(flag, a_ms, b_bytes, c_ms):
+            if flag:
+                x = b_bytes
+            else:
+                x = a_ms
+            return x + c_ms
+    """
+    found = lint(bad, path=SRC, rule="units/mixed-units")
+    assert [f.line for f in found] == [7]
+    assert "path-dependent" in found[0].message
+
+
+def test_units_if_else_join_same_unit_is_silent():
+    good = """
+        def pick(flag, a_ms, b_ms, c_ms):
+            if flag:
+                x = a_ms
+            else:
+                x = b_ms
+            return x + c_ms
+    """
+    assert lint(good, path=SRC) == []
+
+
+def test_units_correlated_alts_do_not_false_positive():
+    # both x and y are ms-or-bytes, branch-correlated; flagging x + y
+    # would be wrong on both real paths
+    good = """
+        def pick(flag, a_ms, b_bytes):
+            if flag:
+                x = a_ms
+                y = a_ms
+            else:
+                x = b_bytes
+                y = b_bytes
+            return x + y
+    """
+    assert lint(good, path=SRC) == []
+
+
+def test_units_loop_carried_reassignment():
+    # t is 0.0 (neutral) on iteration one but seconds on every later
+    # iteration: the defect flows around the back edge
+    bad = """
+        def drain(steps, dt_s):
+            t = 0.0
+            for _ in steps:
+                v_ms = t
+                t = dt_s
+            return t
+    """
+    found = lint(bad, path=SRC, rule="units/scale-mismatch")
+    assert [f.line for f in found] == [5]
+
+
+def test_units_tuple_unpack_binds_declared_units():
+    bad = """
+        def stage(n_bytes):
+            a_ms, b = probe()
+            return a_ms + n_bytes
+    """
+    found = lint(bad, path=SRC, rule="units/mixed-units")
+    assert [f.line for f in found] == [4]
+
+
+def test_units_augmented_assign_tracks_conversion():
+    # x *= 8.0 converts bytes -> bits, so x + y_bytes is a scale clash
+    bad = """
+        def grow(x_bytes, y_bytes):
+            x = x_bytes
+            x *= 8.0
+            return x + y_bytes
+    """
+    found = lint(bad, path=SRC, rule="units/scale-mismatch")
+    assert [f.line for f in found] == [5]
+    good = """
+        def grow(x_bytes, y_bits):
+            x = x_bytes
+            x *= 8.0
+            return x + y_bits
+    """
+    assert lint(good, path=SRC) == []
+
+
 # ------------------------------------------------------- determinism pass
 
 
@@ -395,6 +487,241 @@ def test_api_mutable_default():
     assert lint(good, path=SRC) == []
 
 
+# ------------------------------------------------------------- taint pass
+
+
+def test_taint_wall_clock_into_stats_direct():
+    bad = """
+        import time
+
+        def finish(stats):
+            stats["elapsed_ms"] = time.perf_counter()
+    """
+    assert rules_of(lint(bad, path=SRC)) == ["taint/wall-time"]
+    good = """
+        def finish(stats, now_ms):
+            stats["elapsed_ms"] = now_ms
+    """
+    assert lint(good, path=SRC) == []
+
+
+def test_taint_flows_through_callee_return():
+    # interprocedural: the wall read is inside a helper; only its
+    # *return value* reaches the sink
+    bad = """
+        import time
+
+        def now_ms():
+            return time.time() * 1e3
+
+        def finish(stats):
+            stats["elapsed_ms"] = now_ms()
+    """
+    found = lint(bad, path=SRC, rule="taint/wall-time")
+    assert len(found) == 1
+    assert found[0].line == 8
+
+
+def test_taint_flows_through_sink_parameter():
+    # interprocedural the other way: the sink is inside the callee and
+    # the wall value arrives through an argument
+    bad = """
+        import time
+
+        def record(stats, v):
+            stats["t_ms"] = v
+
+        def finish(stats):
+            record(stats, time.perf_counter())
+    """
+    found = lint(bad, path=SRC, rule="taint/wall-time")
+    assert len(found) == 1
+
+
+def test_taint_event_constructor_and_tracer_method():
+    bad = """
+        from datetime import datetime
+
+        def mark(tracer):
+            tracer.instant("boot", t_ms=datetime.now().timestamp())
+    """
+    assert rules_of(lint(bad, path=SRC)) == ["taint/wall-time"]
+
+
+def test_taint_seeded_rng_and_sim_clock_are_clean():
+    good = """
+        import random
+
+        def jitter(stats, seed, clock_ms):
+            rng = random.Random(seed)
+            stats["jitter_ms"] = clock_ms + rng.random()
+    """
+    assert lint(good, path=SRC) == []
+
+
+def test_taint_branch_join_keeps_taint_alive():
+    # the wall value only taints x on one path — still a finding,
+    # because that path can execute
+    bad = """
+        import time
+
+        def finish(stats, flag, sim_ms):
+            if flag:
+                x = time.monotonic()
+            else:
+                x = sim_ms
+            stats["t_ms"] = x
+    """
+    found = lint(bad, path=SRC, rule="taint/wall-time")
+    assert [f.line for f in found] == [9]
+
+
+# -------------------------------------------------------------- res pass
+
+
+def test_res_file_no_close_fires_and_with_is_silent():
+    bad = """
+        def dump(path, payload):
+            fh = open(path, "w")
+            fh.write(payload)
+            fh.close()
+    """
+    assert rules_of(lint(bad, path=SRC)) == ["res/file-no-close"]
+    good = """
+        def dump(path, payload):
+            with open(path, "w") as fh:
+                fh.write(payload)
+    """
+    assert lint(good, path=SRC) == []
+
+
+def test_res_file_close_in_finally_is_silent():
+    good = """
+        def dump(path, payload):
+            fh = open(path, "w")
+            try:
+                fh.write(payload)
+            finally:
+                fh.close()
+    """
+    assert lint(good, path=SRC) == []
+
+
+def test_res_file_that_escapes_is_exempt():
+    good = """
+        def grab(path):
+            fh = open(path, "rb")
+            return fh
+    """
+    assert lint(good, path=SRC) == []
+
+
+def test_res_lock_no_release():
+    bad = """
+        import threading
+
+        lock = threading.Lock()
+
+        def bump(state):
+            lock.acquire()
+            state.n += 1
+            lock.release()
+    """
+    assert rules_of(lint(bad, path=SRC)) == ["res/lock-no-release"]
+    good = """
+        import threading
+
+        lock = threading.Lock()
+
+        def bump(state):
+            lock.acquire()
+            try:
+                state.n += 1
+            finally:
+                lock.release()
+    """
+    assert lint(good, path=SRC) == []
+
+
+def test_res_thread_raise_between_start_and_join():
+    bad = """
+        import threading
+
+        def run(fn, ready):
+            t = threading.Thread(target=fn)
+            t.start()
+            if not ready:
+                raise RuntimeError("not ready")
+            t.join()
+    """
+    assert rules_of(lint(bad, path=SRC)) == ["res/thread-leak-on-raise"]
+    good = """
+        import threading
+
+        def run(fn, ready):
+            t = threading.Thread(target=fn)
+            t.start()
+            try:
+                if not ready:
+                    raise RuntimeError("not ready")
+            finally:
+                t.join()
+    """
+    assert lint(good, path=SRC) == []
+
+
+def test_res_daemon_thread_is_exempt():
+    good = """
+        import threading
+
+        def spawn(fn):
+            t = threading.Thread(target=fn, daemon=True)
+            t.start()
+            t.join()
+    """
+    assert lint(good, path=SRC) == []
+
+
+# ------------------------------------------------------------ schema pass
+
+
+def test_schema_unregistered_stats_key_fires_in_core():
+    bad = """
+        def finalize(stats):
+            stats["zzz_bogus_key"] = 1.0
+    """
+    assert rules_of(lint(bad, path=CORE)) == ["schema/unregistered-stats-key"]
+    # registered segment names are accepted at any nesting level
+    good = """
+        def finalize(stats):
+            stats["events"] = 0
+    """
+    assert lint(good, path=CORE) == []
+    # outside core/obs the pass is silent (scratch dicts, serving layer)
+    assert lint(bad, path=SRC) == []
+
+
+def test_schema_checks_update_kwargs_and_dict_literals():
+    bad = """
+        def finalize(stats):
+            stats.update(zzz_bogus_key=1.0)
+    """
+    assert rules_of(lint(bad, path=CORE)) == ["schema/unregistered-stats-key"]
+    bad_literal = """
+        def build(result):
+            result.stats = {"zzz_bogus_key": 1.0}
+    """
+    assert rules_of(lint(bad_literal, path=CORE)) == ["schema/unregistered-stats-key"]
+
+
+def test_schema_variable_keys_are_map_data_not_schema():
+    good = """
+        def tally(stats, name):
+            stats[name] = 1.0
+    """
+    assert lint(good, path=CORE) == []
+
+
 # ------------------------------------------------- suppressions + baseline
 
 
@@ -415,16 +742,55 @@ def test_suppression_pass_prefix_matches_all_pass_rules():
 
 
 def test_suppression_for_wrong_rule_does_not_silence():
+    # the units finding survives, and the suppression audit flags the
+    # det/ comment as silencing nothing on its line
     src = """
         def slack(deadline_ms, payload_bytes):
             return deadline_ms + payload_bytes  # lint: ok[det/wall-clock]
     """
-    assert rules_of(lint(src)) == ["units/mixed-units"]
+    assert rules_of(lint(src)) == ["lint/unused-suppression", "units/mixed-units"]
+
+
+def test_unknown_rule_in_suppression_is_a_finding():
+    src = """
+        def f(x):
+            return x  # lint: ok[bogus/no-such-rule]
+    """
+    found = lint(src, rule="lint/unknown-rule")
+    assert len(found) == 1
+    assert "bogus/no-such-rule" in found[0].message
+
+
+def test_unused_suppression_is_a_finding():
+    src = """
+        def f(a_ms, b_ms):
+            return a_ms + b_ms  # lint: ok[units/mixed-units]
+    """
+    assert rules_of(lint(src)) == ["lint/unused-suppression"]
+
+
+def test_used_suppressions_in_frozen_reference_are_not_flagged():
+    """Positive control: reference.py's shipped suppressions still match
+    live findings, so the audit stays silent on the real tree file."""
+    path = os.path.join(REPO, "src", "repro", "core", "reference.py")
+    with open(path, encoding="utf-8") as fh:
+        source = fh.read()
+    assert "lint: ok[" in source  # the control is meaningful
+    mod = parse_module("src/repro/core/reference.py", source)
+    assert run_passes([mod]) == []
+
+
+def test_meta_rules_cannot_be_suppressed():
+    src = """
+        def f(a_ms, b_ms):
+            return a_ms + b_ms  # lint: ok[units/mixed-units]  # lint: ok[lint/unused-suppression]
+    """
+    assert "lint/unused-suppression" in rules_of(lint(src))
 
 
 def test_every_rule_has_a_description():
     rules = all_rules()
-    assert len(rules) == 12
+    assert len(rules) == 19
     for rule, desc in rules.items():
         assert "/" in rule and desc
 
@@ -443,6 +809,116 @@ def test_baseline_filters_fingerprints(tmp_path):
     ))
     known = load_baseline(str(base))
     assert ("units/mixed-units", "src/x.py", 3) in known
+
+
+# ------------------------------------------------------- autofix + SARIF
+
+
+FIXABLE_SRC = """\
+def order(names, acc=[]):
+    pending = set(names)
+    for n in pending:
+        acc.append(n)
+    return acc
+"""
+
+
+def test_autofix_rewrites_and_is_idempotent():
+    from repro.analysis.fix import FIXABLE_RULES, apply_fixes
+
+    mod = parse_module(CORE, FIXABLE_SRC)
+    first = run_passes([mod])
+    assert sorted({f.rule for f in first}) == [
+        "api/mutable-default", "det/set-iteration",
+    ]
+    fixed = apply_fixes([mod], first)[CORE]
+    assert "sorted(pending)" in fixed
+    assert "acc=None" in fixed and "if acc is None:" in fixed
+
+    mod2 = parse_module(CORE, fixed)
+    second = run_passes([mod2])
+    assert [f for f in second if f.rule in FIXABLE_RULES] == []
+    # --fix twice is a no-op: nothing left to rewrite
+    assert apply_fixes([mod2], second) == {}
+
+
+def test_autofix_only_touches_flagged_sites():
+    from repro.analysis.fix import apply_fixes
+
+    src = """\
+def order(names, keep):
+    for n in sorted(set(names)):
+        keep.append(n)
+    return keep
+"""
+    mod = parse_module(CORE, src)
+    findings = run_passes([mod])
+    assert findings == []
+    assert apply_fixes([mod], findings) == {}
+
+
+def test_sarif_payload_shape():
+    from repro.analysis.sarif import SARIF_VERSION, sarif_payload
+
+    mod = parse_module(CORE, "def f(t_ms, n_bytes):\n    return t_ms + n_bytes\n")
+    findings = run_passes([mod])
+    assert findings
+    doc = sarif_payload(findings)
+    assert doc["version"] == SARIF_VERSION == "2.1.0"
+    assert doc["$schema"].endswith("sarif-2.1.0.json")
+    run = doc["runs"][0]
+    driver = run["tool"]["driver"]
+    assert driver["name"] == "repro.analysis"
+    rule_ids = [r["id"] for r in driver["rules"]]
+    assert rule_ids == sorted(all_rules())
+    for res in run["results"]:
+        # ruleIndex must agree with the driver rule table
+        assert rule_ids[res["ruleIndex"]] == res["ruleId"]
+        assert res["level"] == "error"
+        loc = res["locations"][0]["physicalLocation"]
+        assert loc["artifactLocation"]["uriBaseId"] == "%SRCROOT%"
+        assert loc["region"]["startLine"] >= 1
+        assert loc["region"]["startColumn"] >= 1
+        fp = res["partialFingerprints"]["reproAnalysisFingerprint/v1"]
+        assert fp == f"{res['ruleId']}:{CORE}:{loc['region']['startLine']}"
+    # round-trips through JSON (what --sarif writes)
+    assert json.loads(json.dumps(doc)) == doc
+
+
+@pytest.mark.slow
+def test_cli_fix_and_sarif(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    target = tmp_path / "src" / "repro" / "core" / "dirty.py"
+    target.parent.mkdir(parents=True)
+    target.write_text(FIXABLE_SRC)
+    sarif_out = tmp_path / "out.sarif"
+
+    first = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--sarif", str(sarif_out),
+         str(target)],
+        cwd=REPO, env=env, capture_output=True, text=True,
+    )
+    assert first.returncode == 1
+    doc = json.loads(sarif_out.read_text())
+    assert {r["ruleId"] for r in doc["runs"][0]["results"]} == {
+        "api/mutable-default", "det/set-iteration",
+    }
+
+    fix = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--fix", str(target)],
+        cwd=REPO, env=env, capture_output=True, text=True,
+    )
+    # the rewrite clears every finding, so the re-lint exits clean
+    assert fix.returncode == 0, fix.stdout + fix.stderr
+    assert "fixed:" in fix.stderr
+    assert "sorted(pending)" in target.read_text()
+
+    again = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--fix", str(target)],
+        cwd=REPO, env=env, capture_output=True, text=True,
+    )
+    assert again.returncode == 0
+    assert "fixed:" not in again.stderr  # idempotent: no second rewrite
 
 
 @pytest.mark.slow
